@@ -1,0 +1,58 @@
+"""Roofline arithmetic for the TPU v5e target.
+
+The three terms (seconds) for one compiled step on an N-chip mesh:
+
+  compute_s    = HLO_FLOPs / (chips * PEAK_FLOPS)
+  memory_s     = HLO_bytes / (chips * HBM_BW)
+  collective_s = collective_bytes / (chips * ICI_BW)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device program ×
+device count is already folded in by the dry-run, which records per-device
+numbers — pass per-device values with chips=1, or totals with the mesh
+size). ``collective_bytes`` is parsed from the post-SPMD HLO by
+``repro.launch.dryrun.collective_bytes``.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link claimed)
+
+
+def terms(*, flops: float, bytes_accessed: float, collective_bytes: float,
+          n_devices: int) -> dict:
+    compute_s = flops / (n_devices * PEAK_FLOPS)
+    memory_s = bytes_accessed / (n_devices * HBM_BW)
+    collective_s = collective_bytes / (n_devices * ICI_BW)
+    bottleneck = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    step_s = max(compute_s, memory_s, collective_s)
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "step_s": step_s,
+        # fraction of roofline the *compute* term occupies — the score:
+        # 1.0 means the step is pure MXU with nothing else dominant.
+        "roofline_fraction": compute_s / step_s if step_s > 0 else 0.0,
+    }
+
+
+def model_flops(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) for a train step;
+    2·N·D for inference-only steps (pass the matching factor)."""
+    return 6.0 * n_params_active * tokens
+
+
+def per_device(rec: dict) -> dict:
+    """Extract per-device roofline inputs from a dry-run JSON record.
+    cost_analysis FLOPs/bytes are per-device for SPMD programs; so is the
+    parsed per-device HLO collective footprint — use chips=1."""
+    return {
+        "flops": rec["cost"]["flops"],
+        "bytes_accessed": rec["cost"]["bytes_accessed"],
+        "collective_bytes": rec["collectives"]["total_bytes"],
+        "n_devices": 1,
+    }

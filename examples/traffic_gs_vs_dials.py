@@ -1,0 +1,63 @@
+"""Paper Figure 3 in miniature: train the 2x2 traffic grid with
+(a) the global simulator, (b) DIALS, (c) untrained-DIALS, and compare
+final returns and wall time — the paper's three-way comparison on one CPU.
+
+Run:  PYTHONPATH=src python examples/traffic_gs_vs_dials.py [--rounds N]
+"""
+import argparse
+import time
+
+import jax
+
+from repro.core import dials, influence
+from repro.envs import traffic
+from repro.marl import policy, ppo, runner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--inner", type=int, default=20)
+    args = ap.parse_args()
+
+    env_cfg = traffic.TrafficConfig(n=2, horizon=32)
+    info = env_cfg.info()
+    pc = policy.PolicyConfig(obs_dim=info.obs_dim,
+                             n_actions=info.n_actions, hidden=(64, 64))
+    ac = influence.AIPConfig(in_dim=info.alsh_dim,
+                             n_sources=info.n_influence, kind="fnn",
+                             hidden=(32, 32), epochs=10, batch=64, lr=1e-3)
+    ppo_cfg = ppo.PPOConfig()
+    results = {}
+
+    for untrained in (False, True):
+        name = "untrained-DIALS" if untrained else "DIALS"
+        cfg = dials.DIALSConfig(
+            outer_rounds=args.rounds, aip_refresh=args.inner,
+            collect_envs=8, collect_steps=64, n_envs=8, rollout_steps=16,
+            untrained=untrained, eval_episodes=8)
+        t0 = time.time()
+        _, hist = dials.DIALSTrainer(
+            traffic, env_cfg, pc, ac, ppo_cfg, cfg).run(jax.random.PRNGKey(0))
+        results[name] = (hist[-1]["gs_return"], time.time() - t0)
+
+    # GS baseline: the same number of PPO iterations, on the global sim
+    init_fn, train_fn, eval_fn = runner.make_gs_trainer(
+        traffic, env_cfg, pc, ppo_cfg,
+        runner.RunConfig(n_envs=8, rollout_steps=16))
+    state = init_fn(jax.random.PRNGKey(0))
+    t0 = time.time()
+    for _ in range(args.rounds * args.inner):
+        state, _ = train_fn(state)
+    ret = float(eval_fn(state["params"], jax.random.PRNGKey(1), episodes=8))
+    results["GS"] = (ret, time.time() - t0)
+
+    print(f"\n{'simulator':<18}{'final GS return':>16}{'wall s':>10}")
+    for name, (r, w) in results.items():
+        print(f"{name:<18}{r:>16.4f}{w:>10.1f}")
+    print("\nThe paper's claims in miniature: DIALS ≈ or > GS return; "
+          "untrained-DIALS trails (learned influence matters).")
+
+
+if __name__ == "__main__":
+    main()

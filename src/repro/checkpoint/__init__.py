@@ -1,0 +1,3 @@
+"""Sharding-aware checkpointing: atomic save, integrity manifest, rotation,
+async writes, restore-with-reshard for elastic restarts."""
+from repro.checkpoint import ckpt, manager  # noqa: F401

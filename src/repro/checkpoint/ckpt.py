@@ -1,0 +1,110 @@
+"""Pytree ↔ disk serialization with an integrity manifest.
+
+Layout: one ``.npy`` per leaf (path-encoded filename) + ``manifest.json``
+holding the treedef, shapes, dtypes, per-file sha256 and the step. A
+checkpoint is valid iff the manifest exists and every digest matches —
+half-written checkpoints (killed node) are detected and skipped by the
+manager. Restore accepts a sharding tree so a checkpoint written on one
+mesh can be loaded onto another (elastic restart).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+
+MANIFEST = "manifest.json"
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "__".join(parts) or "leaf"
+
+
+def _sha256(fn: str) -> str:
+    h = hashlib.sha256()
+    with open(fn, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save(directory: str, tree, *, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(directory, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    entries = []
+    for path, leaf in leaves:
+        name = _leaf_name(path) + ".npy"
+        arr = np.asarray(jax.device_get(leaf))
+        store = arr
+        if arr.dtype.kind not in "biufc":
+            # ml_dtypes (bf16/fp8) aren't native npy dtypes — store raw
+            # bits as a same-width uint; the manifest keeps the true dtype.
+            store = arr.view(f"u{arr.dtype.itemsize}")
+        np.save(os.path.join(directory, name), store)
+        entries.append({
+            "name": name,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "sha256": _sha256(os.path.join(directory, name)),
+        })
+    manifest = {"step": step, "leaves": entries, "extra": extra or {}}
+    with open(os.path.join(directory, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def is_valid(directory: str) -> bool:
+    mf = os.path.join(directory, MANIFEST)
+    if not os.path.exists(mf):
+        return False
+    try:
+        manifest = json.load(open(mf))
+        for e in manifest["leaves"]:
+            fn = os.path.join(directory, e["name"])
+            if not os.path.exists(fn) or _sha256(fn) != e["sha256"]:
+                return False
+        return True
+    except (json.JSONDecodeError, KeyError, OSError):
+        return False
+
+
+def restore(directory: str, target_tree, *, shardings=None):
+    """Restore into the structure of ``target_tree`` (arrays or
+    ShapeDtypeStructs). ``shardings``: optional parallel tree of
+    NamedShardings — enables cross-mesh (elastic) restore."""
+    manifest = json.load(open(os.path.join(directory, MANIFEST)))
+    dtypes = {e["name"]: e["dtype"] for e in manifest["leaves"]}
+    leaves = jax.tree_util.tree_flatten_with_path(target_tree)
+    paths, treedef = leaves[0], leaves[1]
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else [None] * len(paths))
+    out = []
+    for (path, leaf), sh in zip(paths, shard_leaves):
+        name = _leaf_name(path) + ".npy"
+        arr = np.load(os.path.join(directory, name))
+        true_dt = dtypes.get(name)
+        if true_dt is not None and arr.dtype.kind == "u" \
+                and true_dt != str(arr.dtype):
+            import ml_dtypes  # noqa: F401  (registers bf16/fp8 dtypes)
+            arr = arr.view(np.dtype(true_dt))
+        if not hasattr(leaf, "shape"):        # python scalar leaf (step/round)
+            out.append(type(leaf)(arr))
+            continue
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{name}: ckpt {arr.shape} vs target {leaf.shape}"
+        if sh is not None:
+            out.append(jax.device_put(arr.astype(leaf.dtype), sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree.unflatten(treedef, out), manifest["step"]

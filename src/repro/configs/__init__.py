@@ -1,0 +1,2 @@
+"""Architecture configs (assigned pool) + input shapes + registry."""
+from repro.configs import registry, shapes  # noqa: F401

@@ -1,0 +1,90 @@
+"""Architecture registry: ``get(arch_id, reduced=...)`` -> ArchSpec, plus
+``input_specs`` producing ShapeDtypeStruct stand-ins for the dry-run and
+concrete batches for smoke tests/examples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import shapes as shapes_mod
+from repro.configs import (dbrx_132b, gemma2_9b, granite_moe_1b,
+                           llama32_vision_90b, mamba2_780m, qwen1_5_32b,
+                           tinyllama_1_1b, whisper_tiny, yi_34b,
+                           zamba2_1_2b)
+
+ARCHS = {
+    "yi-34b": yi_34b.make,
+    "gemma2-9b": gemma2_9b.make,
+    "tinyllama-1.1b": tinyllama_1_1b.make,
+    "qwen1.5-32b": qwen1_5_32b.make,
+    "zamba2-1.2b": zamba2_1_2b.make,
+    "granite-moe-1b-a400m": granite_moe_1b.make,
+    "dbrx-132b": dbrx_132b.make,
+    "whisper-tiny": whisper_tiny.make,
+    "llama-3.2-vision-90b": llama32_vision_90b.make,
+    "mamba2-780m": mamba2_780m.make,
+}
+
+
+def get(arch_id: str, *, reduced: bool = False):
+    return ARCHS[arch_id](reduced=reduced)
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+def _vocab(spec):
+    cfg = spec.cfg.decoder if spec.kind == "encdec" else spec.cfg
+    return cfg.vocab
+
+
+def cell_supported(spec, shape: shapes_mod.Shape) -> tuple:
+    """(supported, reason) — the brief's skip rules."""
+    if shape.name == "long_500k" and not spec.sub_quadratic:
+        return False, "full quadratic attention at 524k context"
+    return True, ""
+
+
+def input_specs(spec, shape: shapes_mod.Shape):
+    """ShapeDtypeStruct stand-ins for every model input of the given shape
+    cell (weak-type-correct, shardable, no allocation). For decode kinds
+    this is the (token, index) pair — caches are built separately."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"token": jax.ShapeDtypeStruct((b, 1), i32),
+                 "index": jax.ShapeDtypeStruct((), i32)}
+    if spec.kind == "encdec" and shape.kind != "decode":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, spec.n_frames, spec.cfg.d_model), jnp.bfloat16)
+    if spec.kind == "vlm" and shape.kind != "decode":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (b, spec.n_patches, spec.vision_dim), jnp.bfloat16)
+    return batch
+
+
+def concrete_inputs(key, spec, shape: shapes_mod.Shape):
+    """Small concrete batches for smoke tests (reduced shapes only)."""
+    from repro.data import synthetic
+    b, s = shape.global_batch, shape.seq_len
+    vocab = _vocab(spec)
+    if shape.kind == "train":
+        batch = synthetic.lm_batch(key, b, s, vocab)
+    elif shape.kind == "prefill":
+        batch = {"tokens": synthetic.lm_batch(key, b, s, vocab)["tokens"]}
+    else:
+        batch = {"token": jnp.zeros((b, 1), jnp.int32),
+                 "index": jnp.zeros((), jnp.int32)}
+    if spec.kind == "encdec" and shape.kind != "decode":
+        batch["frames"] = synthetic.frames(key, b, spec.n_frames,
+                                           spec.cfg.d_model)
+    if spec.kind == "vlm" and shape.kind != "decode":
+        batch["patches"] = synthetic.patches(key, b, spec.n_patches,
+                                             spec.vision_dim)
+    return batch

@@ -1,0 +1,156 @@
+"""Algorithm 1 — MARL with Distributed Influence-Augmented Local Simulators.
+
+The orchestrator alternates:
+  1. collect per-agent (ALSH, u) datasets from the GS under the current
+     joint policy (Algorithm 2; ``repro.core.gs``),
+  2. train all AIPs in parallel — one vmapped update (Section 3.2),
+  3. run F inner steps of IALS rollouts + PPO for every agent in parallel
+     (Algorithm 3; ``repro.core.ials``) with the AIPs FROZEN,
+until the step budget is exhausted. ``F`` (``aip_refresh``) is the paper's
+central hyperparameter: infrequent refresh keeps each agent's local
+dynamics stationary (Section 4.3), and Lemma 2/Theorem 1 bound the cost of
+the staleness.
+
+Production hooks: periodic GS evaluation, checkpoint/restart via
+``CheckpointManager``, bounded-staleness AIP refresh (straggler
+mitigation — late agents keep their previous AIP, which DIALS tolerates by
+design), and the ``untrained`` ablation (the paper's untrained-DIALS
+baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import gs as gs_mod
+from repro.core import ials as ials_mod
+from repro.core import influence
+from repro.distributed import fault
+from repro.marl import policy as policy_mod
+from repro.marl import ppo as ppo_mod
+from repro.marl import runner as runner_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class DIALSConfig:
+    aip_refresh: int = 50          # F, in inner train iterations
+    outer_rounds: int = 4
+    collect_envs: int = 8
+    collect_steps: int = 128       # per env -> dataset size = envs*steps
+    untrained: bool = False        # paper's untrained-DIALS ablation
+    eval_episodes: int = 8
+    n_envs: int = 16
+    rollout_steps: int = 16
+    max_aip_staleness: int = 2     # rounds; straggler tolerance
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+
+
+class DIALSTrainer:
+    """Python-level orchestrator; every inner piece is a jitted program."""
+
+    def __init__(self, env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                 aip_cfg: influence.AIPConfig, ppo_cfg: ppo_mod.PPOConfig,
+                 cfg: DIALSConfig):
+        self.env_mod, self.env_cfg = env_mod, env_cfg
+        self.policy_cfg, self.aip_cfg = policy_cfg, aip_cfg
+        self.ppo_cfg, self.cfg = ppo_cfg, cfg
+        self.info = env_cfg.info()
+
+        self.collect = gs_mod.make_collector(
+            env_mod, env_cfg, policy_cfg,
+            n_envs=cfg.collect_envs, steps=cfg.collect_steps)
+        self.ials_init, self.ials_train = ials_mod.make_ials_trainer(
+            env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg,
+            n_envs=cfg.n_envs, rollout_steps=cfg.rollout_steps)
+        _, _, self.gs_eval = runner_mod.make_gs_trainer(
+            env_mod, env_cfg, policy_cfg, ppo_cfg,
+            runner_mod.RunConfig(n_envs=cfg.n_envs,
+                                 rollout_steps=cfg.rollout_steps))
+        self.train_aips = jax.jit(jax.vmap(
+            lambda p, d, k: influence.train_aip(p, d, k, aip_cfg)))
+        self.eval_aips = jax.jit(jax.vmap(
+            lambda p, d: influence.eval_ce(p, d, aip_cfg)))
+        self.manager = (CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
+                        if cfg.ckpt_dir else None)
+
+    # -- state --------------------------------------------------------------
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        state = self.ials_init(k1)
+        aip_params = jax.vmap(
+            lambda k: influence.aip_init(k, self.aip_cfg))(
+            jax.random.split(k2, self.info.n_agents))
+        return {"ials": state, "aips": aip_params,
+                "round": 0, "key": key}
+
+    def restore_or_init(self, key):
+        state = self.init(key)
+        if self.manager is not None:
+            tree, step = self.manager.restore_latest(
+                jax.tree.map(
+                    lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
+                               if hasattr(x, "shape") else x), state))
+            if tree is not None:
+                tree["round"] = int(step)
+                return tree
+        return state
+
+    # -- Algorithm 1 --------------------------------------------------------
+    def run(self, key, *, log: Optional[Callable] = None,
+            straggler_mask: Optional[Callable] = None):
+        """Runs ``outer_rounds`` rounds of (collect → AIP train → F inner
+        steps). Returns (state, history). ``straggler_mask(round) ->
+        (N,) {0,1}`` simulates late shards (bounded-staleness refresh)."""
+        cfg = self.cfg
+        state = self.restore_or_init(key)
+        history = []
+        t_start = time.time()
+        for rnd in range(state["round"], cfg.outer_rounds):
+            key = jax.random.fold_in(state["key"], rnd)
+            kc, kt, ke = jax.random.split(key, 3)
+
+            # (1) Algorithm 2: datasets from the GS
+            data = self.collect(state["ials"]["params"], kc)
+
+            # (2) parallel AIP training (skipped for untrained-DIALS)
+            ce_before = self.eval_aips(state["aips"], data)
+            if not cfg.untrained:
+                new_aips, _ = self.train_aips(
+                    state["aips"], data,
+                    jax.random.split(kt, self.info.n_agents))
+                if straggler_mask is not None:
+                    mask = jnp.asarray(straggler_mask(rnd), jnp.float32)
+                    new_aips = fault.masked_tree_update(
+                        state["aips"], new_aips, mask)
+                state["aips"] = new_aips
+            ce_after = self.eval_aips(state["aips"], data)
+
+            # (3) F inner IALS+PPO steps, AIPs frozen
+            metrics = None
+            for _ in range(cfg.aip_refresh):
+                state["ials"], metrics = self.ials_train(
+                    state["ials"], state["aips"])
+
+            ret = self.gs_eval(state["ials"]["params"], ke,
+                               episodes=cfg.eval_episodes)
+            rec = {"round": rnd,
+                   "gs_return": float(ret),
+                   "ials_reward": float(metrics["reward"]),
+                   "aip_ce_before": float(ce_before.mean()),
+                   "aip_ce_after": float(ce_after.mean()),
+                   "wall_s": time.time() - t_start}
+            history.append(rec)
+            if log:
+                log(rec)
+            state["round"] = rnd + 1
+            if self.manager is not None:
+                self.manager.save(rnd + 1, state)
+        if self.manager is not None:
+            self.manager.wait()
+        return state, history

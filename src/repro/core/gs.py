@@ -1,0 +1,70 @@
+"""Algorithm 2 — collect per-agent influence datasets from the GS.
+
+Rolls the global simulator under the current joint policy and records, for
+every agent i and step t, the ALSH feature (local obs x_i^t ++ one-hot of
+a_i^{t-1}) and the realized influence sources u_i^t. One jitted scan; the
+output is already shaped (N, S, T, ...) for the vmapped AIP trainer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.marl import policy as policy_mod
+
+
+def make_collector(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                   *, n_envs: int, steps: int):
+    info = env_cfg.info()
+    n_agents = info.n_agents
+
+    v_gs_init = jax.vmap(lambda k: env_mod.gs_init(k, env_cfg))
+    v_gs_step = jax.vmap(lambda s, a, k: env_mod.gs_step(s, a, k, env_cfg))
+    v_gs_obs = jax.vmap(lambda s: env_mod.gs_obs(s, env_cfg))
+    apply_agents = jax.vmap(
+        lambda p, o, h: policy_mod.policy_apply(p, o, h, policy_cfg),
+        in_axes=(0, 1, 1), out_axes=(1, 1, 1))
+
+    def collect(policy_params, key):
+        """Returns dataset dict with leaves (N, n_envs, steps, ...):
+        feats, u, resets."""
+        ke, kr = jax.random.split(key)
+        env = v_gs_init(jax.random.split(ke, n_envs))
+        obs = v_gs_obs(env)
+        h = policy_mod.initial_hidden(policy_cfg, n_envs, n_agents)
+        prev_a = jnp.zeros((n_envs, n_agents), jnp.int32)
+        prev_done = jnp.ones((n_envs,), bool)     # episode starts fresh
+
+        def step(carry, k):
+            env, obs, h, prev_a, prev_done = carry
+            k_act, k_env, k_reset = jax.random.split(k, 3)
+            feat = jnp.concatenate(
+                [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
+            logits, _, h2 = apply_agents(policy_params, obs, h)
+            action, _ = policy_mod.sample_action(k_act, logits)
+            env2, obs2, _rew, u, done = v_gs_step(
+                env, action, jax.random.split(k_env, n_envs))
+            fresh = v_gs_init(jax.random.split(k_reset, n_envs))
+            sel = lambda f, c: jnp.where(
+                done.reshape((-1,) + (1,) * (c.ndim - 1)), f, c)
+            env3 = jax.tree.map(sel, fresh, env2)
+            obs3 = jnp.where(done[:, None, None], v_gs_obs(env3), obs2)
+            h3 = jnp.where(done[:, None, None], jnp.zeros_like(h2), h2)
+            prev3 = jnp.where(done[:, None], jnp.zeros_like(action), action)
+            # reset flag marks "new episode starts HERE" (before this feat)
+            rec = {"feats": feat, "u": u,
+                   "resets": jnp.broadcast_to(prev_done[:, None],
+                                              (n_envs, n_agents))
+                   .astype(jnp.float32)}
+            return (env3, obs3, h3, prev3, done), rec
+
+        _, recs = jax.lax.scan(step, (env, obs, h, prev_a, prev_done),
+                               jax.random.split(kr, steps))
+        # (T, E, N, ...) -> (N, E, T, ...)
+        def rearrange(x):
+            return jnp.moveaxis(x, (0, 1, 2), (2, 1, 0))
+        return {"feats": rearrange(recs["feats"]),
+                "u": rearrange(recs["u"]),
+                "resets": rearrange(recs["resets"])}
+
+    return jax.jit(collect)

@@ -1,0 +1,143 @@
+"""Algorithm 3 — influence-augmented local simulators, batched.
+
+Each agent trains on its OWN local simulator whose inflow/coupling
+variables are sampled from its AIP every step: u ~ Î_θi(·|l_i^t), then
+x^{t+1} ~ T̂_i(·|x, a, u). There is NO cross-agent interaction inside this
+loop — N agents × E envs roll and update as one embarrassingly-parallel
+batched program (vmap over agents; shard the agent axis over the mesh and
+between AIP refreshes the program has zero cross-shard collectives, which
+is the paper's runtime-stays-constant claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import influence
+from repro.marl import gae as gae_mod
+from repro.marl import policy as policy_mod
+from repro.marl import ppo as ppo_mod
+from repro.optim import adamw
+
+
+def make_ials_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                      aip_cfg: influence.AIPConfig,
+                      ppo_cfg: ppo_mod.PPOConfig, *, n_envs: int,
+                      rollout_steps: int):
+    info = env_cfg.info()
+    n_agents = info.n_agents
+
+    # local sims batched over (E, N)
+    v_ls_init = jax.vmap(jax.vmap(lambda k: env_mod.ls_init(k, env_cfg)))
+    v_ls_step = jax.vmap(jax.vmap(
+        lambda l, a, u, k: env_mod.ls_step(l, a, u, k, env_cfg)))
+    v_ls_obs = jax.vmap(jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg)))
+
+    apply_agents = jax.vmap(
+        lambda p, o, h: policy_mod.policy_apply(p, o, h, policy_cfg),
+        in_axes=(0, 1, 1), out_axes=(1, 1, 1))
+    aip_agents = jax.vmap(
+        lambda p, f, h: influence.aip_apply(p, f, h, aip_cfg),
+        in_axes=(0, 1, 1), out_axes=(1, 1))
+
+    def init_fn(key):
+        kp, ke, kr = jax.random.split(key, 3)
+        params = jax.vmap(lambda k: policy_mod.policy_init(k, policy_cfg))(
+            jax.random.split(kp, n_agents))
+        opt = jax.vmap(adamw.init)(params)
+        locals_ = v_ls_init(
+            jax.random.split(ke, n_envs * n_agents).reshape(
+                n_envs, n_agents, 2))
+        return {
+            "params": params, "opt": opt, "locals": locals_,
+            "obs": v_ls_obs(locals_),
+            "h": policy_mod.initial_hidden(policy_cfg, n_envs, n_agents),
+            "aip_h": influence.initial_hidden(aip_cfg, n_envs, n_agents),
+            "prev_a": jnp.zeros((n_envs, n_agents), jnp.int32),
+            "key": kr, "iter": jnp.zeros((), jnp.int32),
+        }
+
+    def _rollout(state, aip_params):
+        def step(carry, key):
+            locals_, obs, h, aip_h, prev_a, prev_done = carry
+            k_act, k_u, k_env, k_reset = jax.random.split(key, 4)
+
+            # AIP consumes (x_t, a_{t-1}) and proposes u_t  (Alg. 3 line 8)
+            feat = jnp.concatenate(
+                [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
+            u_logits, aip_h2 = aip_agents(aip_params, feat, aip_h)
+            u = influence.sample_sources(k_u, u_logits)      # (E, N, M)
+
+            logits, value, h2 = apply_agents(state["params"], obs, h)
+            action, logp = policy_mod.sample_action(k_act, logits)
+
+            locals2, obs2, rew, done = v_ls_step(
+                locals_, action, u,
+                jax.random.split(k_env, n_envs * n_agents).reshape(
+                    n_envs, n_agents, 2))                    # done (E, N)
+
+            fresh = v_ls_init(
+                jax.random.split(k_reset, n_envs * n_agents).reshape(
+                    n_envs, n_agents, 2))
+            sel = lambda f, c: jnp.where(
+                done.reshape(done.shape + (1,) * (c.ndim - 2)), f, c)
+            locals3 = jax.tree.map(sel, fresh, locals2)
+            obs3 = jnp.where(done[..., None], v_ls_obs(locals3), obs2)
+            h3 = jnp.where(done[..., None], jnp.zeros_like(h2), h2)
+            aip_h3 = jnp.where(done[..., None], jnp.zeros_like(aip_h2),
+                               aip_h2)
+            prev3 = jnp.where(done, jnp.zeros_like(action), action)
+
+            tr = {"obs": obs, "action": action, "logp": logp, "value": value,
+                  "reward": rew, "done": done, "h_pre": h,
+                  "reset_pre": prev_done}
+            return (locals3, obs3, h3, aip_h3, prev3, done), tr
+
+        carry0 = (state["locals"], state["obs"], state["h"], state["aip_h"],
+                  state["prev_a"], jnp.zeros((n_envs, n_agents), bool))
+        carry, traj = jax.lax.scan(
+            step, carry0, jax.random.split(state["key"], rollout_steps))
+        return carry, traj
+
+    def train_fn(state, aip_params):
+        """One DIALS inner iteration: rollout on the IALS + PPO for every
+        agent. ``aip_params`` stacked (N, ...) — frozen here (Alg. 1 line 9)."""
+        k_iter = jax.random.fold_in(state["key"], state["iter"])
+        state = {**state, "key": k_iter}
+        carry, traj = _rollout(state, aip_params)
+        locals_, obs, h, aip_h, prev_a, _ = carry
+
+        _, last_value, _ = apply_agents(state["params"], obs, h)  # (E, N)
+
+        def nea(x):                            # (T,E,N) -> (E,N,T)
+            return jnp.moveaxis(x, (0, 1, 2), (2, 0, 1))
+        adv, ret = gae_mod.gae(nea(traj["reward"]), nea(traj["value"]),
+                               nea(traj["done"]), last_value,
+                               gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
+
+        def net(x):                            # (T,E,N,...) -> (N,E,T,...)
+            return jnp.moveaxis(x, (0, 1, 2), (2, 1, 0))
+        batch = {
+            "obs": net(traj["obs"]),
+            "actions": net(traj["action"]).astype(jnp.int32),
+            "logp_old": net(traj["logp"]),
+            "values_old": net(traj["value"]),
+            "adv": jnp.swapaxes(adv, 0, 1),
+            "ret": jnp.swapaxes(ret, 0, 1),
+            "resets": net(traj["reset_pre"]).astype(jnp.float32),
+            "h0": jnp.moveaxis(traj["h_pre"][0], 1, 0),
+        }
+        keys = jax.random.split(jax.random.fold_in(k_iter, 1), n_agents)
+        new_params, new_opt, metrics = jax.vmap(
+            lambda p, o, b, k: ppo_mod.ppo_update(p, o, b, k, policy_cfg,
+                                                  ppo_cfg))(
+            state["params"], state["opt"], batch, keys)
+        new_state = {**state, "params": new_params, "opt": new_opt,
+                     "locals": locals_, "obs": obs, "h": h, "aip_h": aip_h,
+                     "prev_a": prev_a, "iter": state["iter"] + 1}
+        return new_state, {**jax.tree.map(jnp.mean, metrics),
+                           "reward": traj["reward"].mean()}
+
+    return init_fn, jax.jit(train_fn)

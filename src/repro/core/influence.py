@@ -1,0 +1,144 @@
+"""Approximate Influence Predictors (AIPs) — Section 3.2 / Appendix E.
+
+The AIP Î_θi(u_i^t | l_i^t) estimates the posterior over the binary
+influence sources given the action-local-state history. Following the
+paper: an FNN head when the current local state d-separates the history
+(traffic), a GRU otherwise (warehouse); M independent Bernoulli heads
+share a representation trunk (Eq. 25); trained with cross-entropy on
+(ALSH, u) pairs collected from the GS (Algorithm 2).
+
+Per-agent AIPs are stacked along a leading agent axis and trained with a
+single vmapped update — N agents' predictors optimize as one batched
+program.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import gru as gru_mod
+from repro.nn import init as initializers
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class AIPConfig:
+    in_dim: int                 # ALSH feature dim: local obs + prev action
+    n_sources: int              # M binary influence sources
+    kind: str = "fnn"           # fnn (traffic) | gru (warehouse)
+    hidden: Tuple[int, ...] = (128, 128)
+    gru_hidden: int = 64
+    lr: float = 1e-4
+    epochs: int = 100
+    batch: int = 128
+
+
+def _dense_init(key, din, dout):
+    return {"w": initializers.orthogonal(jnp.sqrt(2.0))(
+        key, (din, dout), jnp.float32),
+        "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def aip_init(key, cfg: AIPConfig):
+    keys = jax.random.split(key, 5)
+    params = {}
+    din = cfg.in_dim
+    trunk = []
+    for i, hdim in enumerate(cfg.hidden):
+        trunk.append(_dense_init(keys[i], din, hdim))
+        din = hdim
+    params["trunk"] = trunk
+    if cfg.kind == "gru":
+        params["gru"] = gru_mod.gru_init(
+            keys[3], gru_mod.GRUConfig(in_dim=din, hidden=cfg.gru_hidden))
+        din = cfg.gru_hidden
+    params["heads"] = _dense_init(keys[4], din, cfg.n_sources)
+    return params
+
+
+def initial_hidden(cfg: AIPConfig, *batch):
+    return jnp.zeros(tuple(batch) + (cfg.gru_hidden,), jnp.float32)
+
+
+def _trunk(params, x):
+    for p in params["trunk"]:
+        x = jax.nn.relu(_dense(p, x))
+    return x
+
+
+def aip_apply(params, feat, h, cfg: AIPConfig):
+    """One step. feat: (..., F); h: (..., Hg). Returns (logits (..., M), h')."""
+    x = _trunk(params, feat)
+    if cfg.kind == "gru":
+        flat = x.reshape(-1, x.shape[-1])
+        hf = gru_mod.gru_cell(params["gru"], h.reshape(-1, h.shape[-1]), flat)
+        h = hf.reshape(h.shape)
+        x = h
+    return _dense(params["heads"], x), h
+
+
+def aip_sequence(params, feats, h0, resets, cfg: AIPConfig):
+    """feats: (B, T, F) -> logits (B, T, M). resets (B, T) restart the GRU
+    at episode boundaries."""
+    x = _trunk(params, feats)
+    if cfg.kind == "gru":
+        hs, _ = gru_mod.gru_sequence(params["gru"], x, h0, reset_mask=resets)
+        x = hs
+    return _dense(params["heads"], x)
+
+
+def sample_sources(key, logits):
+    """u ~ ∏_m Bernoulli(σ(logit_m)) — Eq. 25 independent heads."""
+    return jax.random.bernoulli(key, jax.nn.sigmoid(logits)) \
+        .astype(jnp.float32)
+
+
+def bce_loss(params, feats, targets, resets, cfg: AIPConfig):
+    """Expected cross-entropy (Section 3.2). feats (B,T,F), targets (B,T,M)."""
+    h0 = initial_hidden(cfg, feats.shape[0])
+    logits = aip_sequence(params, feats, h0, resets, cfg)
+    ce = jnp.maximum(logits, 0) - logits * targets + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return ce.mean()
+
+
+def train_aip(params, dataset, key, cfg: AIPConfig):
+    """Minibatch Adam on BCE. dataset: {feats (S, T, F), u (S, T, M),
+    resets (S, T)} — S sequences of length T. Returns (params, final_loss)."""
+    opt = adamw.init(params)
+    n_seq = dataset["feats"].shape[0]
+    batch = min(cfg.batch, n_seq)
+    n_mb = max(1, n_seq // batch)
+
+    def one_mb(carry, idx):
+        params, opt = carry
+        fb = jnp.take(dataset["feats"], idx, axis=0)
+        ub = jnp.take(dataset["u"], idx, axis=0)
+        rb = jnp.take(dataset["resets"], idx, axis=0)
+        loss, grads = jax.value_and_grad(bce_loss)(params, fb, ub, rb, cfg)
+        master, opt = adamw.update(
+            grads, opt, cfg.lr, adamw.AdamWConfig(b2=0.999, weight_decay=0.0))
+        params = adamw.cast_like(master, params)
+        return (params, opt), loss
+
+    def one_epoch(carry, ekey):
+        perm = jax.random.permutation(ekey, n_seq)
+        idxs = perm[:n_mb * batch].reshape(n_mb, batch)
+        return jax.lax.scan(one_mb, carry, idxs)
+
+    (params, _), losses = jax.lax.scan(
+        one_epoch, (params, opt), jax.random.split(key, cfg.epochs))
+    return params, losses[-1].mean()
+
+
+def eval_ce(params, dataset, cfg: AIPConfig):
+    """CE of the AIP on held-out GS trajectories (the paper's Fig. 4 metric)."""
+    return bce_loss(params, dataset["feats"], dataset["u"],
+                    dataset["resets"], cfg)

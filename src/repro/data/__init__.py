@@ -1,0 +1,2 @@
+"""Data pipeline: deterministic synthetic sources + sharded device feeding."""
+from repro.data import pipeline, synthetic  # noqa: F401

@@ -1,0 +1,51 @@
+"""Sharded host→device feeding.
+
+On a real multi-host pod each process feeds its addressable shard via
+``jax.make_array_from_process_local_data``; on a single host this reduces
+to ``device_put`` with the global batch sharding. The iterator is
+deterministic in (seed, step) so restarts resume mid-epoch without
+re-reading earlier data (checkpoint stores only the step).
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import synthetic
+from repro.distributed import mesh as mesh_lib
+
+
+def shard_batch(batch, mesh, *, long_context: bool = False):
+    sh = mesh_lib.batch_sharding(mesh, long_context=long_context)
+    def put(x):
+        spec = sh.spec
+        # pad spec to rank
+        full = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(
+                *(list(spec) + [None] * (x.ndim - len(spec)))))
+        return jax.device_put(x, full)
+    return jax.tree.map(put, batch)
+
+
+def lm_iterator(seed: int, batch: int, seq: int, vocab: int,
+                mesh=None, *, start_step: int = 0) -> Iterator[dict]:
+    """Deterministic in (seed, step): restart-safe."""
+    step = start_step
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        b = synthetic.lm_batch(key, batch, seq, vocab)
+        if mesh is not None:
+            b = shard_batch(b, mesh)
+        yield b
+        step += 1
+
+
+def with_extras(it: Iterator[dict], extra_fn: Callable[[int], dict],
+                start_step: int = 0) -> Iterator[dict]:
+    """Attach modality extras (frames/patches) to each LM batch."""
+    step = start_step
+    for b in it:
+        yield {**b, **extra_fn(step)}
+        step += 1

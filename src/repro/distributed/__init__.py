@@ -1,0 +1,2 @@
+"""Distribution layer: logical-axis sharding rules, collectives, fault tolerance."""
+from repro.distributed import collectives, fault, mesh  # noqa: F401

@@ -1,0 +1,84 @@
+"""Fault tolerance: straggler mitigation, bounded-staleness updates,
+elastic resharding.
+
+DIALS gives us an unusually clean fault story: between AIP refreshes the
+per-region simulators are *independent*, so a slow or dead shard only
+delays **its own** region's data — the paper's staleness tolerance
+(Lemma 2 / Theorem 1) is exactly the license to keep training everyone
+else on slightly-stale influence. These utilities implement that:
+
+* :func:`straggler_plan` — deterministic work reassignment for late shards.
+* :func:`masked_tree_update` — bounded-staleness parameter update: take the
+  fresh AIP/grad only for shards that reported in time.
+* :func:`reshard` — elastic scaling: move a checkpointed pytree onto a new
+  mesh (different shape or device count) via resolved shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import mesh as mesh_lib
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StragglerPlan:
+    """Deterministic reassignment: every late shard's work unit is re-run by
+    the healthy shard that (cyclically) follows it, chosen by shard id so
+    all hosts compute the same plan with no coordination."""
+    reassign: Dict[int, int]          # late shard -> healthy shard
+    healthy: Tuple[int, ...]
+
+    def owner(self, work_unit: int) -> int:
+        return self.reassign.get(work_unit, work_unit)
+
+
+def straggler_plan(n_shards: int, late: Sequence[int]) -> StragglerPlan:
+    late_set = set(late)
+    healthy = tuple(i for i in range(n_shards) if i not in late_set)
+    if not healthy:
+        raise RuntimeError("all shards late — cannot build a plan")
+    reassign = {}
+    for j, shard in enumerate(sorted(late_set)):
+        reassign[shard] = healthy[(shard + j) % len(healthy)]
+    return StragglerPlan(reassign=reassign, healthy=healthy)
+
+
+def masked_tree_update(old_tree, new_tree, fresh_mask: jax.Array):
+    """Bounded-staleness update for per-agent stacked params.
+
+    ``fresh_mask`` (N,) of {0,1}: agents whose data/update arrived in time
+    take the new leaf; stale agents keep the old one (the DIALS move).
+    Leaves have leading axis N.
+    """
+    def sel(old, new):
+        m = fresh_mask.reshape((-1,) + (1,) * (old.ndim - 1)).astype(old.dtype)
+        return old * (1 - m) + new * m
+
+    return jax.tree.map(sel, old_tree, new_tree)
+
+
+# ---------------------------------------------------------------------------
+# Elastic resharding
+# ---------------------------------------------------------------------------
+def reshard(tree, spec_tree, new_mesh, *, rules=mesh_lib.TRAIN_RULES,
+            fsdp_axes=()):
+    """Place ``tree`` onto ``new_mesh`` under the resolved shardings —
+    elastic scale-up/down and restart-on-different-topology both reduce to
+    this plus a checkpoint restore."""
+    shardings = mesh_lib.logical_to_sharding(
+        spec_tree, jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree),
+        new_mesh, rules=rules, fsdp_axes=fsdp_axes)
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def heartbeat_mask(report_steps: jax.Array, current_step: int,
+                   max_staleness: int) -> jax.Array:
+    """(N,) last-report step per shard -> {0,1} fresh mask."""
+    return (current_step - report_steps <= max_staleness).astype(jnp.float32)

@@ -1,0 +1,176 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Model code annotates parameters with *logical* axis names
+(``("embed", "mlp")``); this module resolves them against a rule table for
+the current mesh, with two production-grade details:
+
+* **divisibility fallback** — a logical axis only binds to a mesh axis if
+  the dimension size divides the axis size; otherwise it falls back to the
+  next rule (or replication). E.g. ``kv_heads=8`` cannot shard over
+  ``model=16`` as a cache dimension, but the *flattened* projection dim
+  (kv_heads·head_dim) can.
+* **FSDP residual sharding** — after rule application, parameters are
+  additionally sharded over the (pod, data) axes on their largest free
+  dimension (ZeRO-3 style), so per-device parameter + optimizer memory
+  scales down with the full mesh, not just the model axis.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Tuple[Tuple[str, Union[str, Tuple[str, ...], None]], ...]
+
+# Training-time rules. Order matters: first applicable rule wins.
+TRAIN_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("embed", None),
+    ("layers", None),
+    ("seq", None),
+    ("cache_batch", ("pod", "data")),
+    ("cache_seq", None),
+)
+
+# Decode rules (decode_32k). KV caches are the dominant bytes: batch over
+# (pod, data); the cache sequence axis takes the model axis (kv_heads are
+# usually 4–8 and cannot split 16 ways — the divisibility fallback then
+# leaves "model" free, so cache_seq claims it and attention reduces over
+# the sharded key axis with a small psum).
+DECODE_RULES: Rules = (
+    ("batch", ("pod", "data")),
+    ("cache_batch", ("pod", "data")),
+    ("cache_seq", "model"),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("embed", None),
+    ("layers", None),
+    ("seq", None),
+)
+
+# long_500k (global_batch=1): the KV/attention cache sequence axis is the
+# only large axis — shard it over `data`.
+LONG_CONTEXT_RULES: Rules = (
+    ("batch", None),
+    ("cache_batch", None),
+    ("cache_seq", "data"),
+    ("vocab", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("mlp", "model"),
+    ("expert", "model"),
+    ("embed", None),
+    ("layers", None),
+    ("seq", None),
+)
+
+
+def _axis_size(mesh: Mesh, axes: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def resolve_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh, rules: Rules) -> P:
+    """Map one logical-axis tuple to a PartitionSpec, respecting
+    divisibility and never using a mesh axis twice."""
+    used: set = set()
+    out = []
+    rule_map = {}
+    for name, target in rules:
+        rule_map.setdefault(name, target)
+    for dim, name in zip(shape, logical):
+        target = rule_map.get(name) if name else None
+        if target is None:
+            out.append(None)
+            continue
+        taxes = (target,) if isinstance(target, str) else tuple(target)
+        taxes = tuple(a for a in taxes if a in mesh.shape and a not in used)
+        if not taxes or dim % _axis_size(mesh, taxes) != 0:
+            # try single-axis prefixes before giving up
+            ok = None
+            for k in range(len(taxes), 0, -1):
+                sub = taxes[:k]
+                if sub and dim % _axis_size(mesh, sub) == 0:
+                    ok = sub
+                    break
+            taxes = ok or ()
+        if taxes:
+            used.update(taxes)
+            out.append(taxes if len(taxes) > 1 else taxes[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _fsdp_augment(spec: P, shape: Sequence[int], mesh: Mesh,
+                  fsdp_axes: Tuple[str, ...]) -> P:
+    """Shard the largest unsharded dim over the unused fsdp axes."""
+    used = set()
+    for s in spec:
+        if s is None:
+            continue
+        used.update((s,) if isinstance(s, str) else s)
+    free = tuple(a for a in fsdp_axes if a in mesh.shape and a not in used)
+    if not free:
+        return spec
+    size = _axis_size(mesh, free)
+    # largest dim, prefer trailing, must divide
+    best, best_dim = None, 0
+    for i, (dim, s) in enumerate(zip(shape, spec)):
+        if s is None and dim % size == 0 and dim >= best_dim and dim >= size:
+            best, best_dim = i, dim
+    if best is None:
+        return spec
+    new = list(spec)
+    new[best] = free if len(free) > 1 else free[0]
+    return P(*new)
+
+
+def logical_to_sharding(spec_tree, shape_tree, mesh: Mesh, *,
+                        rules: Rules = TRAIN_RULES,
+                        fsdp_axes: Tuple[str, ...] = ()):
+    """Resolve a logical-spec tree (parallel to a params/cache tree whose
+    leaves are arrays or ShapeDtypeStructs) into NamedShardings."""
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
+    def one(logical, leaf):
+        shape = leaf.shape
+        logical = tuple(logical)
+        if len(logical) < len(shape):          # scalar/under-specified
+            logical = logical + (None,) * (len(shape) - len(logical))
+        spec = resolve_spec(logical[:len(shape)], shape, mesh, rules)
+        if fsdp_axes:
+            spec = _fsdp_augment(spec, shape, mesh, fsdp_axes)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, spec_tree, shape_tree,
+                        is_leaf=lambda x: is_spec(x) or x == ())
+
+
+def batch_spec(mesh: Mesh, *, long_context: bool = False) -> P:
+    if long_context:
+        return P(None)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def batch_sharding(mesh: Mesh, **kw) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, **kw))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,9 @@
+"""JAX-native networked multi-agent environments (local-form fPOSGs).
+
+Each env module provides a **global simulator** (GS) and a **local
+simulator** (LS) built from the *same* per-region transition function, so
+the IBA exactness property — LS(x, a, u) == region-restriction of GS when
+u equals the realized influence — holds by construction and is property-
+tested.
+"""
+from repro.envs import base, traffic, warehouse  # noqa: F401

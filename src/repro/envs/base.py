@@ -1,0 +1,38 @@
+"""fPOSG environment interface.
+
+An environment module (traffic, warehouse) exposes two simulator
+namespaces with pure-JAX, jit/vmap-able step functions:
+
+Global simulator (GS)
+    ``gs_init(key, cfg) -> state``
+    ``gs_step(state, actions (N,), key, cfg) ->
+        (state', obs (N, O), rewards (N,), u (N, M), done ())``
+    plus ``gs_locals(state, cfg)`` extracting the per-agent local states
+    (used for dataset collection and the exactness property test).
+
+Local simulator (LS) — single region
+    ``ls_init(key, cfg) -> local``
+    ``ls_step(local, action (), u (M,), key, cfg) ->
+        (local', obs (O,), reward ())``
+
+The influence sources ``u`` are binary vectors (length M): the paper's
+traffic env has M=4 (car entering each incoming lane) and warehouse M=12
+(neighbor robot on each shared item cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvInfo:
+    """Static facts the MARL/DIALS stack needs about an env."""
+    name: str
+    n_agents: int
+    obs_dim: int
+    n_actions: int
+    n_influence: int          # M: number of binary influence sources/agent
+    horizon: int
+    # ALSH feature size fed to the AIP (local state + last action one-hot)
+    alsh_dim: int

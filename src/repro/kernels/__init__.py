@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package has three files:
+  kernel.py -- ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+  ops.py    -- the jit'd public wrapper (dispatch, layout, interpret fallback)
+  ref.py    -- the pure-jnp oracle the kernel is validated against
+
+| kernel          | hot spot                                               |
+|-----------------|--------------------------------------------------------|
+| flash_attention | 32k-prefill quadratic attention (online softmax)       |
+| ssd             | Mamba-2 intra-chunk block (decay . CB^T . X fused)     |
+| gru             | AIP/policy GRU recurrence (fused gates per step)       |
+| gae             | GAE-lambda reverse scan over rollouts                  |
+
+On CPU (this container) the kernels execute with ``interpret=True``; the
+BlockSpecs encode the intended TPU VMEM tiling (MXU-aligned 128-multiples).
+"""
+from repro.kernels import flash_attention, gae, gru, ssd  # noqa: F401

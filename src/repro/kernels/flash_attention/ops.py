@@ -1,0 +1,39 @@
+"""Public flash-attention op: (B, T, H, D) layout, GQA, jit-friendly."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as k_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "sliding_window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    sliding_window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: (B, T, H, D); k, v: (B, T, Hkv, D) -> (B, T, H, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, tq, h, d = q.shape
+    hkv = k.shape[2]
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, tq, d)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * hkv, k.shape[1], d)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * hkv, v.shape[1], d)
+    # GQA index math in the kernel assumes head-major flattening per batch:
+    # row b*h + i maps to kv row b*hkv + i//group, which equals (b*h+i)//group
+    # only when flattened batch-major. Reorder so heads vary fastest.
+    out = k_mod.flash_attention_bhsd(
+        qf, kf, vf, causal=causal, sliding_window=sliding_window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return jnp.moveaxis(out.reshape(b, h, tq, d), 1, 2)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash attention: masked softmax attention with GQA,
+causal / sliding-window masks and logit softcap — delegates to the
+substrate's :func:`repro.nn.attention.attend` (itself oracle-tested against
+decode)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.nn import attention as attn_mod
+
+
+def attention(q, k, v, *, causal: bool = True,
+              sliding_window: Optional[int] = None,
+              softcap: Optional[float] = None):
+    """q: (B, T, H, D); k, v: (B, T, Hkv, D) -> (B, T, H, D)."""
+    return attn_mod.attend(q, k, v, causal=causal,
+                           sliding_window=sliding_window, softcap=softcap)

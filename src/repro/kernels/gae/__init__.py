@@ -1,0 +1,1 @@
+from repro.kernels.gae import kernel, ops, ref  # noqa: F401

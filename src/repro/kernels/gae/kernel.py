@@ -1,0 +1,52 @@
+"""GAE-λ reverse-scan Pallas kernel.
+
+The advantage recursion is strictly sequential in t but embarrassingly
+parallel over the (agents × envs) batch — on TPU that maps to a grid over
+T (reverse-indexed through the BlockSpec index map, so block t reads slice
+T-1-t) with the carry in VMEM scratch and the batch laid out on the
+8×128 VPU lanes. One fused multiply-add per step instead of a scan of
+tiny XLA kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gae_kernel(r_ref, v_ref, nv_ref, d_ref, adv_ref, carry_ref, *,
+                gamma: float, lam: float):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    r, v, nv, d = r_ref[0], v_ref[0], nv_ref[0], d_ref[0]   # (B,)
+    nd = 1.0 - d
+    delta = r + gamma * nv * nd - v
+    adv = delta + gamma * lam * nd * carry_ref[...]
+    carry_ref[...] = adv
+    adv_ref[0] = adv
+
+
+def gae_reverse_scan(rewards, values, next_values, dones, *,
+                     gamma: float, lam: float, interpret: bool = True):
+    """All inputs (T, B) fp32, time-major. Returns advantages (T, B)."""
+    t, b = rewards.shape
+    rev = lambda ti: (t - 1 - ti, 0)       # reverse time through index map
+    spec = pl.BlockSpec((1, b), rev)
+    return pl.pallas_call(
+        functools.partial(_gae_kernel, gamma=gamma, lam=lam),
+        grid=(t,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((t, b), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((b,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(rewards, values, next_values, dones)

@@ -1,0 +1,33 @@
+"""Public GAE op matching repro.marl.gae.gae's contract."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gae import kernel as k_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("gamma", "lam", "interpret"))
+def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
+        lam: float = 0.95, interpret: Optional[bool] = None):
+    """rewards/values/dones: (..., T); last_value: (...,)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    shape = rewards.shape
+    t = shape[-1]
+    flat = lambda x: jnp.moveaxis(
+        x.reshape(-1, t).astype(jnp.float32), 1, 0)       # (T, B)
+    rw, vl, dn = flat(rewards), flat(values), flat(dones)
+    nv = jnp.concatenate(
+        [vl[1:], last_value.reshape(1, -1).astype(jnp.float32)], axis=0)
+    adv = k_mod.gae_reverse_scan(rw, vl, nv, dn, gamma=gamma, lam=lam,
+                                 interpret=interpret)
+    adv = jnp.moveaxis(adv, 0, 1).reshape(shape)
+    return adv, adv + values

@@ -1,0 +1,9 @@
+"""Pure-jnp GAE oracle — the substrate's reverse lax.scan."""
+from __future__ import annotations
+
+from repro.marl import gae as gae_mod
+
+
+def gae(rewards, values, dones, last_value, *, gamma=0.99, lam=0.95):
+    return gae_mod.gae(rewards, values, dones, last_value,
+                       gamma=gamma, lam=lam)

@@ -1,0 +1,1 @@
+from repro.kernels.gru import kernel, ops, ref  # noqa: F401

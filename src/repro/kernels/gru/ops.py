@@ -1,0 +1,41 @@
+"""Public GRU sequence op matching repro.nn.gru.gru_sequence's contract."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gru import kernel as k_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gru_sequence(params, xs, h0=None, *, reset_mask=None,
+                 interpret: Optional[bool] = None):
+    """xs: (B, T, in) -> (hs (B, T, H), h_last (B, H))."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, t, _ = xs.shape
+    hdim = params["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((b, hdim), jnp.float32)
+    # big input matmul outside the kernel (one MXU pass over all steps)
+    gi = (jnp.einsum("bti,ij->btj", xs.astype(jnp.float32),
+                     params["wi"].astype(jnp.float32))
+          + params["bi"].astype(jnp.float32))
+    gi = jnp.moveaxis(gi, 1, 0)                           # (T, B, 3H)
+    if reset_mask is None:
+        resets = jnp.zeros((t, b, 1), jnp.float32)
+    else:
+        resets = jnp.moveaxis(reset_mask, 1, 0)[..., None] \
+            .astype(jnp.float32)
+    hs = k_mod.gru_scan(gi, params["wh"].astype(jnp.float32),
+                        params["bh"].astype(jnp.float32),
+                        h0.astype(jnp.float32), resets, interpret=interpret)
+    hs = jnp.moveaxis(hs, 0, 1).astype(xs.dtype)          # (B, T, H)
+    return hs, hs[:, -1].astype(h0.dtype)

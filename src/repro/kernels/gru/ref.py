@@ -1,0 +1,8 @@
+"""Pure-jnp GRU oracle — the substrate's lax.scan implementation."""
+from __future__ import annotations
+
+from repro.nn import gru as gru_mod
+
+
+def gru_sequence(params, xs, h0=None, *, reset_mask=None):
+    return gru_mod.gru_sequence(params, xs, h0, reset_mask=reset_mask)

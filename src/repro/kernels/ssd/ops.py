@@ -1,0 +1,57 @@
+"""Public SSD op: Pallas intra-chunk kernel + XLA inter-chunk recurrence."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel as k_mod
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, *, chunk: int = 128, initial_state=None,
+        interpret: Optional[bool] = None):
+    """Same contract as :func:`repro.nn.ssm.ssd_chunked`."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    nc = t // chunk
+
+    la = dt * a[None, None, :]                           # (B, T, H)
+    xw = x * dt[..., None].astype(x.dtype)
+
+    y_diag, states, chunk_decay = k_mod.ssd_intra_chunk(
+        xw, la, b, c, chunk=chunk, interpret=interpret)
+
+    # inter-chunk recurrence (serial over nc — latency-bound, stays in XLA)
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(s, inp):
+        st, dec = inp
+        prev = s
+        s = s * dec[..., None, None] + st
+        return s, prev
+
+    st_t = jnp.moveaxis(states, 1, 0)                    # (nc, B, H, P, N)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)              # (nc, B, H)
+    final, prev_states = jax.lax.scan(step, initial_state.astype(jnp.float32),
+                                      (st_t, dec_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (B, nc, H, P, N)
+
+    # off-diagonal output: y_i += C_i · S_prev · exp(cs_i)
+    lac = la.reshape(bsz, nc, chunk, h)
+    cs = jnp.cumsum(jnp.moveaxis(lac, -1, 2), axis=-1)   # (B, nc, H, L)
+    out_decay = jnp.exp(cs)
+    cc = c.reshape(bsz, nc, chunk, n)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc.astype(jnp.float32),
+                       prev_states, out_decay)
+    y = y_diag.astype(jnp.float32) + y_off.reshape(bsz, t, h, p)
+    return y.astype(x.dtype), final

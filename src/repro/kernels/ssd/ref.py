@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the SSD scan — delegates to the substrate's chunked
+implementation (itself validated against the step-recurrent decode form)."""
+from __future__ import annotations
+
+from repro.nn import ssm as ssm_mod
+
+
+def ssd(x, dt, a, b, c, *, chunk: int = 128, initial_state=None):
+    """x: (B,T,H,P); dt: (B,T,H); a: (H,); b,c: (B,T,N)."""
+    return ssm_mod.ssd_chunked(x, dt, a, b, c, chunk=chunk,
+                               initial_state=initial_state)

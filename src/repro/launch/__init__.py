@@ -1,0 +1,2 @@
+"""Launchers: production mesh, AOT dry-run, roofline analysis, train/serve
+drivers."""

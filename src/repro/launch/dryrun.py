@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import/init: jax locks the device count on
+#   first initialization. Dry-run only — tests/benches see 1 device.
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (architecture × shape ×
+mesh) cell on placeholder devices and record memory/cost/collective
+numbers for the roofline analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh multi ...
+
+A cell PASSES iff lowering + SPMD compilation succeed (sharding mismatch,
+OOM-at-compile or unsupported collectives are bugs), and the JSON record
+feeds §Roofline.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import registry, shapes as shapes_mod
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_mod
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(pred|[sub]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+
+def _type_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective instruction in the
+    (post-SPMD, per-device) HLO, by collective kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(r"^[%\w.\-]+\s*=\s*(.+)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in _COLLECTIVES:
+            # match the op name, not fusion names mentioning it
+            if re.match(rf"^(\([^)]*\)|\S+)\s+{kind}[(\.]", rhs) or \
+               re.match(rf"^{kind}[(\.]", rhs):
+                sig = rhs.split(kind)[0]
+                out[kind] += _type_bytes(sig)
+                counts[kind] += 1
+                break
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _scaled_spec(spec, repeats: int):
+    """Same architecture with the depth scan truncated to ``repeats``
+    period applications (used by the two-point cost extrapolation)."""
+    import dataclasses as dc
+    if spec.kind == "encdec":
+        dec = dc.replace(spec.cfg.decoder,
+                         n_layers=repeats * len(spec.cfg.decoder.period),
+                         scan_unroll=True)
+        enc_l = repeats * len(spec.cfg.encoder_period)
+        cfg = dc.replace(spec.cfg, decoder=dec, encoder_layers=enc_l)
+    else:
+        cfg = dc.replace(spec.cfg, n_layers=repeats * len(spec.cfg.period),
+                         scan_unroll=True)
+    return dc.replace(spec, cfg=cfg)
+
+
+def _full_repeats(spec) -> int:
+    if spec.kind == "encdec":
+        dec = spec.cfg.decoder
+        enc = spec.cfg.encoder_repeats
+        assert dec.repeats == enc, "extrapolation needs equal enc/dec repeats"
+        return dec.repeats
+    return spec.cfg.repeats
+
+
+def _cost_of(spec, shape, mesh, kw) -> dict:
+    bundle = steps_mod.make_step(spec, shape, mesh, **kw)
+    compiled = bundle.jit_fn.lower(*bundle.arg_sds).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": cost.get("flops"),
+            "bytes_accessed": cost.get("bytes accessed"),
+            "collective_bytes": coll["total_bytes"]}
+
+
+def extrapolated_cost(spec, shape, mesh, kw) -> dict:
+    """XLA's cost analysis visits a while-loop body ONCE, so the depth
+    scan's flops/bytes/collectives are undercounted by ~``repeats``.
+    Correct by two-point extrapolation: lower the same program with 1 and
+    2 period applications; the difference is one body iteration, so
+
+        total(R) = c(1) + (R - 1) * (c(2) - c(1)).
+    """
+    r_full = _full_repeats(spec)
+    c1 = _cost_of(_scaled_spec(spec, 1), shape, mesh, kw)
+    c2 = _cost_of(_scaled_spec(spec, 2), shape, mesh, kw)
+    out = {}
+    for k in c1:
+        body = c2[k] - c1[k]
+        out[k] = c1[k] + (r_full - 1) * body
+        out[k + "_body"] = body
+    out["repeats"] = r_full
+    return out
+
+
+def model_flops(spec, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D for train, 2·N·D for inference, with
+    N = active parameters (MoE expert weights scaled by top_k/E) minus
+    the embedding table (the logits matmul is included via tying)."""
+    import jax as _jax
+    from repro.models import api as api_mod
+    sds = _jax.eval_shape(lambda: api_mod.init(
+        _jax.random.PRNGKey(0), spec))
+    flat = _jax.tree_util.tree_flatten_with_path(sds)[0]
+    cfgs = [spec.cfg.decoder] if spec.kind == "encdec" else [spec.cfg]
+    moe_cfgs = [b.moe for c in cfgs for b in c.period if b.moe is not None]
+    total = 0.0
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", "")) for k in path]
+        size = float(leaf.size)
+        if "embed" in names and len(leaf.shape) == 2:
+            continue                                   # lookup is not a matmul
+        if moe_cfgs and any(n in ("up", "down", "gate") for n in names) \
+                and "moe" in names:
+            m = moe_cfgs[0]
+            size *= m.top_k / m.num_experts
+        total += size
+    factor = 6.0 if shape.kind == "train" else 2.0
+    tokens = (shape.global_batch if shape.kind == "decode"
+              else shape.global_batch * shape.seq_len)
+    return factor * total * tokens
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             variant: str = "baseline") -> dict:
+    spec = registry.get(arch)
+    shape = shapes_mod.SHAPES[shape_name]
+    supported, reason = registry.cell_supported(spec, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "status": "skip", "reason": reason}
+    if not supported:
+        return rec
+    if shape.kind == "decode" and not spec.has_decode:
+        rec["reason"] = "no decode step for this arch"
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    kw = {}
+    if variant != "baseline":
+        from repro.launch import variants
+        kw = variants.VARIANTS[variant](spec, shape)
+        spec = kw.pop("spec", spec)
+    bundle = steps_mod.make_step(spec, shape, mesh, **kw)
+    lowered = bundle.jit_fn.lower(*bundle.arg_sds)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    rec.update({
+        "status": "ok",
+        "kind": bundle.kind,
+        "n_devices": mesh.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {"flops": cost.get("flops"),
+                 "bytes_accessed": cost.get("bytes accessed"),
+                 "transcendentals": cost.get("transcendentals")},
+        "collectives": coll,
+    })
+    # scan-corrected totals (cost_analysis counts a while body once)
+    try:
+        rec["cost_extrapolated"] = extrapolated_cost(spec, shape, mesh, kw)
+        rec["model_flops_global"] = model_flops(spec, shape)
+    except Exception as e:                    # pragma: no cover
+        rec["cost_extrapolated"] = {"error": f"{type(e).__name__}: {e}"}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = ([(a, s) for a in registry.list_archs()
+              for s in shapes_mod.SHAPES]
+             if args.all else [(args.arch, args.shape)])
+
+    failures = 0
+    for arch, shape in cells:
+        tag = f"{arch}__{shape}__{args.mesh}__{args.variant}"
+        try:
+            rec = run_cell(arch, shape, args.mesh, variant=args.variant)
+        except Exception as e:  # a failing cell is a bug — surface it
+            rec = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "variant": args.variant, "status": "FAIL",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            failures += 1
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        line = {k: rec.get(k) for k in
+                ("arch", "shape", "mesh", "status", "reason", "compile_s")}
+        print(json.dumps(line), flush=True)
+        if rec["status"] == "ok":
+            print(f"  mem(temp)={rec['memory']['temp_bytes']/2**30:.2f}GiB/dev"
+                  f"  flops/dev={rec['cost']['flops']:.3e}"
+                  f"  coll={rec['collectives']['total_bytes']/2**30:.3f}GiB",
+                  flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Production mesh definition (a FUNCTION — importing this module never
+touches jax device state).
+
+Single pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips. The ``pod`` axis
+carries ONLY the DIALS-outer reconciliation collective (every F steps) and
+the batch sharding; the inner train_step has no per-step cross-pod
+collective by construction.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths (same axis names, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,277 @@
+"""AOT step builders: train_step / prefill_step / serve_step for any
+(architecture × shape × mesh), with explicit in/out shardings resolved
+from the logical-axis rules. Everything here works on ShapeDtypeStructs —
+no parameter allocation — which is what the multi-pod dry-run needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry, shapes as shapes_mod
+from repro.distributed import mesh as mesh_lib
+from repro.models import api, encdec as encdec_mod, lm as lm_mod, vlm as vlm_mod
+from repro.optim import adamw, clip as clip_mod, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    """A jit-wrapped step plus the ShapeDtypeStructs of its arguments —
+    ``jit_fn.lower(*arg_sds).compile()`` is the dry-run."""
+    jit_fn: object
+    arg_sds: tuple
+    kind: str
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _batch_shardings(batch_sds, mesh, *, long_context=False):
+    spec = mesh_lib.batch_spec(mesh, long_context=long_context)
+
+    def one(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(
+            mesh, P(*(list(spec) + [None] * (x.ndim - len(spec)))))
+    return jax.tree.map(one, batch_sds)
+
+
+def model_cfg(spec):
+    return spec.cfg.decoder if spec.kind == "encdec" else spec.cfg
+
+
+def act_constraint_for(mesh, *, seq_axis: str = "model"):
+    """Sequence-parallel residual-stream constraint: the scan carry (the
+    only activation saved across the depth scan) is stored (batch → data,
+    seq → model)-sharded, cutting saved-activation memory by the TP degree."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0],
+             seq_axis if seq_axis in mesh.shape else None, None)
+    sh = NamedSharding(mesh, spec)
+    return lambda x: jax.lax.with_sharding_constraint(x, sh)
+
+
+# ---------------------------------------------------------------------------
+# Shardings for params / optimizer / caches
+# ---------------------------------------------------------------------------
+def param_sds(spec) -> dict:
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), spec))
+
+
+def param_shardings(spec, mesh, *, rules=mesh_lib.TRAIN_RULES,
+                    fsdp_axes=("pod", "data")):
+    sds = param_sds(spec)
+    return mesh_lib.logical_to_sharding(
+        api.logical_specs(spec), sds, mesh, rules=rules,
+        fsdp_axes=fsdp_axes), sds
+
+
+def opt_shardings(spec, mesh, p_shardings, p_sds):
+    o_sds = jax.eval_shape(adamw.init, p_sds)
+    sh = {"mu": p_shardings, "nu": p_shardings, "master": p_shardings,
+          "step": NamedSharding(mesh, P())}
+    return sh, o_sds
+
+
+def cache_sds(spec, shape: shapes_mod.Shape):
+    """ShapeDtypeStructs of the decode caches for a shape cell."""
+    p_sds = param_sds(spec)
+    b = shape.global_batch
+
+    def build(params):
+        if spec.kind == "encdec":
+            frames = jnp.zeros((b, spec.n_frames, spec.cfg.d_model),
+                               jnp.bfloat16)
+            return encdec_mod.init_decode_caches(params, spec.cfg, frames,
+                                                 b, shape.seq_len)
+        if spec.kind == "vlm":
+            patches = jnp.zeros((b, spec.n_patches, spec.vision_dim),
+                                jnp.bfloat16)
+            return vlm_mod.init_decode_caches(params, spec.cfg, patches,
+                                              b, shape.seq_len)
+        return lm_mod.init_caches(params, spec.cfg, b, shape.seq_len)
+
+    return jax.eval_shape(build, p_sds)
+
+
+def cache_shardings(spec, mesh, c_sds, *, rules):
+    cfg = model_cfg(spec)
+    logical = lm_mod.cache_logical_specs(cfg)
+    return mesh_lib.logical_to_sharding(logical, c_sds, mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+def make_train_step(spec, shape: shapes_mod.Shape, mesh, *,
+                    rules=mesh_lib.TRAIN_RULES, fsdp_axes=("pod", "data"),
+                    peak_lr: float = 3e-4, grad_clip: float = 1.0,
+                    seq_parallel: bool = True,
+                    batch_axes=None, microbatches: int = 1) -> StepBundle:
+    if batch_axes is not None:
+        # pure-DP (ZeRO-3) layout: batch over the given axes, no TP —
+        # constrain the residual carry so every axis carries batch.
+        axes = tuple(a for a in batch_axes if a in mesh.shape)
+        bsh = NamedSharding(mesh, P(axes, None, None))
+        act = lambda x: jax.lax.with_sharding_constraint(x, bsh)
+    else:
+        act = act_constraint_for(mesh) if seq_parallel else None
+    loss_fn = api.loss_fn(spec, act_constraint=act)
+    lr_fn = schedule.warmup_cosine(peak_lr, 2_000, 100_000)
+    adamw_cfg = adamw.AdamWConfig()
+
+    assert shape.global_batch % microbatches == 0, \
+        (shape.global_batch, microbatches)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        # gradient accumulation: scan over microbatch slices of the batch
+        # axis — peak activation memory scales down by `microbatches`
+        # (the HBM-fit knob for the big train cells).
+        split = jax.tree.map(
+            lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                + x.shape[1:]), batch)
+
+        def one(carry, mb):
+            g_acc, l_acc, m_acc = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            return (jax.tree.map(jnp.add, g_acc, grads), l_acc + loss,
+                    jax.tree.map(jnp.add, m_acc, metrics)), None
+
+        zeros_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mb0 = jax.tree.map(lambda x: x[0], split)
+        zeros_m = jax.tree.map(lambda x: jnp.zeros((), jnp.float32),
+                               jax.eval_shape(loss_fn, params, mb0)[1])
+        (g, loss, metrics), _ = jax.lax.scan(
+            one, (zeros_g, jnp.zeros((), jnp.float32), zeros_m), split)
+        scale = 1.0 / microbatches
+        return (loss * scale, jax.tree.map(lambda x: x * scale, metrics)), \
+            jax.tree.map(lambda x: x * scale, g)
+
+    def train_step(params, opt, batch):
+        (loss, metrics), grads = grads_of(params, batch)
+        grads = clip_mod.sanitize(grads)
+        grads, gnorm = clip_mod.clip_by_global_norm(grads, grad_clip)
+        master, opt = adamw.update(grads, opt, lr_fn(opt["step"]), adamw_cfg)
+        params = adamw.cast_like(master, params)
+        return params, opt, {**metrics, "loss": loss, "grad_norm": gnorm}
+
+    p_sh, p_sds = param_shardings(spec, mesh, rules=rules,
+                                  fsdp_axes=fsdp_axes)
+    o_sh, o_sds = opt_shardings(spec, mesh, p_sh, p_sds)
+    b_sds = registry.input_specs(spec, shape)
+    if batch_axes is not None:
+        axes = tuple(a for a in batch_axes if a in mesh.shape)
+        b_sh = jax.tree.map(
+            lambda x: NamedSharding(
+                mesh, P(*((axes,) + (None,) * (x.ndim - 1)))), b_sds)
+    else:
+        b_sh = _batch_shardings(b_sds, mesh)
+
+    jit_fn = jax.jit(train_step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+    return StepBundle(jit_fn=jit_fn, arg_sds=(p_sds, o_sds, b_sds),
+                      kind="train")
+
+
+def make_prefill_step(spec, shape: shapes_mod.Shape, mesh, *,
+                      rules=mesh_lib.TRAIN_RULES,
+                      fsdp_axes=("pod", "data"),
+                      seq_parallel: bool = True) -> StepBundle:
+    """Forward over the full prompt; emits last-position logits (the
+    sampling input). KV-cache write-back is the decode path's cache
+    layout; its bytes are accounted in the roofline's memory term."""
+    cfg = model_cfg(spec)
+    act = act_constraint_for(mesh) if seq_parallel else None
+
+    def prefill_step(params, batch):
+        if spec.kind == "encdec":
+            enc = encdec_mod.encode(params, batch["frames"], spec.cfg)
+            x, _ = lm_mod.forward(params["decoder"], batch["tokens"],
+                                  cfg, cross_kv=enc, act_constraint=act)
+            params = params["decoder"]
+        elif spec.kind == "vlm":
+            x, _ = lm_mod.forward(params, batch["tokens"], cfg,
+                                  cross_kv=batch["patches"],
+                                  act_constraint=act)
+        else:
+            x, _ = lm_mod.forward(params, batch["tokens"], cfg,
+                                  act_constraint=act)
+        return lm_mod.logits_fn(params, x[:, -1:, :], cfg)
+
+    p_sh, p_sds = param_shardings(spec, mesh, rules=rules,
+                                  fsdp_axes=fsdp_axes)
+    b_sds = registry.input_specs(spec, shape)
+    b_sh = _batch_shardings(b_sds, mesh)
+    jit_fn = jax.jit(prefill_step, in_shardings=(p_sh, b_sh),
+                     out_shardings=None)
+    return StepBundle(jit_fn=jit_fn, arg_sds=(p_sds, b_sds), kind="prefill")
+
+
+def make_serve_step(spec, shape: shapes_mod.Shape, mesh, *,
+                    rules: Optional[tuple] = None,
+                    fsdp_axes=(), sharded_softmax: bool = True) -> StepBundle:
+    """One-token decode against a seq_len cache."""
+    long_ctx = shape.name.startswith("long")
+    if rules is None:
+        rules = (mesh_lib.LONG_CONTEXT_RULES if long_ctx
+                 else mesh_lib.DECODE_RULES)
+
+    # Distributed softmax over the sharded cache-sequence axis: constrain
+    # the (B, H, 1, slots) attention logits to (batch axes, ..., cache_seq
+    # axis) so the partitioner reduces with small all-reduces instead of
+    # all-gathering the whole K/V cache every layer (§Perf decode fix).
+    seq_axis = dict(rules).get("cache_seq")
+    lconstraint = None
+    if sharded_softmax and isinstance(seq_axis, str) \
+            and seq_axis in mesh.shape:
+        batch_axes = mesh_lib.batch_spec(mesh, long_context=long_ctx)[0]
+        lsh = NamedSharding(mesh, P(batch_axes, None, None, seq_axis))
+
+        def lconstraint(t):
+            return jax.lax.with_sharding_constraint(t, lsh)
+
+    def serve_step(params, token, caches, index):
+        if spec.kind == "encdec":
+            return encdec_mod.decode_step(params, token, caches, index,
+                                          spec.cfg,
+                                          logits_constraint=lconstraint)
+        return lm_mod.decode_step(params, token, caches, index,
+                                  model_cfg(spec),
+                                  logits_constraint=lconstraint)
+
+    p_sh, p_sds = param_shardings(spec, mesh, rules=rules,
+                                  fsdp_axes=fsdp_axes)
+    c_sds = cache_sds(spec, shape)
+    c_sh = cache_shardings(spec, mesh, c_sds, rules=rules)
+    tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    tok_sh = _batch_shardings(tok_sds, mesh, long_context=long_ctx)
+    idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    jit_fn = jax.jit(serve_step,
+                     in_shardings=(p_sh, tok_sh, c_sh,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, c_sh),
+                     donate_argnums=(2,))
+    return StepBundle(jit_fn=jit_fn,
+                      arg_sds=(p_sds, tok_sds, c_sds, idx_sds), kind="decode")
+
+
+def make_step(spec, shape: shapes_mod.Shape, mesh, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(spec, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_step(spec, shape, mesh, **kw)
+    return make_serve_step(spec, shape, mesh, **kw)

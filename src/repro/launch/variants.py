@@ -1,0 +1,167 @@
+"""Named sharding/step variants for the §Perf hillclimb.
+
+Each variant maps (spec, shape) -> kwargs for ``steps.make_step``; the
+dry-run's ``--variant`` flag selects one, so every hypothesis in the
+hillclimb log is a reproducible command line.
+"""
+from __future__ import annotations
+
+from repro.distributed import mesh as mesh_lib
+
+# 2D tensor-parallel decode: weights sharded over BOTH mesh axes (no
+# per-step weight all-gather), batch replicated, cache sequence-sharded.
+DECODE_TP2D_RULES: mesh_lib.Rules = (
+    ("batch", None),
+    ("cache_batch", ("pod", "data")),
+    ("cache_seq", "model"),
+    ("vocab", ("model", "data")),
+    ("heads", ("model", "data")),
+    ("kv_heads", ("model", "data")),
+    ("mlp", ("model", "data")),
+    ("expert", "model"),
+    ("embed", None),
+    ("layers", None),
+    ("seq", None),
+)
+
+
+def _decode_tp2d(spec, shape):
+    return {"rules": DECODE_TP2D_RULES, "fsdp_axes": ()}
+
+
+def _train_no_fsdp(spec, shape):
+    # pure TP+DP: params replicated over data (baseline ablation)
+    return {"fsdp_axes": ()}
+
+
+def _decode_gathered(spec, shape):
+    # pre-optimization decode baseline: let the partitioner all-gather the
+    # K/V cache instead of running the distributed softmax.
+    return {"sharded_softmax": False}
+
+
+def _decode_fsdp(spec, shape):
+    # weight-gathered decode (capacity-first): ZeRO-sharded weights,
+    # all-gathered per step — the baseline for big-model serving memory
+    return {"fsdp_axes": ("pod", "data")}
+
+
+def _replace_moe(spec, **moe_kw):
+    """Rebuild an ArchSpec with every MoE block's config modified."""
+    import dataclasses as dc
+
+    def fix_cfg(cfg):
+        period = tuple(
+            dc.replace(b, moe=dc.replace(b.moe, **moe_kw))
+            if b.moe is not None else b for b in cfg.period)
+        return dc.replace(cfg, period=period)
+
+    if spec.kind == "encdec":
+        cfg = dc.replace(spec.cfg, decoder=fix_cfg(spec.cfg.decoder))
+    else:
+        cfg = fix_cfg(spec.cfg)
+    return dc.replace(spec, cfg=cfg)
+
+
+def _moe_dense(spec, shape):
+    # Switch/Mesh-style one-hot einsum dispatch — the paper-standard MoE
+    # baseline (pre-optimization defaults).
+    return {"spec": _replace_moe(spec, dispatch="dense")}
+
+
+def _moe_gather(spec, shape):
+    # §Perf: scatter/gather MoE dispatch — removes the O(N·E·C·d) one-hot
+    # dispatch matmuls that dominate fine-grained-MoE train steps.
+    return {"spec": _replace_moe(spec, dispatch="gather")}
+
+
+def _moe_gather_sharded(spec, shape):
+    # §Perf iteration 3: group-local routing/capacity (16 groups = the
+    # data axis) — the position scan and expert buffers shard instead of
+    # being SPMD-replicated.
+    return {"spec": _replace_moe(spec, dispatch="gather", token_shards=16)}
+
+
+def _train_pod_local_fsdp(spec, shape):
+    # §Perf (the paper's technique at the pod level): FSDP only WITHIN a
+    # pod; across pods, parameters are replicated and reconciled every F
+    # steps by the DIALS-outer optimizer — the per-step train program
+    # carries ZERO cross-pod collectives.
+    return {"fsdp_axes": ("data",)}
+
+
+def _remat_dots(spec, shape):
+    # §Perf: checkpoint only matmul outputs instead of full-block remat —
+    # trades saved-activation bytes for less recompute (memory term vs
+    # compute term).
+    import dataclasses as dc
+    if spec.kind == "encdec":
+        cfg = dc.replace(spec.cfg,
+                         decoder=dc.replace(spec.cfg.decoder, remat="dots"))
+    else:
+        cfg = dc.replace(spec.cfg, remat="dots")
+    return {"spec": dc.replace(spec, cfg=cfg)}
+
+
+# Pure ZeRO-3 data parallelism: batch over BOTH mesh axes (256-way DP),
+# no tensor parallelism at all. Weights/optimizer fully sharded over all
+# 256 chips, all-gathered layer-by-layer inside the scan. Eliminates the
+# per-layer TP activation collectives (which dominate the baseline train
+# cells) at the cost of one params-sized gather per sweep.
+ZERO3_RULES: mesh_lib.Rules = (
+    ("batch", ("pod", "data", "model")),
+    ("vocab", None),
+    ("heads", None),
+    ("kv_heads", None),
+    ("mlp", None),
+    ("expert", None),
+    ("embed", None),
+    ("layers", None),
+    ("seq", None),
+    ("cache_batch", ("pod", "data", "model")),
+    ("cache_seq", None),
+)
+
+
+def _train_zero3(spec, shape):
+    return {"rules": ZERO3_RULES,
+            "fsdp_axes": ("pod", "data", "model"),
+            "seq_parallel": False,
+            "batch_axes": ("pod", "data", "model")}
+
+
+def _train_zero3_mb8(spec, shape):
+    # zero3 + 8-way gradient accumulation: activation temp memory /8 —
+    # the HBM-fit configuration for the big train cells on 16 GB v5e.
+    return {**_train_zero3(spec, shape), "microbatches": 8}
+
+
+def _train_zero3_dots(spec, shape):
+    # zero3 + dots-remat: drop the full-forward recompute (and its second
+    # weight all-gather sweep) in the backward pass.
+    import dataclasses as dc
+    cfg = dc.replace(spec.cfg, remat="dots")
+    return {**_train_zero3(spec, shape), "spec": dc.replace(spec, cfg=cfg)}
+
+
+def _train_no_seqpar(spec, shape):
+    # §Perf ablation: drop the sequence-parallel residual constraint —
+    # isolates how much collective traffic the seq<->full resharding costs.
+    return {"seq_parallel": False}
+
+
+VARIANTS = {
+    "train_no_seqpar": _train_no_seqpar,
+    "train_zero3": _train_zero3,
+    "train_zero3_dots": _train_zero3_dots,
+    "train_zero3_mb8": _train_zero3_mb8,
+    "decode_tp2d": _decode_tp2d,
+    "decode_gathered": _decode_gathered,
+    "train_no_fsdp": _train_no_fsdp,
+    "decode_fsdp": _decode_fsdp,
+    "moe_dense": _moe_dense,
+    "moe_gather": _moe_gather,
+    "moe_gather_sharded": _moe_gather_sharded,
+    "train_pod_local_fsdp": _train_pod_local_fsdp,
+    "remat_dots": _remat_dots,
+}

@@ -1,0 +1,3 @@
+"""Independent PPO (IPPO) MARL stack: actor-critic policies (FNN/GRU),
+GAE, PPO updates, and batched multi-agent runners."""
+from repro.marl import gae, policy, ppo, rollout, runner  # noqa: F401

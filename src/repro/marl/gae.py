@@ -1,0 +1,34 @@
+"""Generalized Advantage Estimation — reverse `lax.scan`.
+
+This is the jnp oracle; ``repro.kernels.gae`` holds the Pallas fused
+backward-scan kernel (batched over agents×envs) validated against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
+        lam: float = 0.95):
+    """rewards/values/dones: (..., T); last_value: (...,).
+
+    ``dones[t]`` marks that the episode ended AT step t (no bootstrap
+    across it). Returns (advantages, returns) with returns = adv + values.
+    """
+    t_axis = rewards.ndim - 1
+    rw = jnp.moveaxis(rewards, t_axis, 0)
+    vl = jnp.moveaxis(values, t_axis, 0)
+    dn = jnp.moveaxis(dones.astype(jnp.float32), t_axis, 0)
+    next_values = jnp.concatenate([vl[1:], last_value[None]], axis=0)
+
+    def step(carry, inp):
+        r, v, nv, d = inp
+        delta = r + gamma * nv * (1.0 - d) - v
+        adv = delta + gamma * lam * (1.0 - d) * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(step, jnp.zeros_like(last_value),
+                           (rw, vl, next_values, dn), reverse=True)
+    advs = jnp.moveaxis(advs, 0, t_axis)
+    return advs, advs + values

@@ -1,0 +1,98 @@
+"""Actor-critic policy networks (paper Table 5): FNN (traffic) and GRU
+(warehouse), functional over pytrees. Per-agent parameter sets are stacked
+along a leading agent axis and applied with ``vmap`` — N agents' policies
+evaluate as one batched matmul program (the TPU analogue of the paper's
+one-process-per-agent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import gru as gru_mod
+from repro.nn import init as initializers
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    obs_dim: int
+    n_actions: int
+    kind: str = "fnn"             # fnn | gru
+    hidden: Tuple[int, ...] = (256, 128)
+    gru_hidden: int = 128
+
+
+def _dense_init(key, din, dout, scale=None):
+    w = (initializers.orthogonal(scale)(key, (din, dout), jnp.float32)
+         if scale is not None else
+         initializers.orthogonal(jnp.sqrt(2.0))(key, (din, dout), jnp.float32))
+    return {"w": w, "b": jnp.zeros((dout,), jnp.float32)}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def policy_init(key, cfg: PolicyConfig):
+    keys = jax.random.split(key, 6)
+    params = {}
+    din = cfg.obs_dim
+    trunk = []
+    for i, h in enumerate(cfg.hidden):
+        trunk.append(_dense_init(keys[i], din, h))
+        din = h
+    params["trunk"] = trunk
+    if cfg.kind == "gru":
+        params["gru"] = gru_mod.gru_init(
+            keys[3], gru_mod.GRUConfig(in_dim=din, hidden=cfg.gru_hidden))
+        din = cfg.gru_hidden
+    params["pi"] = _dense_init(keys[4], din, cfg.n_actions, scale=0.01)
+    params["v"] = _dense_init(keys[5], din, 1, scale=1.0)
+    return params
+
+
+def initial_hidden(cfg: PolicyConfig, *batch) -> jax.Array:
+    return jnp.zeros(tuple(batch) + (cfg.gru_hidden,), jnp.float32)
+
+
+def _trunk(params, obs):
+    x = obs
+    for p in params["trunk"]:
+        x = jax.nn.relu(_dense(p, x))
+    return x
+
+
+def policy_apply(params, obs, h, cfg: PolicyConfig):
+    """One step. obs: (..., O); h: (..., H). Returns (logits, value, h')."""
+    x = _trunk(params, obs)
+    if cfg.kind == "gru":
+        flat = x.reshape(-1, x.shape[-1])
+        hf = h.reshape(-1, h.shape[-1])
+        hf = gru_mod.gru_cell(params["gru"], hf, flat)
+        h = hf.reshape(h.shape)
+        x = h
+    logits = _dense(params["pi"], x)
+    value = _dense(params["v"], x)[..., 0]
+    return logits, value, h
+
+
+def policy_sequence(params, obs_seq, h0, reset_mask, cfg: PolicyConfig):
+    """Recompute over a rollout chunk for PPO. obs_seq: (B, T, O);
+    h0: (B, H); reset_mask: (B, T). Returns (logits (B,T,A), values (B,T))."""
+    x = _trunk(params, obs_seq)
+    if cfg.kind == "gru":
+        hs, _ = gru_mod.gru_sequence(params["gru"], x, h0,
+                                     reset_mask=reset_mask)
+        x = hs
+    logits = _dense(params["pi"], x)
+    values = _dense(params["v"], x)[..., 0]
+    return logits, values
+
+
+def sample_action(key, logits):
+    a = jax.random.categorical(key, logits)
+    logp = jax.nn.log_softmax(logits)
+    return a, jnp.take_along_axis(logp, a[..., None], axis=-1)[..., 0]

@@ -1,0 +1,85 @@
+"""PPO (Schulman et al. 2017) with the paper's Table-6 hyperparameters.
+Clipped surrogate + clipped value loss + entropy bonus; minibatch epochs
+over parallel envs; GRU policies recompute through the rollout chunk from
+the stored initial hidden state (reset at episode boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.marl import policy as policy_mod
+from repro.optim import adamw, clip as clip_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    lr: float = 2.5e-4
+    gamma: float = 0.99
+    lam: float = 0.95
+    clip_eps: float = 0.1
+    entropy_coef: float = 1e-2
+    value_coef: float = 1.0
+    epochs: int = 3
+    minibatches: int = 4
+    max_grad_norm: float = 0.5
+
+
+def ppo_loss(params, batch, policy_cfg: policy_mod.PolicyConfig,
+             cfg: PPOConfig):
+    """batch: obs (B,T,O), actions (B,T), logp_old (B,T), adv (B,T),
+    ret (B,T), values_old (B,T), h0 (B,H), resets (B,T)."""
+    logits, values = policy_mod.policy_sequence(
+        params, batch["obs"], batch["h0"], batch["resets"], policy_cfg)
+    logp_all = jax.nn.log_softmax(logits)
+    logp = jnp.take_along_axis(logp_all, batch["actions"][..., None],
+                               axis=-1)[..., 0]
+    ratio = jnp.exp(logp - batch["logp_old"])
+    adv = batch["adv"]
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps) * adv
+    pi_loss = -jnp.minimum(unclipped, clipped).mean()
+
+    v_clip = batch["values_old"] + jnp.clip(
+        values - batch["values_old"], -cfg.clip_eps, cfg.clip_eps)
+    v_loss = 0.5 * jnp.maximum((values - batch["ret"]) ** 2,
+                               (v_clip - batch["ret"]) ** 2).mean()
+
+    entropy = -(jnp.exp(logp_all) * logp_all).sum(-1).mean()
+    loss = pi_loss + cfg.value_coef * v_loss - cfg.entropy_coef * entropy
+    return loss, {"pi_loss": pi_loss, "v_loss": v_loss, "entropy": entropy,
+                  "ratio_max": ratio.max()}
+
+
+def ppo_update(params, opt_state, traj, key,
+               policy_cfg: policy_mod.PolicyConfig, cfg: PPOConfig):
+    """traj leaves shaped (E, T, ...) (plus h0 (E, H)). Runs
+    epochs × minibatches SGD. Returns (params, opt_state, metrics)."""
+    n_envs = traj["obs"].shape[0]
+    mb = max(1, n_envs // cfg.minibatches)
+
+    def one_minibatch(carry, idx):
+        params, opt_state = carry
+        batch = jax.tree.map(lambda x: jnp.take(x, idx, axis=0), traj)
+        (loss, metrics), grads = jax.value_and_grad(
+            ppo_loss, has_aux=True)(params, batch, policy_cfg, cfg)
+        grads, gnorm = clip_mod.clip_by_global_norm(grads, cfg.max_grad_norm)
+        master, opt_state = adamw.update(
+            grads, opt_state, cfg.lr,
+            adamw.AdamWConfig(b1=0.9, b2=0.999, weight_decay=0.0))
+        params = adamw.cast_like(master, params)
+        return (params, opt_state), {**metrics, "loss": loss, "gnorm": gnorm}
+
+    def one_epoch(carry, ekey):
+        perm = jax.random.permutation(ekey, n_envs)
+        idxs = perm[:cfg.minibatches * mb].reshape(cfg.minibatches, mb)
+        carry, metrics = jax.lax.scan(one_minibatch, carry, idxs)
+        return carry, metrics
+
+    (params, opt_state), metrics = jax.lax.scan(
+        one_epoch, (params, opt_state), jax.random.split(key, cfg.epochs))
+    metrics = jax.tree.map(lambda x: x.mean(), metrics)
+    return params, opt_state, metrics

@@ -1,0 +1,37 @@
+"""Generic vectorized rollout: ``lax.scan`` over time of (policy step →
+env step), with auto-reset at episode boundaries. Parameterized by
+closures so the same machinery rolls the GS (joint multi-agent) and the
+IALS (per-agent local sims driven by AIP samples).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Transition(NamedTuple):
+    obs: jax.Array          # (..., O) observation BEFORE the step
+    action: jax.Array
+    logp: jax.Array
+    value: jax.Array
+    reward: jax.Array
+    done: jax.Array         # episode ended at this step
+    h_pre: jax.Array        # policy hidden BEFORE the step
+
+
+def rollout(carry0, steps: int, step_fn: Callable):
+    """carry0: rollout state; step_fn(carry, key) -> (carry, Transition).
+    Returns (carry, traj) with traj leaves (T, ...)."""
+    def body(carry, key):
+        return step_fn(carry, key)
+
+    carry, keys = carry0
+    final, traj = jax.lax.scan(body, carry, keys)
+    return final, traj
+
+
+def time_major_to_env_major(traj):
+    """(T, E, ...) -> (E, T, ...)."""
+    return jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), traj)

@@ -1,0 +1,152 @@
+"""Batched multi-agent IPPO runners.
+
+``make_gs_trainer`` trains all N agents *jointly on the global simulator*
+(the paper's "GS" baseline): E parallel GS copies roll for T steps per
+iteration, then every agent takes a PPO update — the whole iteration is a
+single jitted program, with the agent axis vmapped (the TPU analogue of
+the paper's one-process-per-agent, here one *mesh-shard*-per-agent-group).
+
+``evaluate`` measures the mean per-agent episodic return on the GS —
+the paper's periodic evaluation protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.marl import gae as gae_mod
+from repro.marl import policy as policy_mod
+from repro.marl import ppo as ppo_mod
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    n_envs: int = 16
+    rollout_steps: int = 16
+
+
+def _reset_where(done, fresh, current):
+    """Vectorized auto-reset: done (E,) selects fresh env states."""
+    def sel(f, c):
+        d = done.reshape((-1,) + (1,) * (c.ndim - 1))
+        return jnp.where(d, f, c)
+    return jax.tree.map(sel, fresh, current)
+
+
+def make_gs_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                    ppo_cfg: ppo_mod.PPOConfig, run_cfg: RunConfig):
+    info = env_cfg.info()
+    n_agents, n_envs, t_steps = info.n_agents, run_cfg.n_envs, run_cfg.rollout_steps
+
+    v_gs_init = jax.vmap(lambda k: env_mod.gs_init(k, env_cfg))
+    v_gs_step = jax.vmap(lambda s, a, k: env_mod.gs_step(s, a, k, env_cfg))
+    v_gs_obs = jax.vmap(lambda s: env_mod.gs_obs(s, env_cfg))
+
+    # policy over stacked agents: params (N,...), obs (E,N,O), h (E,N,H)
+    apply_agents = jax.vmap(
+        lambda p, o, h: policy_mod.policy_apply(p, o, h, policy_cfg),
+        in_axes=(0, 1, 1), out_axes=(1, 1, 1))
+
+    def init_fn(key):
+        kp, ke, kr = jax.random.split(key, 3)
+        params = jax.vmap(lambda k: policy_mod.policy_init(k, policy_cfg))(
+            jax.random.split(kp, n_agents))
+        opt = jax.vmap(adamw.init)(params)
+        env_state = v_gs_init(jax.random.split(ke, n_envs))
+        obs = v_gs_obs(env_state)
+        h = policy_mod.initial_hidden(policy_cfg, n_envs, n_agents)
+        return {"params": params, "opt": opt, "env": env_state, "obs": obs,
+                "h": h, "key": kr, "iter": jnp.zeros((), jnp.int32)}
+
+    def _rollout(state):
+        def step(carry, key):
+            env, obs, h, prev_done = carry
+            k_act, k_env, k_reset = jax.random.split(key, 3)
+            logits, value, h_new = apply_agents(state["params"], obs, h)
+            action, logp = policy_mod.sample_action(k_act, logits)  # (E,N)
+            env2, obs2, rew, u, done = v_gs_step(
+                env, action, jax.random.split(k_env, n_envs))
+            fresh = v_gs_init(jax.random.split(k_reset, n_envs))
+            env3 = _reset_where(done, fresh, env2)
+            obs3 = jnp.where(done[:, None, None], v_gs_obs(env3), obs2)
+            h3 = jnp.where(done[:, None, None], jnp.zeros_like(h_new), h_new)
+            tr = {"obs": obs, "action": action, "logp": logp, "value": value,
+                  "reward": rew, "done": jnp.broadcast_to(
+                      done[:, None], rew.shape), "h_pre": h,
+                  # marks "new episode starts at this step" (GRU reset)
+                  "reset_pre": jnp.broadcast_to(prev_done[:, None], rew.shape)}
+            return (env3, obs3, h3, done), tr
+
+        (env, obs, h, _), traj = jax.lax.scan(
+            step, (state["env"], state["obs"], state["h"],
+                   jnp.zeros((n_envs,), bool)),
+            jax.random.split(state["key"], t_steps))
+        return (env, obs, h), traj          # traj leaves (T, E, N, ...)
+
+    def train_fn(state):
+        k_iter = jax.random.fold_in(state["key"], state["iter"])
+        state = {**state, "key": k_iter}
+        (env, obs, h), traj = _rollout(state)
+
+        # bootstrap value for the state after the last step
+        _, last_value, _ = apply_agents(state["params"], obs, h)  # (E, N)
+
+        # GAE per agent: reorder to (N, E, T)
+        def nea(x):
+            return jnp.moveaxis(x, (0, 1, 2), (2, 0, 1))  # (T,E,N)->(E,N,T)
+        rewards, values, dones = map(nea, (traj["reward"],
+                                           traj["value"], traj["done"]))
+        adv, ret = gae_mod.gae(rewards, values, dones,
+                               jnp.moveaxis(last_value, 0, 0),
+                               gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
+
+        # PPO per agent. batch leaves (N, E, T, ...)
+        def net(x):                           # (T,E,N,...) -> (N,E,T,...)
+            return jnp.moveaxis(x, (0, 1, 2), (2, 1, 0))
+        batch = {
+            "obs": net(traj["obs"]),
+            "actions": net(traj["action"]).astype(jnp.int32),
+            "logp_old": net(traj["logp"]),
+            "values_old": net(traj["value"]),
+            "adv": jnp.swapaxes(adv, 0, 1),   # (E,N,T) -> (N,E,T)
+            "ret": jnp.swapaxes(ret, 0, 1),
+            "resets": net(traj["reset_pre"]).astype(jnp.float32),
+            "h0": jnp.moveaxis(traj["h_pre"][0], 1, 0),   # (N, E, H)
+        }
+        # adv/ret currently (E, N, T) -> want (N, E, T)
+        keys = jax.random.split(jax.random.fold_in(k_iter, 1), n_agents)
+        new_params, new_opt, metrics = jax.vmap(
+            lambda p, o, b, k: ppo_mod.ppo_update(p, o, b, k, policy_cfg,
+                                                  ppo_cfg))(
+            state["params"], state["opt"], batch, keys)
+        mean_rew = traj["reward"].mean()
+        return {**state, "params": new_params, "opt": new_opt, "env": env,
+                "obs": obs, "h": h, "iter": state["iter"] + 1}, \
+            {**jax.tree.map(jnp.mean, metrics), "reward": mean_rew}
+
+    def eval_fn(params, key, *, episodes: int = 4):
+        """Deterministic (argmax) evaluation: mean per-step reward over
+        full episodes, averaged over agents — the paper's metric."""
+        ke, kr = jax.random.split(key)
+        env = v_gs_init(jax.random.split(ke, episodes))
+        obs = v_gs_obs(env)
+        h = policy_mod.initial_hidden(policy_cfg, episodes, n_agents)
+
+        def step(carry, k):
+            env, obs, h = carry
+            logits, _, h = apply_agents(params, obs, h)
+            action = jnp.argmax(logits, axis=-1)
+            env, obs, rew, _, done = v_gs_step(
+                env, action, jax.random.split(k, episodes))
+            return (env, obs, h), rew
+
+        _, rews = jax.lax.scan(step, (env, obs, h),
+                               jax.random.split(kr, info.horizon))
+        return rews.mean()
+
+    return init_fn, jax.jit(train_fn), jax.jit(eval_fn, static_argnames="episodes")

@@ -1,0 +1,2 @@
+"""Composable model definitions (decoder LM, enc-dec, VLM) over the nn substrate."""
+from repro.models import api, blocks, encdec, lm, vlm  # noqa: F401

@@ -1,0 +1,102 @@
+"""Uniform model API over the three backbone kinds (lm / encdec / vlm).
+
+``ArchSpec`` is what a config file in ``repro.configs`` produces; the
+launcher, dry-run, trainer and tests all speak this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, lm, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    kind: str                      # lm | encdec | vlm
+    cfg: object                    # ModelConfig | EncDecConfig
+    family: str                    # dense | moe | hybrid | ssm | audio | vlm
+    sub_quadratic: bool = False    # eligible for the long_500k cell
+    has_decode: bool = True
+    source: str = ""
+    # stub-frontend shapes
+    n_frames: int = 0              # encdec stub frames
+    n_patches: int = 0             # vlm stub patches
+    vision_dim: int = 0
+
+
+def init(key, spec: ArchSpec):
+    if spec.kind == "encdec":
+        return encdec.init_encdec(key, spec.cfg)
+    return lm.init_lm(key, spec.cfg)
+
+
+def logical_specs(spec: ArchSpec):
+    if spec.kind == "encdec":
+        return encdec.encdec_logical_specs(spec.cfg)
+    return lm.lm_logical_specs(spec.cfg)
+
+
+def loss_fn(spec: ArchSpec, *, act_constraint=None) -> Callable:
+    if spec.kind == "encdec":
+        return lambda p, b: encdec.encdec_loss(
+            p, b, spec.cfg, act_constraint=act_constraint)
+    if spec.kind == "vlm":
+        return lambda p, b: vlm.vlm_loss(
+            p, b, spec.cfg, act_constraint=act_constraint)
+    return lambda p, b: lm.lm_loss(
+        p, b, spec.cfg, act_constraint=act_constraint)
+
+
+def init_caches(params, spec: ArchSpec, batch: int, max_len: int,
+                batch_inputs: Optional[dict] = None):
+    binp = batch_inputs or {}
+    if spec.kind == "encdec":
+        return encdec.init_decode_caches(params, spec.cfg, binp["frames"],
+                                         batch, max_len)
+    if spec.kind == "vlm":
+        return vlm.init_decode_caches(params, spec.cfg, binp["patches"],
+                                      batch, max_len)
+    return lm.init_caches(params, spec.cfg, batch, max_len)
+
+
+def decode_step(params, token, caches, index, spec: ArchSpec):
+    if spec.kind == "encdec":
+        return encdec.decode_step(params, token, caches, index, spec.cfg)
+    return lm.decode_step(params, token, caches, index,
+                          spec.cfg if spec.kind != "encdec" else spec.cfg)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, spec: ArchSpec) -> int:
+    """For MoE: count experts at top_k/num_experts weight (6·N_active·D)."""
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        frac = 1.0
+        if any(k in ("up", "down", "gate") for k in keys) and leaf.ndim == 3:
+            # stacked-expert weight (E, d, f) — possibly (layers, E, d, f)
+            moe_specs = [s.moe for s in _periods(spec) if s.moe is not None]
+            if moe_specs:
+                frac = moe_specs[0].top_k / moe_specs[0].num_experts
+        total += int(leaf.size * frac)
+    return total
+
+
+def _periods(spec: ArchSpec):
+    cfg = spec.cfg.decoder if spec.kind == "encdec" else spec.cfg
+    out = list(cfg.period)
+    if cfg.shared is not None:
+        out.append(cfg.shared)
+    return out

@@ -1,0 +1,194 @@
+"""Transformer / SSM / MoE blocks and the layer-period abstraction.
+
+A model is ``n_layers`` blocks arranged as ``repeats`` copies of a short
+``period`` of heterogeneous :class:`LayerSpec`s (period 1 = plain llama;
+period 2 = gemma2 local/global alternation; period 5 = llama-vision
+4×self + 1×cross; zamba2 = 2×ssm + a *shared* attention block). Params for
+each period position are stacked along a leading ``layers`` axis so the
+whole depth lowers as one ``lax.scan`` — compile time is O(period), not
+O(n_layers). Shared blocks keep a single unstacked copy applied once per
+repeat (zamba-style weight sharing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn_mod
+from repro.nn import layers, moe as moe_mod, ssm as ssm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One block in the period."""
+    mixer: str = "attn"                       # attn | ssm | cross_attn
+    attn: Optional[attn_mod.AttentionConfig] = None
+    ssm: Optional[ssm_mod.SSMConfig] = None
+    ffn: str = "mlp"                          # mlp | moe | none
+    mlp: Optional[layers.MLPConfig] = None
+    moe: Optional[moe_mod.MoEConfig] = None
+    post_norm: bool = False                   # gemma2-style post-block norms
+    gated_cross: bool = False                 # llama-vision tanh-gated cross
+    cross_kv_dim: Optional[int] = None
+    d_model: int = 0
+    dtype: object = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def block_init(key, spec: LayerSpec):
+    keys = jax.random.split(key, 4)
+    p = {"norm1": layers.rmsnorm_init(spec.d_model)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn_mod.attention_init(keys[0], spec.attn)
+    elif spec.mixer == "cross_attn":
+        p["mixer"] = attn_mod.cross_attention_init(
+            keys[0], spec.attn, kv_dim=spec.cross_kv_dim)
+        if spec.gated_cross:
+            p["gate_attn"] = jnp.zeros((), jnp.float32)
+            p["gate_ffn"] = jnp.zeros((), jnp.float32)
+    elif spec.mixer == "ssm":
+        p["mixer"] = ssm_mod.ssm_init(keys[0], spec.ssm)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.post_norm:
+        p["norm1_post"] = layers.rmsnorm_init(spec.d_model)
+    if spec.ffn != "none":
+        p["norm2"] = layers.rmsnorm_init(spec.d_model)
+        if spec.ffn == "mlp":
+            p["ffn"] = layers.mlp_init(keys[1], spec.mlp)
+        else:
+            p["ffn"] = moe_mod.moe_init(keys[1], spec.moe)
+        if spec.post_norm:
+            p["norm2_post"] = layers.rmsnorm_init(spec.d_model)
+    return p
+
+
+def block_logical_specs(spec: LayerSpec):
+    s = {"norm1": {"scale": ("embed",)}}
+    if spec.mixer in ("attn", "cross_attn"):
+        s["mixer"] = attn_mod.attention_logical_specs(spec.attn)
+        if spec.mixer == "cross_attn":
+            s["mixer"] = {"q": {"w": ("embed", "heads")},
+                          "k": {"w": (None, "kv_heads")},
+                          "v": {"w": (None, "kv_heads")},
+                          "o": {"w": ("heads", "embed")}}
+            if spec.gated_cross:
+                s["gate_attn"] = ()
+                s["gate_ffn"] = ()
+    else:
+        s["mixer"] = ssm_mod.ssm_logical_specs(spec.ssm)
+    if spec.post_norm:
+        s["norm1_post"] = {"scale": ("embed",)}
+    if spec.ffn != "none":
+        s["norm2"] = {"scale": ("embed",)}
+        s["ffn"] = (layers.mlp_logical_specs(spec.mlp) if spec.ffn == "mlp"
+                    else moe_mod.moe_logical_specs(spec.moe))
+        if spec.post_norm:
+            s["norm2_post"] = {"scale": ("embed",)}
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _ffn_apply(p, spec: LayerSpec, h):
+    if spec.ffn == "mlp":
+        return layers.mlp(p["ffn"], h, activation=spec.mlp.activation), None
+    out, aux = moe_mod.moe_layer(p["ffn"], h, spec.moe)
+    return out, aux
+
+
+def block_apply(p, x, spec: LayerSpec, *, cross_kv=None, positions=None,
+                use_flash: bool = False):
+    """Returns (x, moe_aux_or_None). x: (B, T, d_model)."""
+    h = layers.rmsnorm(p["norm1"], x)
+    if spec.mixer == "attn":
+        h = attn_mod.self_attention(p["mixer"], h, spec.attn,
+                                    positions=positions, use_flash=use_flash)
+    elif spec.mixer == "cross_attn":
+        h = attn_mod.cross_attention(p["mixer"], h, cross_kv, spec.attn)
+        if spec.gated_cross:
+            h = h * jnp.tanh(p["gate_attn"]).astype(h.dtype)
+    else:
+        h = ssm_mod.ssm_layer(p["mixer"], h, spec.ssm)
+    if spec.post_norm:
+        h = layers.rmsnorm(p["norm1_post"], h)
+    x = x + h
+    aux = None
+    if spec.ffn != "none":
+        h = layers.rmsnorm(p["norm2"], x)
+        h, aux = _ffn_apply(p, spec, h)
+        if spec.gated_cross:
+            h = h * jnp.tanh(p["gate_ffn"]).astype(h.dtype)
+        if spec.post_norm:
+            h = layers.rmsnorm(p["norm2_post"], h)
+        x = x + h
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, cached)
+# ---------------------------------------------------------------------------
+def init_block_cache(spec: LayerSpec, batch: int, max_len: int,
+                     cross_kv=None):
+    """Cache pytree for one block. For cross-attn blocks the cache holds the
+    projected image/audio K/V (computed once here)."""
+    if spec.mixer == "attn":
+        window = spec.attn.sliding_window
+        slots = min(max_len, window) if window else max_len
+        return attn_mod.init_kv_cache(spec.attn, batch, slots)
+    if spec.mixer == "ssm":
+        return ssm_mod.init_ssm_cache(spec.ssm, batch)
+    # cross_attn: precompute projected K/V once.
+    dh = spec.attn.dh
+    k = layers.linear  # noqa — projected lazily in decode when params known
+    del k
+    return {"src": cross_kv}
+
+
+def block_cache_logical_specs(spec: LayerSpec):
+    """Logical axes for one block's decode cache (parallel tree)."""
+    if spec.mixer == "attn":
+        return {"k": ("cache_batch", "cache_seq", "kv_heads", None),
+                "v": ("cache_batch", "cache_seq", "kv_heads", None),
+                "pos": ("cache_seq",)}
+    if spec.mixer == "ssm":
+        return {"conv": ("cache_batch", None, "mlp"),
+                "state": ("cache_batch", "heads", None, None)}
+    # cross_attn: precomputed K/V over the (short) modality sequence
+    return {"k": ("cache_batch", None, "kv_heads", None),
+            "v": ("cache_batch", None, "kv_heads", None)}
+
+
+def block_decode(p, x, cache, index, spec: LayerSpec, *, cross_kv=None,
+                 logits_constraint=None):
+    """One-token decode. x: (B, 1, d). Returns (x, new_cache)."""
+    h = layers.rmsnorm(p["norm1"], x)
+    if spec.mixer == "attn":
+        h, cache = attn_mod.decode_self_attention(
+            p["mixer"], h, cache, index, spec.attn,
+            logits_constraint=logits_constraint)
+    elif spec.mixer == "cross_attn":
+        src = cache["src"] if cache and "src" in cache else cross_kv
+        h = attn_mod.cross_attention(p["mixer"], h, src, spec.attn)
+        if spec.gated_cross:
+            h = h * jnp.tanh(p["gate_attn"]).astype(h.dtype)
+    else:
+        h, cache = ssm_mod.ssm_decode_step(p["mixer"], h, cache, spec.ssm)
+    if spec.post_norm:
+        h = layers.rmsnorm(p["norm1_post"], h)
+    x = x + h
+    if spec.ffn != "none":
+        h = layers.rmsnorm(p["norm2"], x)
+        h, _ = _ffn_apply(p, spec, h)
+        if spec.gated_cross:
+            h = h * jnp.tanh(p["gate_ffn"]).astype(h.dtype)
+        if spec.post_norm:
+            h = layers.rmsnorm(p["norm2_post"], h)
+        x = x + h
+    return x, cache

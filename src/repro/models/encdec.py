@@ -1,0 +1,96 @@
+"""Encoder-decoder backbone (whisper-tiny).
+
+Per the brief the audio frontend is a STUB: ``input_specs()`` feeds
+precomputed frame embeddings (B, n_frames, d_model) where the conv
+subsampler would produce them. The encoder is a non-causal self-attention
+stack; the decoder is the generic LM with interleaved cross-attention
+blocks (each whisper layer's self+cross+mlp is modelled as a period of
+two blocks: [self/no-ffn, cross/mlp] — same compute graph).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, lm
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    encoder_period: Tuple[blocks.LayerSpec, ...]
+    encoder_layers: int
+    decoder: lm.ModelConfig
+    d_model: int = 384
+    dtype: object = jnp.bfloat16
+
+    @property
+    def encoder_repeats(self) -> int:
+        return self.encoder_layers // len(self.encoder_period)
+
+
+def init_encdec(key, cfg: EncDecConfig):
+    ke, kd = jax.random.split(key)
+    stacked = []
+    for j, spec in enumerate(cfg.encoder_period):
+        lkeys = jax.random.split(jax.random.fold_in(ke, j), cfg.encoder_repeats)
+        stacked.append(jax.vmap(lambda k: blocks.block_init(k, spec))(lkeys))
+    return {
+        "encoder": {"layers": stacked,
+                    "final_norm": layers.rmsnorm_init(cfg.d_model)},
+        "decoder": lm.init_lm(kd, cfg.decoder),
+    }
+
+
+def encdec_logical_specs(cfg: EncDecConfig):
+    enc_stacked = []
+    for spec in cfg.encoder_period:
+        tree = blocks.block_logical_specs(spec)
+        enc_stacked.append(jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), tree,
+            is_leaf=lambda x: isinstance(x, tuple)))
+    return {
+        "encoder": {"layers": enc_stacked,
+                    "final_norm": {"scale": ("embed",)}},
+        "decoder": lm.lm_logical_specs(cfg.decoder),
+    }
+
+
+def encode(params, frames, cfg: EncDecConfig):
+    """frames: (B, T_frames, d_model) stub embeddings -> encoder output."""
+    def body(x, layer_p):
+        for j, spec in enumerate(cfg.encoder_period):
+            x, _ = blocks.block_apply(layer_p[j], x, spec)
+        return x, None
+
+    x, _ = jax.lax.scan(body, frames.astype(cfg.dtype),
+                        tuple(params["encoder"]["layers"]),
+                        unroll=(cfg.encoder_repeats
+                                if cfg.decoder.scan_unroll else 1))
+    return layers.rmsnorm(params["encoder"]["final_norm"], x)
+
+
+def encdec_loss(params, batch, cfg: EncDecConfig, *, act_constraint=None):
+    """batch: dict(frames=(B,Tf,d), tokens=(B,T), labels=(B,T))."""
+    enc_out = encode(params, batch["frames"], cfg)
+    return lm.lm_loss(params["decoder"],
+                      {"tokens": batch["tokens"], "labels": batch["labels"]},
+                      cfg.decoder, cross_kv=enc_out,
+                      act_constraint=act_constraint)
+
+
+def init_decode_caches(params, cfg: EncDecConfig, frames, batch: int,
+                       max_len: int):
+    enc_out = encode(params, frames, cfg)
+    return lm.init_caches(params["decoder"], cfg.decoder, batch, max_len,
+                          cross_src=enc_out)
+
+
+def decode_step(params, token, caches, index, cfg: EncDecConfig, *,
+                logits_constraint=None):
+    return lm.decode_step(params["decoder"], token, caches, index,
+                          cfg.decoder, logits_constraint=logits_constraint)

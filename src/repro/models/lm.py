@@ -1,0 +1,292 @@
+"""Decoder-only LM (and the generic backbone used by enc-dec / VLM).
+
+* Depth lowers as ``lax.scan`` over ``repeats`` copies of the layer period —
+  compile time and HLO size are O(period), not O(n_layers).
+* Per-repeat remat (``jax.checkpoint``) with a configurable policy.
+* Memory-safe loss: cross-entropy is computed in sequence chunks
+  (``loss_chunk``) so the (B, T, vocab) logits tensor is never materialized
+  — critical for the 100k–256k vocab architectures.
+* Decode: one-token step threading stacked per-layer caches through the
+  same scan structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks
+from repro.nn import attention as attn_mod
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int                               # len(period) * repeats
+    period: Tuple[blocks.LayerSpec, ...]
+    shared: Optional[blocks.LayerSpec] = None   # zamba-style shared block
+    tie_embeddings: bool = True
+    final_softcap: Optional[float] = None
+    embed_scale: bool = False                   # gemma: x *= sqrt(d_model)
+    dtype: object = jnp.bfloat16
+    remat: str = "full"                         # none | full | dots
+    loss_chunk: int = 2048
+    use_flash: bool = False
+    # fully unroll the depth scan (dry-run cost extrapolation only: XLA's
+    # cost analysis counts a while body once, unrolled bodies count fully)
+    scan_unroll: bool = False
+
+    @property
+    def repeats(self) -> int:
+        assert self.n_layers % len(self.period) == 0, \
+            f"{self.n_layers} layers not divisible by period {len(self.period)}"
+        return self.n_layers // len(self.period)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_lm(key, cfg: ModelConfig):
+    keys = jax.random.split(key, 4 + len(cfg.period))
+    params = {
+        "embed": layers.embedding_init(keys[0], cfg.vocab, cfg.d_model,
+                                       dtype=cfg.dtype,
+                                       stddev=cfg.d_model ** -0.5),
+        "final_norm": layers.rmsnorm_init(cfg.d_model),
+    }
+    stacked = []
+    for j, spec in enumerate(cfg.period):
+        lkeys = jax.random.split(keys[2 + j], cfg.repeats)
+        stacked.append(jax.vmap(lambda k: blocks.block_init(k, spec))(lkeys))
+    params["layers"] = stacked
+    if cfg.shared is not None:
+        params["shared"] = blocks.block_init(keys[1], cfg.shared)
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.linear_init(
+            keys[-1], cfg.d_model, cfg.vocab, dtype=cfg.dtype)
+    return params
+
+
+def lm_logical_specs(cfg: ModelConfig):
+    specs = {
+        "embed": {"table": ("vocab", "embed")},
+        "final_norm": {"scale": ("embed",)},
+    }
+    stacked = []
+    for spec in cfg.period:
+        tree = blocks.block_logical_specs(spec)
+        # prepend the scan ("layers") axis to every leaf
+        stacked.append(jax.tree.map(
+            lambda ax: ("layers",) + tuple(ax), tree,
+            is_leaf=lambda x: isinstance(x, tuple)))
+    specs["layers"] = stacked
+    if cfg.shared is not None:
+        specs["shared"] = blocks.block_logical_specs(cfg.shared)
+    if not cfg.tie_embeddings:
+        specs["unembed"] = {"w": ("embed", "vocab")}
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _remat_wrap(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, cross_kv=None,
+            positions=None, act_constraint=None):
+    """tokens: (B, T) int32 -> final hidden states (B, T, d_model).
+
+    ``act_constraint``: optional sharding constraint applied to the
+    residual stream at layer-period boundaries (sequence parallelism: the
+    scan carry — the only activation saved across the depth scan — is
+    stored sequence-sharded over the model axis, cutting saved-activation
+    memory by the TP degree)."""
+    x = layers.embedding_lookup(params["embed"], tokens,
+                                scale_by_sqrt_dim=cfg.embed_scale)
+    if act_constraint is not None:
+        x = act_constraint(x)
+    shared_p = params.get("shared")
+
+    def body(carry, layer_p):
+        x = carry
+        aux = {"load_balance": jnp.zeros((), jnp.float32),
+               "z_loss": jnp.zeros((), jnp.float32)}
+        for j, spec in enumerate(cfg.period):
+            x, a = blocks.block_apply(layer_p[j], x, spec,
+                                      cross_kv=cross_kv,
+                                      positions=positions,
+                                      use_flash=cfg.use_flash)
+            if a is not None:
+                aux = jax.tree.map(jnp.add, aux, a)
+        if shared_p is not None:
+            x, _ = blocks.block_apply(shared_p, x, cfg.shared,
+                                      cross_kv=cross_kv, positions=positions,
+                                      use_flash=cfg.use_flash)
+        if act_constraint is not None:
+            x = act_constraint(x)
+        return x, aux
+
+    x, auxs = jax.lax.scan(_remat_wrap(body, cfg.remat), x,
+                           tuple(params["layers"]),
+                           unroll=cfg.repeats if cfg.scan_unroll else 1)
+    x = layers.rmsnorm(params["final_norm"], x)
+    aux = jax.tree.map(jnp.sum, auxs)
+    return x, aux
+
+
+def logits_fn(params, x, cfg: ModelConfig):
+    """Full logits (fp32). Only safe for small vocab/short sequences."""
+    if cfg.tie_embeddings:
+        logits = layers.embedding_logits(params["embed"], x)
+    else:
+        logits = layers.linear(params["unembed"], x).astype(jnp.float32)
+    return layers.softcap(logits, cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence — never materializes (B, T, V))
+# ---------------------------------------------------------------------------
+def token_xent(params, x, labels, cfg: ModelConfig):
+    """x: (B, T, d), labels: (B, T) -> per-token loss (B, T), fp32."""
+    b, t, d = x.shape
+    chunk = min(cfg.loss_chunk, t)
+    if t % chunk != 0:
+        chunk = t
+    nch = t // chunk
+    xr = jnp.moveaxis(x.reshape(b, nch, chunk, d), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(b, nch, chunk), 1, 0)
+
+    def f(args):
+        xc, lc = args
+        logits = logits_fn(params, xc, cfg)            # (B, chunk, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return logz - gold
+
+    losses = jax.lax.map(jax.checkpoint(f), (xr, lr))  # (nch, B, chunk)
+    return jnp.moveaxis(losses, 0, 1).reshape(b, t)
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *,
+            lb_weight: float = 0.01, z_weight: float = 1e-3, cross_kv=None,
+            act_constraint=None):
+    """batch: dict(tokens=(B,T), labels=(B,T)[, cross_kv]). Returns (loss, metrics)."""
+    cross = batch.get("cross_kv", cross_kv)
+    x, aux = forward(params, batch["tokens"], cfg, cross_kv=cross,
+                     act_constraint=act_constraint)
+    per_tok = token_xent(params, x, batch["labels"], cfg)
+    xent = per_tok.mean()
+    loss = xent + lb_weight * aux["load_balance"] + z_weight * aux["z_loss"]
+    return loss, {"xent": xent, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_caches(params, cfg: ModelConfig, batch: int, max_len: int,
+                cross_src=None):
+    """Stacked caches: one pytree per period position, leading repeats axis.
+    Cross-attn blocks precompute projected K/V from ``cross_src`` once."""
+    caches = []
+    for j, spec in enumerate(cfg.period):
+        if spec.mixer == "cross_attn":
+            def proj(p):
+                dh = spec.attn.dh
+                k = layers.linear(p["mixer"]["k"], cross_src)
+                v = layers.linear(p["mixer"]["v"], cross_src)
+                s = cross_src.shape
+                return {"k": k.reshape(s[0], s[1], spec.attn.num_kv_heads, dh),
+                        "v": v.reshape(s[0], s[1], spec.attn.num_kv_heads, dh)}
+            caches.append(jax.vmap(proj)(params["layers"][j]))
+        else:
+            one = blocks.init_block_cache(spec, batch, max_len)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.repeats,) + a.shape), one))
+    shared_cache = None
+    if cfg.shared is not None:
+        one = blocks.init_block_cache(cfg.shared, batch, max_len)
+        shared_cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.repeats,) + a.shape), one)
+    return {"layers": caches, "shared": shared_cache}
+
+
+def cache_logical_specs(cfg: ModelConfig):
+    """Logical-axis tree parallel to :func:`init_caches`'s output (stacked
+    caches get a leading "layers" axis)."""
+    def stack(tree):
+        return jax.tree.map(lambda ax: ("layers",) + tuple(ax), tree,
+                            is_leaf=lambda x: isinstance(x, tuple))
+    layers_specs = [stack(blocks.block_cache_logical_specs(s))
+                    for s in cfg.period]
+    shared = (stack(blocks.block_cache_logical_specs(cfg.shared))
+              if cfg.shared is not None else None)
+    return {"layers": layers_specs, "shared": shared}
+
+
+def _decode_cross(p, x, cache, spec):
+    """Cross-attn decode against precomputed K/V."""
+    h = layers.rmsnorm(p["norm1"], x)
+    b = x.shape[0]
+    dh = spec.attn.dh
+    q = layers.linear(p["mixer"]["q"], h).reshape(b, 1, spec.attn.num_heads, dh)
+    out = attn_mod.attend(q, cache["k"], cache["v"], causal=False,
+                          softcap=spec.attn.attn_softcap)
+    h = layers.linear(p["mixer"]["o"], out.reshape(b, 1, -1))
+    if spec.gated_cross:
+        h = h * jnp.tanh(p["gate_attn"]).astype(h.dtype)
+    x = x + h
+    if spec.ffn != "none":
+        h = layers.rmsnorm(p["norm2"], x)
+        h, _ = blocks._ffn_apply(p, spec, h)
+        if spec.gated_cross:
+            h = h * jnp.tanh(p["gate_ffn"]).astype(h.dtype)
+        x = x + h
+    return x
+
+
+def decode_step(params, token, caches, index, cfg: ModelConfig, *,
+                logits_constraint=None):
+    """token: (B, 1) int32, index: scalar int32 position. Returns
+    (logits (B, 1, V) fp32, new_caches)."""
+    x = layers.embedding_lookup(params["embed"], token,
+                                scale_by_sqrt_dim=cfg.embed_scale)
+    shared_p = params.get("shared")
+
+    def body(x, inp):
+        layer_p, cache, shared_c = inp
+        new_caches = []
+        for j, spec in enumerate(cfg.period):
+            if spec.mixer == "cross_attn":
+                x = _decode_cross(layer_p[j], x, cache[j], spec)
+                new_caches.append(cache[j])
+            else:
+                x, c = blocks.block_decode(
+                    layer_p[j], x, cache[j], index, spec,
+                    logits_constraint=logits_constraint)
+                new_caches.append(c)
+        if shared_p is not None:
+            x, shared_c = blocks.block_decode(
+                shared_p, x, shared_c, index, cfg.shared,
+                logits_constraint=logits_constraint)
+        return x, (tuple(new_caches), shared_c)
+
+    x, new = jax.lax.scan(
+        body, x,
+        (tuple(params["layers"]), tuple(caches["layers"]), caches["shared"]),
+        unroll=cfg.repeats if cfg.scan_unroll else 1)
+    x = layers.rmsnorm(params["final_norm"], x)
+    logits = logits_fn(params, x, cfg)
+    return logits, {"layers": list(new[0]), "shared": new[1]}

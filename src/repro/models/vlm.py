@@ -1,0 +1,28 @@
+"""Vision-language backbone (llama-3.2-vision style).
+
+The vision tower is a STUB per the brief: ``input_specs()`` provides
+precomputed patch embeddings (B, n_patches, vision_dim) which feed the
+tanh-gated cross-attention layers interleaved in the decoder (period of
+five: four self-attention blocks + one gated cross-attention block, giving
+the 4:1 self:cross ratio of the released checkpoints).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def vlm_loss(params, batch, cfg: lm.ModelConfig, *, act_constraint=None):
+    """batch: dict(tokens, labels, patches=(B, P, vision_dim))."""
+    return lm.lm_loss(params, batch, cfg, cross_kv=batch["patches"],
+                      act_constraint=act_constraint)
+
+
+def init_decode_caches(params, cfg: lm.ModelConfig, patches, batch: int,
+                       max_len: int):
+    return lm.init_caches(params, cfg, batch, max_len,
+                          cross_src=patches.astype(cfg.dtype))
+
+
+decode_step = lm.decode_step

@@ -1,0 +1,2 @@
+"""Pure-JAX neural-network substrate (no flax): functional layers over pytrees."""
+from repro.nn import attention, gru, init, layers, moe, ssm  # noqa: F401

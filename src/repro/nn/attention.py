@@ -1,0 +1,356 @@
+"""Attention: GQA with RoPE, causal / sliding-window masks, logit softcap,
+cross-attention, and a KV-cache decode path.
+
+Shapes
+------
+* activations  x : (B, T, d_model)
+* q            : (B, T, H, Dh)
+* k, v         : (B, T, Hkv, Dh)   with H % Hkv == 0 (GQA)
+* KV cache     : dict(k=(B, S, Hkv, Dh), v=(B, S, Hkv, Dh), index=())
+
+All matmuls accumulate in fp32. The jnp reference path here is the XLA
+implementation used by the dry-run/roofline; the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU fast path with the same
+semantics (validated against :func:`attend` in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    rope_theta: float = 10_000.0
+    use_qkv_bias: bool = False              # qwen-style
+    sliding_window: Optional[int] = None    # gemma2 local layers
+    attn_softcap: Optional[float] = None    # gemma2 logit soft-capping
+    causal: bool = True                     # False for encoder self-attn
+    dtype: object = jnp.bfloat16
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(dh: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (dh//2,), fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float) -> jax.Array:
+    """x: (B, T, H, Dh); positions: (B, T) or (T,) int32."""
+    dh = x.shape[-1]
+    inv_freq = rope_frequencies(dh, theta)                      # (Dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq   # (B, T, Dh/2)
+    sin = jnp.sin(ang)[:, :, None, :]                           # (B, T, 1, Dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def attention_init(key, cfg: AttentionConfig):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dh = cfg.dh
+    return {
+        "q": layers.linear_init(kq, cfg.d_model, cfg.num_heads * dh,
+                                use_bias=cfg.use_qkv_bias, dtype=cfg.dtype),
+        "k": layers.linear_init(kk, cfg.d_model, cfg.num_kv_heads * dh,
+                                use_bias=cfg.use_qkv_bias, dtype=cfg.dtype),
+        "v": layers.linear_init(kv, cfg.d_model, cfg.num_kv_heads * dh,
+                                use_bias=cfg.use_qkv_bias, dtype=cfg.dtype),
+        "o": layers.linear_init(ko, cfg.num_heads * dh, cfg.d_model,
+                                use_bias=False, dtype=cfg.dtype),
+    }
+
+
+def attention_logical_specs(cfg: AttentionConfig):
+    qspec = {"w": ("embed", "heads")}
+    kvspec = {"w": ("embed", "kv_heads")}
+    if cfg.use_qkv_bias:
+        qspec = {"w": ("embed", "heads"), "b": ("heads",)}
+        kvspec = {"w": ("embed", "kv_heads"), "b": ("kv_heads",)}
+    return {"q": qspec, "k": dict(kvspec), "v": dict(kvspec),
+            "o": {"w": ("heads", "embed")}}
+
+
+# ---------------------------------------------------------------------------
+# Core attend (the jnp oracle; flash kernel mirrors this)
+# ---------------------------------------------------------------------------
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    b, t, hkv, dh = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, hkv, groups, dh)) \
+              .reshape(b, t, hkv * groups, dh)
+
+
+def make_mask(q_len: int, kv_len: int, *, causal: bool,
+              sliding_window: Optional[int], q_offset,
+              kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean mask (q_len, kv_len); True = attend.
+
+    ``kv_positions`` overrides the default contiguous key positions — used
+    by the ring-buffer decode cache, where slot order is rotated and slots
+    holding stale/unwritten entries carry position -1.
+    """
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    if kv_positions is None:
+        k_pos = jnp.arange(kv_len)[None, :]
+        mask = jnp.ones((q_len, kv_len), bool)
+    else:
+        k_pos = kv_positions[None, :]
+        mask = k_pos >= 0
+    if causal:
+        mask &= k_pos <= q_pos
+    if sliding_window is not None:
+        mask &= k_pos > q_pos - sliding_window
+    return mask
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool = True,
+           sliding_window: Optional[int] = None,
+           softcap: Optional[float] = None,
+           q_offset=0,
+           kv_positions: Optional[jax.Array] = None) -> jax.Array:
+    """Scaled dot-product attention with GQA broadcast.
+
+    q: (B, Tq, H, Dh); k, v: (B, Tk, Hkv, Dh). Returns (B, Tq, H, Dh).
+    """
+    b, tq, h, dh = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = make_mask(tq, k.shape[1], causal=causal,
+                     sliding_window=sliding_window, q_offset=q_offset,
+                     kv_positions=kv_positions)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)
+
+
+def attend_chunked(q, k, v, *, causal: bool = True,
+                   sliding_window: Optional[int] = None,
+                   softcap: Optional[float] = None,
+                   block_k: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention in pure XLA: scans key blocks
+    carrying (running max, normalizer, accumulator), so the (T×T) score
+    matrix is never materialized — the jit/dry-run analogue of the Pallas
+    flash kernel (same FLOPs, O(T·block_k) memory)."""
+    b, tq, h, dh = q.shape
+    hkv = k.shape[2]
+    tk = k.shape[1]
+    if tk % block_k != 0:
+        return attend(q, k, v, causal=causal, sliding_window=sliding_window,
+                      softcap=softcap)
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    nk = tk // block_k
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    kb = jnp.moveaxis(k.reshape(b, nk, block_k, h, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, block_k, h, dh), 1, 0)
+    q_pos = jnp.arange(tq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ki = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ki * block_k + jnp.arange(block_k)
+        mask = jnp.ones((tq, block_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if sliding_window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - sliding_window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, tq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, tq), jnp.float32)
+    a0 = jnp.zeros((b, h, tq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full layers
+# ---------------------------------------------------------------------------
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[0], x.shape[1], n, dh)
+
+
+def self_attention(params, x, cfg: AttentionConfig, *, positions=None,
+                   use_flash: bool = False):
+    """Prefill / training self-attention. x: (B, T, d_model)."""
+    b, t, _ = x.shape
+    dh = cfg.dh
+    q = _split_heads(layers.linear(params["q"], x), cfg.num_heads, dh)
+    k = _split_heads(layers.linear(params["k"], x), cfg.num_kv_heads, dh)
+    v = _split_heads(layers.linear(params["v"], x), cfg.num_kv_heads, dh)
+    if positions is None:
+        positions = jnp.arange(t)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    if use_flash:
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(
+            q, k, v, causal=cfg.causal, sliding_window=cfg.sliding_window,
+            softcap=cfg.attn_softcap)
+    elif t >= 2048:
+        # flash-equivalent XLA path: never materializes the (T, T) scores
+        out = attend_chunked(q, k, v, causal=cfg.causal,
+                             sliding_window=cfg.sliding_window,
+                             softcap=cfg.attn_softcap)
+    else:
+        out = attend(q, k, v, causal=cfg.causal,
+                     sliding_window=cfg.sliding_window,
+                     softcap=cfg.attn_softcap)
+    return layers.linear(params["o"], out.reshape(b, t, cfg.num_heads * dh))
+
+
+def init_kv_cache(cfg: AttentionConfig, batch: int, max_len: int,
+                  dtype=None):
+    """Position-tracking KV cache.
+
+    ``max_len`` may be smaller than the sequence length, in which case the
+    cache is a ring buffer (sliding-window layers allocate only
+    ``window`` slots). ``pos`` records the absolute position stored in each
+    slot (-1 = empty); attention masks are derived from it, so the rotated
+    slot order of the ring is immaterial (softmax is order-invariant).
+    """
+    dtype = dtype or cfg.dtype
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.dh), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.num_kv_heads, cfg.dh), dtype),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+    }
+
+
+def decode_self_attention(params, x, cache, cache_index, cfg: AttentionConfig,
+                          *, logits_constraint=None):
+    """One-token decode. x: (B, 1, d_model); cache_index: scalar int32
+    (absolute position of the new token). Returns (out, new_cache).
+    RoPE is applied to K at write time, so cached keys are position-final.
+
+    ``logits_constraint``: optional sharding constraint applied to the
+    (B, H, 1, slots) attention logits. When the cache sequence axis is
+    mesh-sharded, constraining the logits to the SAME sharding makes the
+    partitioner run a distributed softmax (small all-reduces of the
+    per-shard max/sum and the PV partials) instead of all-gathering the
+    whole K/V cache per layer — the decode §Perf fix.
+    """
+    b = x.shape[0]
+    dh = cfg.dh
+    slots = cache["k"].shape[1]
+    q = _split_heads(layers.linear(params["q"], x), cfg.num_heads, dh)
+    k = _split_heads(layers.linear(params["k"], x), cfg.num_kv_heads, dh)
+    v = _split_heads(layers.linear(params["v"], x), cfg.num_kv_heads, dh)
+    pos = jnp.full((1,), cache_index, jnp.int32)
+    q = apply_rope(q, pos, theta=cfg.rope_theta)
+    k = apply_rope(k, pos, theta=cfg.rope_theta)
+    slot = jax.lax.rem(cache_index, slots)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos, slot, axis=0)
+    if logits_constraint is None:
+        out = attend(q, new_k, new_v, causal=True,
+                     sliding_window=cfg.sliding_window,
+                     softcap=cfg.attn_softcap,
+                     q_offset=cache_index,
+                     kv_positions=new_pos)
+    else:
+        out = _attend_decode_sharded(
+            q, new_k, new_v, cfg, cache_index, new_pos, logits_constraint)
+    out = layers.linear(params["o"], out.reshape(b, 1, cfg.num_heads * dh))
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def _attend_decode_sharded(q, k, v, cfg: AttentionConfig, cache_index,
+                           kv_positions, logits_constraint):
+    """attend() with an explicit distributed softmax over the (sharded)
+    cache sequence axis: identical math, but the logits/probs tensors are
+    sharding-constrained so reductions lower to small all-reduces."""
+    b, tq, h, dh = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if cfg.attn_softcap is not None:
+        logits = cfg.attn_softcap * jnp.tanh(logits / cfg.attn_softcap)
+    mask = make_mask(tq, k.shape[1], causal=True,
+                     sliding_window=cfg.sliding_window, q_offset=cache_index,
+                     kv_positions=kv_positions)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    logits = logits_constraint(logits)
+    m = jnp.max(logits, axis=-1, keepdims=True)              # all-reduce max
+    p = logits_constraint(jnp.exp(logits - m))
+    s = jnp.sum(p, axis=-1, keepdims=True)                   # all-reduce sum
+    pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(q.dtype), v,
+                    preferred_element_type=jnp.float32)       # psum partials
+    return (pv / jnp.moveaxis(s, 1, 2).astype(pv.dtype)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder, llama-vision image layers)
+# ---------------------------------------------------------------------------
+def cross_attention_init(key, cfg: AttentionConfig, kv_dim: Optional[int] = None):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dh = cfg.dh
+    kv_dim = kv_dim or cfg.d_model
+    return {
+        "q": layers.linear_init(kq, cfg.d_model, cfg.num_heads * dh, dtype=cfg.dtype),
+        "k": layers.linear_init(kk, kv_dim, cfg.num_kv_heads * dh, dtype=cfg.dtype),
+        "v": layers.linear_init(kv, kv_dim, cfg.num_kv_heads * dh, dtype=cfg.dtype),
+        "o": layers.linear_init(ko, cfg.num_heads * dh, cfg.d_model, dtype=cfg.dtype),
+    }
+
+
+def cross_attention(params, x, kv_src, cfg: AttentionConfig):
+    """x: (B, Tq, d_model); kv_src: (B, Tk, kv_dim). No RoPE, no mask."""
+    b, tq, _ = x.shape
+    dh = cfg.dh
+    q = _split_heads(layers.linear(params["q"], x), cfg.num_heads, dh)
+    k = _split_heads(layers.linear(params["k"], kv_src), cfg.num_kv_heads, dh)
+    v = _split_heads(layers.linear(params["v"], kv_src), cfg.num_kv_heads, dh)
+    out = attend(q, k, v, causal=False, softcap=cfg.attn_softcap)
+    return layers.linear(params["o"], out.reshape(b, tq, cfg.num_heads * dh))

@@ -1,0 +1,81 @@
+"""GRU (Cho et al., 2014) — the paper's AIP/policy recurrent core.
+
+Functional cell + ``lax.scan`` sequence application. The Pallas kernel in
+``repro.kernels.gru`` fuses the gate matmuls + elementwise updates per step;
+this module is the jnp oracle and the default CPU path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class GRUConfig:
+    in_dim: int
+    hidden: int
+    dtype: object = jnp.float32
+
+
+def gru_init(key, cfg: GRUConfig):
+    ki, kh = jax.random.split(key)
+    # Fused gates: [reset | update | candidate] along the output axis.
+    return {
+        "wi": initializers.fan_in_normal(0)(ki, (cfg.in_dim, 3 * cfg.hidden), cfg.dtype),
+        "wh": initializers.orthogonal()(kh, (cfg.hidden, 3 * cfg.hidden), cfg.dtype),
+        "bi": jnp.zeros((3 * cfg.hidden,), cfg.dtype),
+        "bh": jnp.zeros((3 * cfg.hidden,), cfg.dtype),
+    }
+
+
+def gru_logical_specs(cfg: GRUConfig):
+    return {"wi": ("embed", "mlp"), "wh": ("mlp", "mlp"),
+            "bi": ("mlp",), "bh": ("mlp",)}
+
+
+def gru_cell(params, h, x):
+    """One step. h: (B, H); x: (B, in_dim). Returns new h."""
+    hidden = h.shape[-1]
+    gi = layers.dot(x, params["wi"]) + params["bi"].astype(x.dtype)
+    gh = layers.dot(h, params["wh"]) + params["bh"].astype(h.dtype)
+    i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
+    h_r, h_z, h_n = jnp.split(gh, 3, axis=-1)
+    r = jax.nn.sigmoid((i_r + h_r).astype(jnp.float32))
+    z = jax.nn.sigmoid((i_z + h_z).astype(jnp.float32))
+    n = jnp.tanh((i_n + r * h_n).astype(jnp.float32))
+    new_h = (1.0 - z) * n + z * h.astype(jnp.float32)
+    del hidden
+    return new_h.astype(h.dtype)
+
+
+def gru_sequence(params, xs, h0=None, *, reset_mask=None):
+    """xs: (B, T, in_dim) -> hs: (B, T, H).
+
+    ``reset_mask`` (B, T) of {0,1}: 1 resets the hidden state *before*
+    consuming that step's input (episode boundaries in rollouts).
+    """
+    b, t, _ = xs.shape
+    hidden = params["wh"].shape[0]
+    if h0 is None:
+        h0 = jnp.zeros((b, hidden), xs.dtype)
+
+    def step(h, inp):
+        x, m = inp
+        if m is not None:
+            h = h * (1.0 - m[:, None].astype(h.dtype))
+        h = gru_cell(params, h, x)
+        return h, h
+
+    xs_t = jnp.swapaxes(xs, 0, 1)                     # (T, B, in)
+    ms_t = (jnp.swapaxes(reset_mask, 0, 1)
+            if reset_mask is not None else [None] * 0)
+    if reset_mask is None:
+        h_last, hs = jax.lax.scan(lambda h, x: step(h, (x, None)), h0, xs_t)
+    else:
+        h_last, hs = jax.lax.scan(step, h0, (xs_t, ms_t))
+    return jnp.swapaxes(hs, 0, 1), h_last

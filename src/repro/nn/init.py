@@ -1,0 +1,61 @@
+"""Parameter initializers.
+
+Every initializer takes (key, shape, dtype) and returns an array. We keep
+initialization deterministic given a seed so elastic restarts / resharding
+tests can re-derive identical params.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(stddev: float = 1.0):
+    def f(key, shape, dtype=jnp.float32):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+    return f
+
+
+def truncated_normal(stddev: float = 1.0):
+    def f(key, shape, dtype=jnp.float32):
+        x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+        return (stddev * x).astype(dtype)
+
+    return f
+
+
+def fan_in_normal(axis: int = 0):
+    """He-style init with stddev = 1/sqrt(fan_in) along ``axis``."""
+
+    def f(key, shape, dtype=jnp.float32):
+        fan_in = shape[axis]
+        return truncated_normal(1.0 / math.sqrt(max(fan_in, 1)))(key, shape, dtype)
+
+    return f
+
+
+def orthogonal(scale: float = 1.0):
+    def f(key, shape, dtype=jnp.float32):
+        if len(shape) < 2:
+            return normal(scale)(key, shape, dtype)
+        rows, cols = shape[-2], shape[-1]
+        n = max(rows, cols)
+        flat = jax.random.normal(key, shape[:-2] + (n, n), jnp.float32)
+        q, r = jnp.linalg.qr(flat)
+        q = q * jnp.sign(jnp.diagonal(r, axis1=-2, axis2=-1))[..., None, :]
+        return (scale * q[..., :rows, :cols]).astype(dtype)
+
+    return f
+
+
+def zeros(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype=jnp.float32):
+    del key
+    return jnp.ones(shape, dtype)

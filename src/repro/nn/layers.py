@@ -1,0 +1,166 @@
+"""Core functional layers.
+
+Conventions
+-----------
+* A layer is a pair of functions: ``<name>_init(key, ...) -> params`` and
+  ``<name>(params, x, ...) -> y``. Params are plain dicts of jnp arrays.
+* Alongside params, model code builds a parallel *logical-spec tree* (same
+  structure, leaves are tuples of logical axis names or None) consumed by
+  ``repro.distributed.mesh.logical_to_sharding``.
+* Matmuls accumulate in fp32 (``preferred_element_type``) and cast back to
+  the activation dtype — matches MXU behaviour on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+
+
+def dot(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Matmul with fp32 accumulation, output cast to x.dtype."""
+    y = jax.lax.dot_general(
+        x,
+        w,
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+def linear_init(key, in_dim: int, out_dim: int, *, use_bias: bool = False,
+                dtype=jnp.bfloat16, w_init=None):
+    w_init = w_init or initializers.fan_in_normal(axis=0)
+    params = {"w": w_init(key, (in_dim, out_dim), dtype)}
+    if use_bias:
+        params["b"] = jnp.zeros((out_dim,), dtype)
+    return params
+
+
+def linear(params, x):
+    y = dot(x, params["w"])
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    # Norm scales stay fp32: they are tiny and precision-sensitive.
+    return {"scale": jnp.zeros((dim,), dtype)}  # "zero-centered": scale = 1 + s
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"])).astype(dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.bfloat16, stddev: float = 1.0):
+    return {"table": initializers.normal(stddev)(key, (vocab, dim), dtype)}
+
+
+def embedding_lookup(params, ids, *, scale_by_sqrt_dim: bool = False):
+    table = params["table"]
+    y = jnp.take(table, ids, axis=0)
+    if scale_by_sqrt_dim:
+        y = y * jnp.sqrt(jnp.asarray(table.shape[-1], jnp.float32)).astype(y.dtype)
+    return y
+
+
+def embedding_logits(params, x):
+    """Tied unembedding: x @ table.T with fp32 accumulation, fp32 output."""
+    table = params["table"]
+    return jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "swiglu"  # swiglu | gelu
+    use_bias: bool = False
+    dtype: object = jnp.bfloat16
+
+
+def mlp_init(key, cfg: MLPConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.activation == "swiglu":
+        return {
+            "gate": linear_init(k1, cfg.d_model, cfg.d_ff, use_bias=cfg.use_bias, dtype=cfg.dtype),
+            "up": linear_init(k2, cfg.d_model, cfg.d_ff, use_bias=cfg.use_bias, dtype=cfg.dtype),
+            "down": linear_init(k3, cfg.d_ff, cfg.d_model, use_bias=cfg.use_bias, dtype=cfg.dtype,
+                                 w_init=initializers.fan_in_normal(axis=0)),
+        }
+    return {
+        "up": linear_init(k1, cfg.d_model, cfg.d_ff, use_bias=cfg.use_bias, dtype=cfg.dtype),
+        "down": linear_init(k2, cfg.d_ff, cfg.d_model, use_bias=cfg.use_bias, dtype=cfg.dtype),
+    }
+
+
+def mlp(params, x, *, activation: str = "swiglu"):
+    if activation == "swiglu":
+        h = swiglu(linear(params["gate"], x), linear(params["up"], x))
+    else:
+        h = gelu(linear(params["up"], x))
+    return linear(params["down"], h)
+
+
+def mlp_logical_specs(cfg: MLPConfig):
+    """Logical axes for mlp params (parallel tree)."""
+    two = {"w": ("embed", "mlp")}
+    down = {"w": ("mlp", "embed")}
+    if cfg.use_bias:
+        two = {"w": ("embed", "mlp"), "b": ("mlp",)}
+        down = {"w": ("mlp", "embed"), "b": ("embed",)}
+    if cfg.activation == "swiglu":
+        return {"gate": dict(two), "up": dict(two), "down": dict(down)}
+    return {"up": dict(two), "down": dict(down)}

@@ -1,0 +1,211 @@
+"""Mixture-of-Experts: top-k token-choice router with capacity, einsum
+dispatch/combine (Switch/Mesh-style), expert-parallel over the ``expert``
+logical axis.
+
+Design notes (TPU adaptation)
+-----------------------------
+* Experts are stacked along a leading E axis and sharded over the ``model``
+  mesh axis (expert parallelism). Dispatch/combine are einsums against
+  one-hot tensors, which XLA lowers to all-to-all when the token and expert
+  shardings differ — no manual collective needed for the dry-run path.
+* Capacity factor bounds per-expert work so the kernel is static-shaped
+  (required for jit) and gives the classic dropped-token semantics.
+* Router runs in fp32; auxiliary load-balancing loss (Shazeer et al.) and
+  router z-loss (ST-MoE) are returned for the trainer to weigh in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                     # per-expert hidden
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "swiglu"
+    dtype: object = jnp.bfloat16
+    # "dense": one-hot einsum dispatch (Switch/Mesh style — O(N·E·C·d)
+    # extra matmul FLOPs). "gather": scatter/gather routing — removes the
+    # dispatch matmuls entirely (§Perf hillclimb; same semantics).
+    dispatch: str = "dense"
+    # gather path only: route/capacity computed per token-group (groups =
+    # contiguous batch slices = the data shards). Keeps the position scan
+    # and the capacity buffers SHARDED over the data axis instead of one
+    # global buffer the SPMD partitioner must replicate. 1 = global.
+    token_shards: int = 1
+
+    def capacity(self, tokens: int) -> int:
+        cap = int(math.ceil(tokens * self.top_k / self.num_experts
+                            * self.capacity_factor))
+        # MXU-friendly: round up to a multiple of 8, min 8.
+        return max(8, -(-cap // 8) * 8)
+
+
+def moe_init(key, cfg: MoEConfig):
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    e, dm, df = cfg.num_experts, cfg.d_model, cfg.d_ff
+    w_in = initializers.fan_in_normal(axis=1)   # fan-in = d_model (axis 1 of (E, dm, df))
+    w_out = initializers.fan_in_normal(axis=1)  # fan-in = d_ff
+    params = {
+        "router": initializers.truncated_normal(dm ** -0.5)(kr, (dm, e), jnp.float32),
+        "up": w_in(ku, (e, dm, df), cfg.dtype),
+        "down": w_out(kd, (e, df, dm), cfg.dtype),
+    }
+    if cfg.activation == "swiglu":
+        params["gate"] = w_in(kg, (e, dm, df), cfg.dtype)
+    return params
+
+
+def moe_logical_specs(cfg: MoEConfig):
+    specs = {
+        "router": ("embed", None),
+        "up": ("expert", "embed", "mlp"),
+        "down": ("expert", "mlp", "embed"),
+    }
+    if cfg.activation == "swiglu":
+        specs["gate"] = ("expert", "embed", "mlp")
+    return specs
+
+
+def router_probs(params, x, cfg: MoEConfig):
+    """x: (..., d_model) -> router probabilities (..., E), fp32."""
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32),
+                        params["router"])
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def _route(params, xf, cfg: MoEConfig):
+    """Shared router math: returns (top_w, top_e, pos, keep, aux)."""
+    tokens = xf.shape[0]
+    probs, logits = router_probs(params, xf, cfg)            # (N, E)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)           # (N, k)
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = cfg.capacity(tokens)
+    e = cfg.num_experts
+    # Position of each (token, k) within its chosen expert's buffer.
+    # associative_scan, NOT jnp.cumsum: the reduce-window lowering of
+    # cumsum over N·k rows costs O((N·k)^2) in the XLA cost model (and on
+    # some backends in practice); the log-depth scan is O(N·k·E·log).
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)       # (N, k, E)
+    flat = onehot.reshape(tokens * cfg.top_k, e)
+    pos = jax.lax.associative_scan(jnp.add, flat, axis=0) - flat
+    pos = (pos * flat).sum(-1).reshape(tokens, cfg.top_k)    # (N, k)
+    keep = pos < cap
+
+    me = probs.mean(0)
+    ce = (jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32)).mean(0)
+    aux = {"load_balance": e * jnp.sum(me * ce),
+           "z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)}
+    return top_w, top_e, pos, keep, cap, aux
+
+
+def _expert_mlp(params, xe, cfg: MoEConfig):
+    """xe: (E, C, dm) -> (E, C, dm), batched over experts."""
+    up = jnp.einsum("ecd,edf->ecf", xe, params["up"],
+                    preferred_element_type=jnp.float32).astype(xe.dtype)
+    if cfg.activation == "swiglu":
+        gate = jnp.einsum("ecd,edf->ecf", xe, params["gate"],
+                          preferred_element_type=jnp.float32).astype(xe.dtype)
+        h = layers.swiglu(gate, up)
+    else:
+        h = layers.gelu(up)
+    return jnp.einsum("ecf,efd->ecd", h, params["down"],
+                      preferred_element_type=jnp.float32).astype(xe.dtype)
+
+
+def moe_layer(params, x, cfg: MoEConfig):
+    """x: (B, T, d_model) -> (y, aux) with aux = {load_balance, z_loss}.
+
+    Token-choice top-k with capacity; dropped tokens pass through (their
+    combine weights are zero, so the residual carries them).
+    """
+    if cfg.dispatch == "gather":
+        return moe_layer_gather(params, x, cfg)
+    b, t, dm = x.shape
+    tokens = b * t
+    xf = x.reshape(tokens, dm)
+    top_w, top_e, pos, keep, cap, aux = _route(params, xf, cfg)
+    e = cfg.num_experts
+
+    # dispatch: (N, E, C) one-hot; combine: dispatch * weight
+    disp = (jax.nn.one_hot(top_e, e, dtype=xf.dtype)[..., None]
+            * jax.nn.one_hot(pos, cap, dtype=xf.dtype)[:, :, None, :]
+            * keep[..., None, None].astype(xf.dtype))        # (N, k, E, C)
+    combine = (disp * top_w[..., None, None].astype(xf.dtype)).sum(1)
+    disp = disp.sum(1)                                       # (N, E, C)
+
+    # Route tokens to expert buffers: (E, C, dm)
+    xe = jnp.einsum("nec,nd->ecd", disp, xf,
+                    preferred_element_type=jnp.float32).astype(xf.dtype)
+    ye = _expert_mlp(params, xe, cfg)
+    y = jnp.einsum("nec,ecd->nd", combine, ye,
+                   preferred_element_type=jnp.float32).astype(xf.dtype)
+    return y.reshape(b, t, dm), aux
+
+
+def moe_layer_gather(params, x, cfg: MoEConfig):
+    """Same semantics as :func:`moe_layer`, but the dispatch/combine are a
+    row scatter and a row gather instead of one-hot matmuls.
+
+    The dense dispatch costs 2·N·E·C·d extra matmul FLOPs per layer
+    (N·E·C·d each way); with fine-grained experts (granite: d_ff=512,
+    E=32) that exceeds the expert MLP compute itself (ratio
+    N / (3·d_ff) ≈ 2.7). The scatter/gather form moves O(N·k·d) bytes and
+    adds zero matmul FLOPs; each buffer slot receives at most one token
+    (positions are unique by construction), so a "drop"-mode scatter-set
+    is exact — no accumulation order ambiguity.
+    """
+    b, t, dm = x.shape
+    tokens = b * t
+    e = cfg.num_experts
+    # group count falls back to 1 when tokens don't split (tiny smoke
+    # shapes, single-token decode)
+    s = cfg.token_shards if tokens % cfg.token_shards == 0 else 1
+    n_loc = tokens // s
+    # token groups are contiguous batch slices — exactly the data shards
+    # when batch is sharded over ("pod","data")
+    xg = x.reshape(s, n_loc, dm)
+
+    # per-group routing (group-local positions and capacity)
+    def route_group(xs):
+        top_w, top_e, pos, keep, _cap, aux = _route(params, xs, cfg)
+        return top_w, top_e, pos, keep, aux
+    top_w, top_e, pos, keep, aux = jax.vmap(route_group)(xg)
+    aux = jax.tree.map(jnp.mean, aux)
+    cap = cfg.capacity(n_loc)
+
+    # buffer slot for every (group, token, k): e*C + c; dropped -> OOB
+    slot = jnp.where(keep, top_e * cap + pos, e * cap)       # (S, n, k)
+    flat_slot = slot.reshape(s, -1)                          # (S, n*k)
+    token_idx = jnp.repeat(jnp.arange(n_loc), cfg.top_k)     # (n*k,)
+
+    def disp(xs, sl):
+        # xs (n, dm); sl (n*k,) -> (E, C, dm); unique slots, OOB drops
+        return jnp.zeros((e * cap, dm), xs.dtype) \
+            .at[sl].set(xs[token_idx], mode="drop") \
+            .reshape(e, cap, dm)
+    xe = jax.vmap(disp)(xg, flat_slot)                       # (S, E, C, dm)
+
+    ye = jax.vmap(lambda v: _expert_mlp(params, v, cfg))(xe) \
+        .reshape(s, e * cap, dm)
+
+    def comb(ys, sl, w):
+        ye_pad = jnp.concatenate([ys, jnp.zeros((1, dm), ys.dtype)], axis=0)
+        rows = ye_pad[sl].reshape(n_loc, cfg.top_k, dm)      # (n, k, dm)
+        return jnp.einsum("nk,nkd->nd", w, rows,
+                          preferred_element_type=jnp.float32)
+    w = (top_w * keep).reshape(s, n_loc, cfg.top_k).astype(ye.dtype)
+    y = jax.vmap(comb)(ye, flat_slot, w).astype(x.dtype)
+    return y.reshape(b, t, dm), aux

@@ -1,0 +1,254 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked parallel form for
+train/prefill and the O(1)-state recurrent form for decode.
+
+TPU adaptation: the chunked algorithm (Dao & Gu 2024) is the natural fit for
+the MXU — each chunk is a (L×L)·(L×P) block matmul; the inter-chunk
+recurrence is a short ``lax.scan`` over T/L steps carrying the (H, P, N)
+state. The Pallas kernel in ``repro.kernels.ssd`` fuses the intra-chunk
+block; this module is the jnp oracle.
+
+Shapes: x (B, T, d_model); inner activations (B, T, H, P) with
+H = d_inner // head_dim heads, P = head_dim, N = ssm state size.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import init as initializers
+from repro.nn import layers
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    state: int = 128            # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 128            # SSD chunk length
+    dtype: object = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key, cfg: SSMConfig):
+    kin, kconv, kdt, kout = jax.random.split(key, 4)
+    di, n, h = cfg.d_inner, cfg.state, cfg.num_heads
+    # in_proj -> [z (di), x (di), B (n), C (n), dt (h)]
+    proj_out = 2 * di + 2 * n + h
+    conv_ch = di + 2 * n          # conv over x, B, C
+    return {
+        "in_proj": initializers.fan_in_normal(0)(
+            kin, (cfg.d_model, proj_out), cfg.dtype),
+        "conv_w": initializers.fan_in_normal(0)(
+            kconv, (cfg.conv_width, conv_ch), cfg.dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(                       # inv-softplus of ~1e-2..1e-1
+            jnp.linspace(1e-3, 1e-1, h, dtype=jnp.float32))),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": layers.rmsnorm_init(di),
+        "out_proj": initializers.fan_in_normal(0)(
+            kout, (di, cfg.d_model), cfg.dtype),
+        "dt_w": initializers.fan_in_normal(0)(kdt, (1,), jnp.float32),  # placeholder keeps tree static
+    }
+
+
+def ssm_logical_specs(cfg: SSMConfig):
+    return {
+        "in_proj": ("embed", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "norm": {"scale": ("mlp",)},
+        "out_proj": ("mlp", "embed"),
+        "dt_w": (None,),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+def causal_conv1d(x, w, b):
+    """x: (B, T, C); w: (W, C) depthwise; left-pad so output is causal."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # Sum of shifted slices — unrolled, W is tiny (4).
+    t = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + t, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+def _segsum(a):
+    """a: (..., L). Returns (..., L, L) with out[i,j] = sum_{k=j+1..i} a_k
+    (i >= j), -inf elsewhere — so exp() gives the decay matrix."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, *, chunk: int, initial_state=None):
+    """Chunked SSD.
+
+    x : (B, T, H, P)   inputs (pre-multiplied by nothing; dt applied here)
+    dt: (B, T, H)      positive step sizes
+    a : (H,)           negative per-head decay rates
+    b : (B, T, N)      input projection (shared across heads)
+    c : (B, T, N)      output projection (shared across heads)
+
+    Returns (y, final_state) with y (B, T, H, P), state (B, H, P, N).
+    """
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, f"T={t} must be divisible by chunk={chunk}"
+    nc = t // chunk
+
+    # dt-discretize: per-step log decay and effective input weight.
+    la = dt * a[None, None, :]                       # (B,T,H) log decay  (<0)
+    xw = x * dt[..., None].astype(x.dtype)           # dt * x
+
+    def ck(v):  # (B, T, ...) -> (B, nc, chunk, ...)
+        return v.reshape((bsz, nc, chunk) + v.shape[2:])
+
+    xc, lac, bc, cc = ck(xw), ck(la), ck(b), ck(c)
+    lac = jnp.moveaxis(lac, -1, 2)                   # (B, nc, H, L)
+    cs = jnp.cumsum(lac, axis=-1)                    # inclusive cumsum
+
+    # 1. Intra-chunk (diagonal blocks): y_i += C_i·B_j exp(cs_i-cs_j) x_j
+    decay = jnp.exp(_segsum(lac))                    # (B, nc, H, L, L)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc.astype(jnp.float32),
+                    bc.astype(jnp.float32))          # (B, nc, L, L)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", cb, decay,
+                        xc.astype(jnp.float32))
+
+    # 2. Per-chunk end states: S_c = sum_j exp(cs_L - cs_j) B_j x_j^T
+    decay_states = jnp.exp(cs[..., -1:] - cs)        # (B, nc, H, L)
+    states = jnp.einsum("bcjn,bchj,bcjhp->bchpn", bc.astype(jnp.float32),
+                        decay_states, xc.astype(jnp.float32))
+
+    # 3. Inter-chunk recurrence over nc chunks.
+    chunk_decay = jnp.exp(cs[..., -1])               # (B, nc, H)
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(s, inp):
+        st, dec = inp                                # (B,H,P,N), (B,H)
+        prev = s
+        s = s * dec[..., None, None] + st
+        return s, prev
+
+    st_t = jnp.moveaxis(states, 1, 0)                # (nc, B, H, P, N)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)          # (nc, B, H)
+    final, prev_states = jax.lax.scan(step, initial_state.astype(jnp.float32),
+                                      (st_t, dec_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (B, nc, H, P, N)
+
+    # 4. Inter-chunk output: y_i += C_i · S_prev * exp(cs_i)
+    out_decay = jnp.exp(cs)                          # (B, nc, H, L)
+    y_off = jnp.einsum("bcin,bchpn,bchi->bcihp", cc.astype(jnp.float32),
+                       prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(bsz, t, h, p).astype(x.dtype)
+    return y, final
+
+
+def ssd_recurrent_step(state, x, dt, a, b, c):
+    """One decode step. state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    b, c: (B,N). Returns (y, new_state)."""
+    dec = jnp.exp(dt * a[None, :])                           # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", (x * dt[..., None].astype(x.dtype))
+                     .astype(jnp.float32), b.astype(jnp.float32))
+    new = state * dec[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, c.astype(jnp.float32))
+    return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# Full layer
+# ---------------------------------------------------------------------------
+def _project(params, x, cfg: SSMConfig):
+    di, n, h = cfg.d_inner, cfg.state, cfg.num_heads
+    proj = layers.dot(x, params["in_proj"])
+    z, xin, bb, cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    del h
+    return z, xin, bb, cc, dt
+
+
+def ssm_layer(params, x, cfg: SSMConfig, *, use_kernel: bool = False):
+    """Train/prefill. x: (B, T, d_model) -> (B, T, d_model)."""
+    bsz, t, _ = x.shape
+    h, p = cfg.num_heads, cfg.head_dim
+    z, xin, bb, cc, dt = _project(params, x, cfg)
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)
+    conv_out = causal_conv1d(conv_in, params["conv_w"], params["conv_b"])
+    xin, bb, cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + cfg.state],
+                            axis=-1)
+    xh = xin.reshape(bsz, t, h, p)
+    a = -jnp.exp(params["a_log"])
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+        y, _ = ssd_ops.ssd(xh, dt, a, bb, cc, chunk=cfg.chunk)
+    else:
+        y, _ = ssd_chunked(xh, dt, a, bb, cc, chunk=cfg.chunk)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, t, cfg.d_inner)
+    y = layers.rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype)
+    return layers.dot(y, params["out_proj"])
+
+
+def init_ssm_cache(cfg: SSMConfig, batch: int, dtype=None):
+    dtype = dtype or cfg.dtype
+    conv_ch = cfg.d_inner + 2 * cfg.state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.num_heads, cfg.head_dim, cfg.state),
+                           jnp.float32),
+    }
+
+
+def ssm_decode_step(params, x, cache, cfg: SSMConfig):
+    """One-token decode. x: (B, 1, d_model). Returns (y, new_cache)."""
+    bsz = x.shape[0]
+    h, p = cfg.num_heads, cfg.head_dim
+    z, xin, bb, cc, dt = _project(params, x, cfg)
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)       # (B, 1, C)
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B, W, C)
+    conv_out = (window.astype(jnp.float32)
+                * params["conv_w"].astype(jnp.float32)[None]).sum(1) \
+        + params["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)        # (B, C)
+    xin1, bb1, cc1 = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + cfg.state],
+                               axis=-1)
+    a = -jnp.exp(params["a_log"])
+    y, new_state = ssd_recurrent_step(
+        cache["state"], xin1.reshape(bsz, h, p), dt[:, 0], a, bb1, cc1)
+    y = y + xin1.reshape(bsz, h, p) * params["d_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(bsz, 1, cfg.d_inner)
+    y = layers.rmsnorm(params["norm"], y) * jax.nn.silu(
+        z.astype(jnp.float32)).astype(y.dtype)
+    y = layers.dot(y, params["out_proj"])
+    new_cache = {"conv": window[:, 1:], "state": new_state}
+    return y, new_cache

@@ -1,0 +1,4 @@
+"""Optimizers built here (no optax in the environment): sharded AdamW with
+fp32 master weights, LR schedules, global-norm clipping, int8 error-feedback
+gradient compression, and the DIALS-style periodic outer optimizer."""
+from repro.optim import adamw, clip, compress, outer, schedule  # noqa: F401

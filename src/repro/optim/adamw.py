@@ -1,0 +1,81 @@
+"""AdamW with fp32 master weights over bf16 params (mixed-precision
+training discipline: params/activations bf16, optimizer state fp32).
+
+State layout: ``{"mu", "nu", "master", "step"}`` — ``mu``/``nu``/``master``
+are pytrees parallel to params with fp32 leaves, sharded identically to the
+params (so FSDP params ⇒ ZeRO-sharded optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # param labels with ndim <= 1 (norms, biases, scalars) skip decay.
+    decay_min_ndim: int = 2
+
+
+def init(params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+        # copy=True: for fp32 params astype would alias the same buffer,
+        # and a step that donates both params and opt would then donate
+        # one buffer twice (runtime error).
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_logical_specs(param_specs):
+    """Optimizer-state logical specs mirror the params."""
+    return {"mu": param_specs, "nu": param_specs, "master": param_specs,
+            "step": ()}
+
+
+def update(grads, state, lr, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params_bf16_tree, new_state). ``grads`` may be bf16; all
+    moment math is fp32."""
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, mu, nu, m):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if m.ndim >= cfg.decay_min_ndim:
+            delta = delta + cfg.weight_decay * m
+        m = m - lr * delta
+        return mu, nu, m
+
+    flat, treedef = jax.tree.flatten(state["mu"])
+    gs = jax.tree.leaves(grads)
+    nus = jax.tree.leaves(state["nu"])
+    ms = jax.tree.leaves(state["master"])
+    out = [upd(g, mu, nu, m) for g, mu, nu, m in zip(gs, flat, nus, ms)]
+    new_mu = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_master, {"mu": new_mu, "nu": new_nu, "master": new_master,
+                        "step": step}
+
+
+def cast_like(master, params):
+    """Cast fp32 master back to the params' dtypes (bf16)."""
+    return jax.tree.map(lambda m, p: m.astype(p.dtype), master, params)

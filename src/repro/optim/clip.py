@@ -1,0 +1,25 @@
+"""Gradient utilities: global-norm clipping, nan guards."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm
+
+
+def sanitize(tree):
+    """Zero non-finite gradient entries (lost-node blast-radius control)."""
+    return jax.tree.map(
+        lambda x: jnp.where(jnp.isfinite(x.astype(jnp.float32)), x,
+                            jnp.zeros_like(x)), tree)

@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback.
+
+Used for the cross-pod reconciliation in the DIALS-outer optimizer: the
+pod-to-pod delta all-reduce is the *only* inter-pod collective, so shrinking
+it 4× (fp32→int8 + per-row scale) cuts the collective roofline term of the
+multi-pod step directly. Error feedback keeps the quantization noise from
+biasing convergence (Seide et al., 2014; Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rowwise(x):
+    """Flatten to (rows, cols) for per-row scales; rows = leading dim."""
+    if x.ndim == 0:
+        return x.reshape(1, 1)
+    return x.reshape(x.shape[0], -1)
+
+
+def compress(x: jax.Array, err: jax.Array):
+    """Returns (q int8, scale fp32 (rows,), new_err). err has x's shape."""
+    xf = x.astype(jnp.float32) + err
+    rows = _rowwise(xf)
+    scale = jnp.max(jnp.abs(rows), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(rows / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(xf.shape)
+    return q.reshape(x.shape if x.ndim else (1,)), scale[:, 0], xf - deq
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape):
+    rows = _rowwise(q.astype(jnp.float32))
+    return (rows * scale[:, None]).reshape(shape)
+
+
+def tree_compress(tree, err_tree):
+    """Compress every leaf; returns (q_tree, scale_tree, new_err_tree)."""
+    qs, ss, es = {}, {}, {}
+    flat, treedef = jax.tree.flatten(tree)
+    errs = jax.tree.leaves(err_tree)
+    out = [compress(x, e) for x, e in zip(flat, errs)]
+    q = jax.tree.unflatten(treedef, [o[0] for o in out])
+    s = jax.tree.unflatten(treedef, [o[1] for o in out])
+    e = jax.tree.unflatten(treedef, [o[2] for o in out])
+    del qs, ss, es
+    return q, s, e
+
+
+def tree_decompress(q_tree, scale_tree, like_tree):
+    return jax.tree.map(
+        lambda q, s, x: decompress(q, s, x.shape), q_tree, scale_tree,
+        like_tree)
+
+
+def init_error(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)

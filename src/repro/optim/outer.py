@@ -1,0 +1,90 @@
+"""DIALS-outer optimizer: the paper's pattern at the pod level.
+
+The paper's core move — run local regions independently, reconcile through
+a compact coupling channel only every ``F`` steps, tolerate staleness in
+between (Lemma 2 / Theorem 1 bound the cost) — is exactly the structure of
+semi-synchronous multi-pod training. Each *pod* is a "local region": it
+runs ``F`` inner AdamW steps with **zero cross-pod collectives**; every
+``F`` steps the pods exchange the parameter *delta* (optionally int8-
+compressed with error feedback) and apply a Nesterov outer step
+(DiLoCo-style). This is what the ``pod`` mesh axis buys in the multi-pod
+dry-run: inner ``train_step`` has no collective on ``pod`` at all.
+
+Staleness knob ``F`` plays the same role as the AIP refresh frequency in
+Algorithm 1 — and the same theory argues small/infrequent reconciliation
+can *help* by keeping each pod's objective stationary between syncs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import compress as comp
+
+
+@dataclasses.dataclass(frozen=True)
+class OuterConfig:
+    outer_lr: float = 0.7
+    momentum: float = 0.9
+    nesterov: bool = True
+    sync_every: int = 50             # F, in inner steps
+    compress_int8: bool = True       # shrink the only cross-pod collective 4x
+
+
+def init(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    state = {
+        "anchor": jax.tree.map(f32, params),      # params at last sync
+        "velocity": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params),
+    }
+    return state
+
+
+def outer_step(local_params, state, cfg: OuterConfig, *,
+               pod_axis: Optional[str] = None, err_tree=None):
+    """Reconcile after F inner steps.
+
+    delta_i = anchor - local_i; pod-mean(delta) (the only cross-pod
+    collective, int8 if configured); Nesterov outer update on the anchor;
+    every pod restarts from the new anchor. Returns
+    (new_params, new_state, new_err_tree).
+    """
+    anchor, vel = state["anchor"], state["velocity"]
+    delta = jax.tree.map(
+        lambda a, p: a - p.astype(jnp.float32), anchor, local_params)
+
+    if cfg.compress_int8:
+        if err_tree is None:
+            err_tree = comp.init_error(delta)
+        q, s, err_tree = comp.tree_compress(delta, err_tree)
+        if pod_axis is not None:
+            # int8 stays int8 on the wire: all-gather the quantized deltas
+            # (+ tiny fp32 scales) across pods, dequantize and mean locally.
+            # Wire bytes: n_pods × size × 1B vs ≥4B for an fp32 all-reduce.
+            def gather_mean(qq, ss, d):
+                qg = jax.lax.all_gather(qq, pod_axis)          # (P, ...)
+                sg = jax.lax.all_gather(ss, pod_axis)          # (P, rows)
+                deq = jax.vmap(lambda a, b: comp.decompress(a, b, d.shape))(
+                    qg, sg)
+                return deq.mean(0)
+            delta = jax.tree.map(gather_mean, q, s, delta)
+        else:
+            delta = comp.tree_decompress(q, s, delta)
+    elif pod_axis is not None:
+        delta = jax.tree.map(lambda d: jax.lax.pmean(d, pod_axis), delta)
+
+    new_vel = jax.tree.map(lambda v, d: cfg.momentum * v + d, vel, delta)
+    if cfg.nesterov:
+        step_dir = jax.tree.map(lambda v, d: cfg.momentum * v + d,
+                                new_vel, delta)
+    else:
+        step_dir = new_vel
+    new_anchor = jax.tree.map(lambda a, s_: a - cfg.outer_lr * s_,
+                              anchor, step_dir)
+    new_params = jax.tree.map(lambda a, p: a.astype(p.dtype),
+                              new_anchor, local_params)
+    return new_params, {"anchor": new_anchor, "velocity": new_vel}, err_tree

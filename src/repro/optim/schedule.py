@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def warmup_linear(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        lin = peak + (floor - peak) * prog
+        return jnp.where(step < warmup, warm, lin)
+    return f

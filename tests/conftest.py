@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_addoption(parser):
+    parser.addoption("--run-slow", action="store_true", default=False,
+                     help="run slow tests (full reduced-arch sweeps)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(reason="needs --run-slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned arch family, run one forward/train step (and a decode step where
+the arch has one) on CPU, assert output shapes and no NaNs. The FULL
+configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry, shapes as shapes_mod
+from repro.models import api
+from repro.optim import adamw
+
+ARCHS = registry.list_archs()
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_brief(arch):
+    """The full (non-reduced) config must carry the exact assigned
+    hyper-parameters."""
+    spec = registry.get(arch)
+    cfg = spec.cfg.decoder if spec.kind == "encdec" else spec.cfg
+    expect = {
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "mamba2-780m": (48, 1536, None, None, 0, 50280),
+    }[arch]
+    layers, dm, nh, kv, dff, vocab = expect
+    if arch == "whisper-tiny":
+        # each whisper decoder layer lowers as [self, cross+mlp] = 2 blocks
+        layers = 2 * layers
+    assert cfg.n_layers == layers
+    assert cfg.d_model == dm
+    assert cfg.vocab == vocab
+    blocks_ = list(cfg.period) + ([cfg.shared] if cfg.shared else [])
+    attns = [b.attn for b in blocks_ if b.attn is not None]
+    if nh is not None:
+        assert attns and attns[0].num_heads == nh
+        assert attns[0].num_kv_heads == kv
+    if dff:
+        ffs = [b.mlp.d_ff for b in blocks_ if b.mlp is not None] + \
+              [b.moe.d_ff for b in blocks_ if b.moe is not None]
+        assert dff in ffs, (arch, ffs)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, rng):
+    """One loss+grad+optimizer step on the reduced config."""
+    spec = registry.get(arch, reduced=True)
+    shape = shapes_mod.REDUCED_SHAPES["train_4k"]
+    params = api.init(rng, spec)
+    batch = registry.concrete_inputs(rng, spec, shape)
+    loss_fn = api.loss_fn(spec)
+
+    def scalar_loss(p):
+        loss, aux = loss_fn(p, batch)
+        return loss, aux
+
+    (loss, aux), grads = jax.value_and_grad(scalar_loss, has_aux=True)(params)
+    assert jnp.isfinite(loss), (arch, float(loss))
+    assert float(loss) > 0.0
+    # grads finite and at least one nonzero
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(l.astype(jnp.float32))))
+               for l in leaves)
+    assert any(float(jnp.max(jnp.abs(l.astype(jnp.float32)))) > 0
+               for l in leaves)
+    state = adamw.init(params)
+    master, state = adamw.update(grads, state, 1e-4)
+    assert int(state["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_logits_smoke(arch, rng):
+    spec = registry.get(arch, reduced=True)
+    shape = shapes_mod.REDUCED_SHAPES["prefill_32k"]
+    params = api.init(rng, spec)
+    batch = registry.concrete_inputs(rng, spec, shape)
+    from repro.models import lm as lm_mod, encdec as encdec_mod
+    cfg = spec.cfg.decoder if spec.kind == "encdec" else spec.cfg
+    if spec.kind == "encdec":
+        enc = encdec_mod.encode(params, batch["frames"], spec.cfg)
+        x, _ = lm_mod.forward(params["decoder"], batch["tokens"], cfg,
+                              cross_kv=enc)
+        logits = lm_mod.logits_fn(params["decoder"], x[:, -1:], cfg)
+    elif spec.kind == "vlm":
+        x, _ = lm_mod.forward(params, batch["tokens"], cfg,
+                              cross_kv=batch["patches"])
+        logits = lm_mod.logits_fn(params, x[:, -1:], cfg)
+    else:
+        x, _ = lm_mod.forward(params, batch["tokens"], cfg)
+        logits = lm_mod.logits_fn(params, x[:, -1:], cfg)
+    assert logits.shape == (shape.global_batch, 1, cfg.vocab)
+    assert not jnp.any(jnp.isnan(logits.astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if registry.get(a).has_decode])
+def test_decode_step_smoke(arch, rng):
+    """One-token decode against a small cache on the reduced config."""
+    spec = registry.get(arch, reduced=True)
+    from repro.models import lm as lm_mod, encdec as encdec_mod
+    cfg = spec.cfg.decoder if spec.kind == "encdec" else spec.cfg
+    params = api.init(rng, spec)
+    b, max_len = 2, 32
+    binp = {}
+    if spec.kind == "encdec":
+        binp["frames"] = jnp.zeros((b, spec.n_frames, spec.cfg.d_model),
+                                   jnp.bfloat16)
+    if spec.kind == "vlm":
+        binp["patches"] = jnp.zeros((b, spec.n_patches, spec.vision_dim),
+                                    jnp.bfloat16)
+    caches = api.init_caches(params, spec, b, max_len, batch_inputs=binp)
+    token = jnp.zeros((b, 1), jnp.int32)
+    if spec.kind == "encdec":
+        logits, caches = encdec_mod.decode_step(
+            params, token, caches, jnp.asarray(0, jnp.int32), spec.cfg)
+    else:
+        logits, caches = lm_mod.decode_step(
+            params, token, caches, jnp.asarray(0, jnp.int32), cfg)
+    assert logits.shape == (b, 1, cfg.vocab)
+    assert not jnp.any(jnp.isnan(logits.astype(jnp.float32)))
+
+
+def test_cell_support_rules():
+    """long_500k only runs for sub-quadratic archs; whisper has decode."""
+    for arch in ARCHS:
+        spec = registry.get(arch)
+        ok, why = registry.cell_supported(
+            spec, shapes_mod.SHAPES["long_500k"])
+        assert ok == spec.sub_quadratic, (arch, why)
+    assert registry.get("mamba2-780m").sub_quadratic
+    assert registry.get("zamba2-1.2b").sub_quadratic
+    assert registry.get("gemma2-9b").sub_quadratic  # local+global alternation

@@ -1,0 +1,192 @@
+"""AIP learning, GS dataset collection, and the DIALS end-to-end loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dials, gs as gs_mod, ials as ials_mod, influence
+from repro.envs import traffic, warehouse
+from repro.marl import policy as policy_mod, ppo as ppo_mod
+from repro.marl import runner as runner_mod
+
+
+# ---------------------------------------------------------------------------
+# AIP
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["fnn", "gru"])
+def test_aip_learns_synthetic_rule(kind):
+    """AIP must learn a learnable mapping: u = first M features > 0."""
+    cfg = influence.AIPConfig(in_dim=8, n_sources=3, kind=kind,
+                              hidden=(32,), gru_hidden=16,
+                              lr=3e-3, epochs=40, batch=32)
+    key = jax.random.PRNGKey(0)
+    params = influence.aip_init(key, cfg)
+    feats = jax.random.normal(key, (8, 64, cfg.in_dim))       # (E, T, F)
+    u = (feats[..., :3] > 0).astype(jnp.float32)
+    data = {"feats": feats, "u": u,
+            "resets": jnp.zeros(feats.shape[:2], jnp.float32)}
+    ce0 = influence.eval_ce(params, data, cfg)
+    params, _ = influence.train_aip(params, data, jax.random.PRNGKey(1), cfg)
+    ce1 = influence.eval_ce(params, data, cfg)
+    assert float(ce1) < float(ce0) * 0.7, (float(ce0), float(ce1))
+
+
+def test_aip_sample_sources_shape_and_range():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 3, 5))
+    u = influence.sample_sources(key, logits)
+    assert u.shape == logits.shape
+    assert set(np.unique(np.asarray(u))) <= {0.0, 1.0}
+
+
+def test_aip_stacked_vmap_training_independent():
+    """Vmapped per-agent AIP training must equal training each agent
+    alone (agents do not leak into one another)."""
+    cfg = influence.AIPConfig(in_dim=6, n_sources=2, kind="fnn",
+                              hidden=(16,), lr=1e-3, epochs=3, batch=16)
+    k = jax.random.PRNGKey(2)
+    n_agents = 3
+    params = jax.vmap(lambda kk: influence.aip_init(kk, cfg))(
+        jax.random.split(k, n_agents))
+    feats = jax.random.normal(k, (n_agents, 4, 32, cfg.in_dim))
+    u = (feats[..., :2] > 0).astype(jnp.float32)
+    resets = jnp.zeros(feats.shape[:3], jnp.float32)
+    data = {"feats": feats, "u": u, "resets": resets}
+    keys = jax.random.split(jax.random.PRNGKey(3), n_agents)
+    stacked, _ = jax.vmap(
+        lambda p, d, kk: influence.train_aip(p, d, kk, cfg))(
+        params, data, keys)
+    for i in range(n_agents):
+        pi = jax.tree.map(lambda x: x[i], params)
+        di = jax.tree.map(lambda x: x[i], data)
+        alone, _ = influence.train_aip(pi, di, keys[i], cfg)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            a, b, atol=1e-5), jax.tree.map(lambda x: x[i], stacked), alone)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: GS dataset collection
+# ---------------------------------------------------------------------------
+def test_collector_shapes_and_consistency():
+    cfg = warehouse.WarehouseConfig(k=2, horizon=16)
+    info = cfg.info()
+    pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                 n_actions=info.n_actions, hidden=(16,))
+    collect = gs_mod.make_collector(warehouse, cfg, pc, n_envs=3, steps=8)
+    params = jax.vmap(lambda k: policy_mod.policy_init(k, pc))(
+        jax.random.split(jax.random.PRNGKey(0), info.n_agents))
+    data = collect(params, jax.random.PRNGKey(1))
+    assert data["feats"].shape == (info.n_agents, 3, 8, info.alsh_dim)
+    assert data["u"].shape == (info.n_agents, 3, 8, info.n_influence)
+    assert data["resets"].shape == (info.n_agents, 3, 8)
+    # first step of every env starts an episode
+    assert bool(jnp.all(data["resets"][:, :, 0] == 1.0))
+    for leaf in jax.tree.leaves(data):
+        assert not jnp.any(jnp.isnan(leaf))
+
+
+# ---------------------------------------------------------------------------
+# GS trainer + IALS trainer
+# ---------------------------------------------------------------------------
+def _tiny_setup(env_mod, env_cfg, kind="fnn"):
+    info = env_cfg.info()
+    pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                 n_actions=info.n_actions, hidden=(16,),
+                                 gru_hidden=8, kind=kind)
+    ac = influence.AIPConfig(in_dim=info.alsh_dim,
+                             n_sources=info.n_influence, kind="fnn",
+                             hidden=(16,), epochs=2, batch=16)
+    ppo_cfg = ppo_mod.PPOConfig(epochs=1, minibatches=2)
+    return info, pc, ac, ppo_cfg
+
+
+def test_gs_trainer_one_iteration():
+    cfg = traffic.TrafficConfig(n=2, horizon=16)
+    info, pc, _, ppo_cfg = _tiny_setup(traffic, cfg)
+    init_fn, train_fn, eval_fn = runner_mod.make_gs_trainer(
+        traffic, cfg, pc, ppo_cfg, runner_mod.RunConfig(
+            n_envs=2, rollout_steps=8))
+    state = init_fn(jax.random.PRNGKey(0))
+    state2, metrics = train_fn(state)
+    assert float(state2["iter"]) == 1
+    for leaf in jax.tree.leaves(state2["params"]):
+        assert not jnp.any(jnp.isnan(leaf))
+    ret = eval_fn(state2["params"], jax.random.PRNGKey(1), episodes=2)
+    assert jnp.isfinite(ret)
+
+
+def test_ials_trainer_zero_cross_agent_interaction():
+    """Agents in the IALS loop are isolated: zeroing agent j's params
+    must not change agent i's trajectory metrics (given same keys)."""
+    cfg = traffic.TrafficConfig(n=2, horizon=16)
+    info, pc, ac, ppo_cfg = _tiny_setup(traffic, cfg)
+    init_fn, train_fn = ials_mod.make_ials_trainer(
+        traffic, cfg, pc, ac, ppo_cfg, n_envs=2, rollout_steps=8)
+    state = init_fn(jax.random.PRNGKey(0))
+    aips = jax.vmap(lambda k: influence.aip_init(k, ac))(
+        jax.random.split(jax.random.PRNGKey(1), info.n_agents))
+    s1, _ = train_fn(state, aips)
+
+    # zero agent 3's policy params; agents 0-2 must evolve identically
+    def zero_last(x):
+        return x.at[-1].set(0.0) if x.ndim else x
+    state_z = {**state, "params": jax.tree.map(zero_last, state["params"])}
+    s2, _ = train_fn(state_z, aips)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a[:-1], b[:-1], atol=1e-5),
+        s1["params"], s2["params"])
+
+
+# ---------------------------------------------------------------------------
+# DIALS end-to-end (Algorithm 1)
+# ---------------------------------------------------------------------------
+def _dials_trainer(tmp_path=None, **kw):
+    cfg = warehouse.WarehouseConfig(k=2, horizon=16)
+    info, pc, ac, ppo_cfg = _tiny_setup(warehouse, cfg)
+    dcfg = dials.DIALSConfig(
+        outer_rounds=2, aip_refresh=2, collect_envs=2, collect_steps=16,
+        n_envs=2, rollout_steps=8, eval_episodes=2,
+        ckpt_dir=str(tmp_path) if tmp_path else None, **kw)
+    return dials.DIALSTrainer(warehouse, cfg, pc, ac, ppo_cfg, dcfg)
+
+
+def test_dials_end_to_end_runs():
+    trainer = _dials_trainer()
+    state, hist = trainer.run(jax.random.PRNGKey(0))
+    assert len(hist) == 2
+    for rec in hist:
+        assert np.isfinite(rec["gs_return"])
+        assert np.isfinite(rec["aip_ce_after"])
+    # AIP training reduced the CE on the current datasets
+    assert hist[0]["aip_ce_after"] <= hist[0]["aip_ce_before"] + 1e-6
+
+
+def test_dials_untrained_ablation_skips_aip_training():
+    trainer = _dials_trainer(untrained=True)
+    state, hist = trainer.run(jax.random.PRNGKey(0))
+    for rec in hist:
+        assert rec["aip_ce_before"] == pytest.approx(rec["aip_ce_after"])
+
+
+def test_dials_checkpoint_restart_resumes(tmp_path):
+    trainer = _dials_trainer(tmp_path)
+    state, hist = trainer.run(jax.random.PRNGKey(0))
+    # a fresh trainer restores round 2 and does no further work
+    trainer2 = _dials_trainer(tmp_path)
+    state2, hist2 = trainer2.run(jax.random.PRNGKey(0))
+    assert hist2 == []                     # already complete
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=0),
+                 state["aips"], state2["aips"])
+
+
+def test_dials_straggler_mask_keeps_old_aips():
+    trainer = _dials_trainer()
+    # every agent is a straggler: AIPs must never change
+    state0 = trainer.init(jax.random.PRNGKey(0))
+    state, hist = trainer.run(
+        jax.random.PRNGKey(0),
+        straggler_mask=lambda rnd: np.zeros(4, np.float32))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=0),
+                 state0["aips"], state["aips"])

@@ -1,0 +1,189 @@
+"""Environment tests, centred on the IBA exactness property the whole
+paper rests on: given the realized influence sources u, the local
+simulator reproduces the global simulator's per-region transition
+EXACTLY (the GS and LS share the per-region step function, and u
+d-separates the region from the rest of the system)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.envs import traffic, warehouse
+
+
+# ---------------------------------------------------------------------------
+# Warehouse
+# ---------------------------------------------------------------------------
+def test_warehouse_shapes():
+    cfg = warehouse.WarehouseConfig(k=2, horizon=10)
+    info = cfg.info()
+    key = jax.random.PRNGKey(0)
+    state = warehouse.gs_init(key, cfg)
+    obs = warehouse.gs_obs(state, cfg)
+    assert obs.shape == (info.n_agents, info.obs_dim)
+    actions = jnp.zeros((info.n_agents,), jnp.int32)
+    state2, obs2, rew, u, done = warehouse.gs_step(state, actions, key, cfg)
+    assert obs2.shape == (info.n_agents, info.obs_dim)
+    assert rew.shape == (info.n_agents,)
+    assert u.shape == (info.n_agents, info.n_influence)
+    assert done.shape == ()
+    for leaf in jax.tree.leaves((obs2, rew)):
+        assert not jnp.any(jnp.isnan(leaf))
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_warehouse_gs_ls_exactness(k):
+    """Replay each region's GS trajectory through the LS with the same
+    (action, u, spawn) and require identical local states and rewards —
+    the executable form of Eq. (1)/Definition 3."""
+    cfg = warehouse.WarehouseConfig(k=k, horizon=50)
+    n = cfg.n_agents
+    cells = jnp.asarray(warehouse.item_cells(cfg))
+    key = jax.random.PRNGKey(1)
+    state = warehouse.gs_init(key, cfg)
+
+    for t in range(20):
+        key, ka, ks = jax.random.split(key, 3)
+        actions = jax.random.randint(ka, (n,), 0, 5)
+        spawn_grid = jax.random.bernoulli(ks, cfg.p_item,
+                                          (cfg.grid, cfg.grid))
+        loc_before = warehouse.gs_locals(state, cfg)
+        state2, _, rew, u, _ = warehouse.gs_step_given(
+            state, actions, spawn_grid, cfg)
+        loc_after = warehouse.gs_locals(state2, cfg)
+        # per-region LS replay
+        spawn = spawn_grid[cells[..., 0], cells[..., 1]]       # (N, 12)
+        for i in range(n):
+            local = {"pos": loc_before["pos"][i],
+                     "ages": loc_before["ages"][i],
+                     "t": state["t"]}
+            new, _, r, _ = warehouse.ls_step_given(
+                local, actions[i], u[i], spawn[i], cfg)
+            np.testing.assert_array_equal(new["pos"], loc_after["pos"][i])
+            np.testing.assert_array_equal(new["ages"], loc_after["ages"][i])
+            np.testing.assert_allclose(r, rew[i], atol=1e-6)
+        state = state2
+
+
+def test_warehouse_influence_semantics():
+    """u[i, c] is true iff ANOTHER robot stands on region i's item cell c."""
+    cfg = warehouse.WarehouseConfig(k=2)
+    # robot 1 (region (0,1), origin (0,4)) at local (0,1) -> abs (0,5).
+    # region 0's east shelf is at abs (1..3,4); its north shelf (0,1..3).
+    # Put robot 1 on abs (1,4): local pos (1,0) of region 1.
+    pos = jnp.array([[2, 2], [1, 0], [2, 2], [2, 2]], jnp.int32)
+    u = warehouse.gs_influence(pos, cfg)
+    # region 0: cell index 3 is (r0+1, c0+4) = (1,4) -> influenced
+    assert bool(u[0, 3])
+    # the robot itself doesn't influence its own region
+    assert not bool(u[1].any())
+
+
+@given(st.integers(0, 4), st.integers(0, 4), st.integers(0, 4),
+       st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_warehouse_region_step_invariants(r, c, action, seed):
+    """Property: ages stay >= 0; reward in [0, 12]; occupied u-cells and
+    self-collected cells are emptied; position stays in the 5x5 region."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    ages = jax.random.randint(k1, (12,), 0, 10)
+    u = jax.random.bernoulli(k2, 0.3, (12,))
+    spawn = jax.random.bernoulli(k3, 0.3, (12,))
+    pos = jnp.array([r, c], jnp.int32)
+    new_pos, new_ages, reward, on_item = warehouse.region_step(
+        pos, ages, jnp.asarray(action), u, spawn)
+    assert (new_ages >= 0).all()
+    assert 0.0 <= float(reward) <= 12.0
+    assert (new_pos >= 0).all() and (new_pos <= 4).all()
+    # a cell with a neighbour robot on it cannot retain an item (unless
+    # respawned this step)
+    stolen = u & (ages > 0) & ~spawn
+    assert not bool((new_ages[stolen] > 0).any())
+
+
+# ---------------------------------------------------------------------------
+# Traffic
+# ---------------------------------------------------------------------------
+def test_traffic_shapes():
+    cfg = traffic.TrafficConfig(n=2, horizon=10)
+    info = cfg.info()
+    key = jax.random.PRNGKey(0)
+    state = traffic.gs_init(key, cfg)
+    obs = traffic.gs_obs(state, cfg)
+    assert obs.shape == (info.n_agents, info.obs_dim)
+    actions = jnp.zeros((info.n_agents,), jnp.int32)
+    state2, obs2, rew, u, done = traffic.gs_step(state, actions, key, cfg)
+    assert u.shape == (info.n_agents, info.n_influence)
+    assert rew.shape == (info.n_agents,)
+    for leaf in jax.tree.leaves((obs2, rew)):
+        assert not jnp.any(jnp.isnan(leaf))
+
+
+@pytest.mark.parametrize("n", [2, 3])
+def test_traffic_gs_ls_exactness(n):
+    """Same exactness property for the traffic env: replaying each
+    intersection through the LS with the GS's realized inflow u gives
+    identical lanes/phase/reward."""
+    cfg = traffic.TrafficConfig(n=n, horizon=50)
+    na = cfg.n_agents
+    key = jax.random.PRNGKey(2)
+    state = traffic.gs_init(key, cfg)
+
+    for t in range(20):
+        key, ka, ki = jax.random.split(key, 3)
+        actions = jax.random.randint(ka, (na,), 0, 2)
+        inject = jax.random.bernoulli(ki, cfg.p_in, (cfg.n, cfg.n, 4))
+        loc_before = traffic.gs_locals(state, cfg)
+        state2, _, rew, u, _ = traffic.gs_step_given(
+            state, actions, inject, cfg)
+        loc_after = traffic.gs_locals(state2, cfg)
+        for i in range(na):
+            local = {"lanes": loc_before["lanes"][i],
+                     "phase": loc_before["phase"][i], "t": state["t"]}
+            new, _, r, _ = traffic.ls_step(
+                local, actions[i], u[i], None, cfg)
+            np.testing.assert_array_equal(new["lanes"],
+                                          loc_after["lanes"][i])
+            np.testing.assert_array_equal(new["phase"],
+                                          loc_after["phase"][i])
+            np.testing.assert_allclose(r, rew[i], atol=1e-6)
+        state = state2
+
+
+def test_traffic_coupling_via_influence_only():
+    """Cars leaving intersection A must show up as inflow u at the
+    neighbouring intersection — the hand-off is the only coupling."""
+    cfg = traffic.TrafficConfig(n=2, p_in=0.0, init_density=0.9)
+    key = jax.random.PRNGKey(3)
+    state = traffic.gs_init(key, cfg)
+    total_u = 0.0
+    for t in range(10):
+        key, ka, kk = jax.random.split(key, 3)
+        actions = jax.random.randint(ka, (cfg.n_agents,), 0, 2)
+        state, _, _, u, _ = traffic.gs_step(state, actions, kk, cfg)
+        total_u += float(u.sum())
+    assert total_u > 0, "no inter-region influence despite dense traffic"
+
+
+@given(st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_traffic_lane_step_conservation(seed):
+    """Property: cars are conserved — new count = old count + inflow
+    − crossed."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    lanes = jax.random.bernoulli(k1, 0.4, (4, 8))
+    green = jax.random.bernoulli(k2, 0.5, (4,))
+    inflow = jax.random.bernoulli(k3, 0.5, (4,))
+    new_lanes, out, moved, count = traffic.lane_step(lanes, green, inflow)
+    old = int(lanes.sum())
+    delta = int(new_lanes.sum()) - (old - int(out.sum()))
+    # conservation: cars only appear through inflow, only vanish by crossing
+    assert 0 <= delta <= int(inflow.sum())
+    assert 0 <= int(new_lanes.sum()) <= 32
+    # crossed cars require green and an occupied stop line
+    crossed = np.asarray(out)
+    assert not np.any(crossed & ~np.asarray(green & lanes[:, -1]))
+    assert float(count) == old

@@ -1,0 +1,146 @@
+"""Fault-tolerance substrate: straggler plans, bounded-staleness updates,
+heartbeats, elastic resharding, and restart-safe data feeding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import pipeline
+from repro.distributed import fault, mesh as mesh_lib
+
+
+# ---------------------------------------------------------------------------
+# straggler plan
+# ---------------------------------------------------------------------------
+def test_straggler_plan_reassigns_to_healthy():
+    plan = fault.straggler_plan(8, late=[2, 5])
+    assert set(plan.healthy) == {0, 1, 3, 4, 6, 7}
+    for late in (2, 5):
+        assert plan.owner(late) in plan.healthy
+    # healthy shards keep their own work
+    assert plan.owner(0) == 0 and plan.owner(7) == 7
+
+
+def test_straggler_plan_all_late_raises():
+    with pytest.raises(RuntimeError):
+        fault.straggler_plan(3, late=[0, 1, 2])
+
+
+@given(st.integers(2, 32), st.data())
+@settings(max_examples=30, deadline=None)
+def test_straggler_plan_deterministic_and_total(n, data):
+    late = data.draw(st.lists(st.integers(0, n - 1), max_size=n - 1,
+                              unique=True))
+    p1 = fault.straggler_plan(n, late)
+    p2 = fault.straggler_plan(n, list(reversed(late)))
+    assert p1 == p2                     # host-order independent
+    # every work unit has a healthy owner
+    for w in range(n):
+        assert p1.owner(w) in p1.healthy or w in p1.healthy
+
+
+# ---------------------------------------------------------------------------
+# bounded-staleness updates + heartbeat
+# ---------------------------------------------------------------------------
+def test_masked_tree_update_mixes_per_agent():
+    old = {"w": jnp.zeros((4, 3)), "b": jnp.zeros((4,))}
+    new = {"w": jnp.ones((4, 3)), "b": jnp.ones((4,))}
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+    out = fault.masked_tree_update(old, new, mask)
+    np.testing.assert_allclose(out["w"][0], 1.0)
+    np.testing.assert_allclose(out["w"][1], 0.0)
+    np.testing.assert_allclose(out["b"], [1.0, 0.0, 1.0, 0.0])
+
+
+def test_heartbeat_mask():
+    reports = jnp.array([10, 8, 3, 10])
+    mask = fault.heartbeat_mask(reports, current_step=10, max_staleness=2)
+    np.testing.assert_array_equal(np.asarray(mask), [1.0, 1.0, 0.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# elastic resharding (host mesh scale)
+# ---------------------------------------------------------------------------
+def test_reshard_roundtrips_values():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    tree = {"w": jnp.arange(32, dtype=jnp.float32).reshape(4, 8)}
+    spec = {"w": ("embed", "mlp")}
+    out = fault.reshard(tree, spec, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
+    assert out["w"].sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+# ---------------------------------------------------------------------------
+# restart-safe pipeline
+# ---------------------------------------------------------------------------
+def test_lm_iterator_restart_resumes_mid_stream():
+    it = pipeline.lm_iterator(seed=3, batch=2, seq=8, vocab=64)
+    first = [next(it) for _ in range(5)]
+    resumed = pipeline.lm_iterator(seed=3, batch=2, seq=8, vocab=64,
+                                   start_step=3)
+    np.testing.assert_array_equal(np.asarray(first[3]["tokens"]),
+                                  np.asarray(next(resumed)["tokens"]))
+    np.testing.assert_array_equal(np.asarray(first[4]["tokens"]),
+                                  np.asarray(next(resumed)["tokens"]))
+
+
+def test_shard_batch_places_on_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    batch = {"tokens": jnp.zeros((4, 8), jnp.int32)}
+    out = pipeline.shard_batch(batch, mesh)
+    assert out["tokens"].sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+def test_with_extras_attaches_modalities():
+    it = pipeline.lm_iterator(seed=0, batch=2, seq=4, vocab=16)
+    it2 = pipeline.with_extras(
+        it, lambda step: {"frames": jnp.full((2, 3, 8), step, jnp.bfloat16)})
+    b0 = next(it2)
+    b1 = next(it2)
+    assert "frames" in b0 and float(b1["frames"][0, 0, 0]) == 1.0
+
+
+def test_elastic_reshard_across_mesh_shapes():
+    """Elastic restart: checkpoint written under one mesh restores onto a
+    different mesh shape with identical values (8 fake devices,
+    (4,2) -> (2,4) -> (8,1)). Subprocess so the main process keeps 1 CPU
+    device."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+from repro.checkpoint import ckpt
+from repro.distributed import fault, mesh as mesh_lib
+
+tree = {'w': jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+        'b': jnp.ones((8,), jnp.bfloat16)}
+spec = {'w': ('embed', 'mlp'), 'b': ('mlp',)}
+
+d = tempfile.mkdtemp()
+m1 = jax.make_mesh((4, 2), ('data', 'model'))
+t1 = fault.reshard(tree, spec, m1, fsdp_axes=('data',))
+ckpt.save(d, t1, step=1)
+
+for shape in ((2, 4), (8, 1), (1, 8)):
+    m2 = jax.make_mesh(shape, ('data', 'model'))
+    sds = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    sh = mesh_lib.logical_to_sharding(spec, sds, m2, fsdp_axes=('data',))
+    back, step = ckpt.restore(d, sds, shardings=sh)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(back['w']), np.asarray(tree['w']))
+    np.testing.assert_array_equal(np.asarray(back['b'], np.float32),
+                                  np.asarray(tree['b'], np.float32))
+    assert dict(back['w'].sharding.mesh.shape) == dict(zip(('data','model'), shape))
+print('elastic ok')
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd="/root/repo",
+                         env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "elastic ok" in out.stdout

@@ -1,0 +1,257 @@
+"""NN substrate consistency: attention (chunked==full, decode==prefill,
+GQA, RoPE), SSD (chunked==recurrent), MoE invariants, layers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as attn
+from repro.nn import layers, moe as moe_mod, ssm as ssm_mod
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def test_attend_chunked_equals_full():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, t, h, d = 2, 256, 4, 32
+    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, h, d), jnp.float32)
+    full = attn.attend(q, k, v, causal=True)
+    chunked = attn.attend_chunked(q, k, v, causal=True, block_k=64)
+    np.testing.assert_allclose(chunked, full, atol=2e-5, rtol=2e-5)
+
+
+def test_gqa_equals_repeated_mha():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    b, t, h, hkv, d = 1, 64, 8, 2, 16
+    q = jax.random.normal(ks[0], (b, t, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, hkv, d), jnp.float32)
+    gqa = attn.attend(q, k, v)
+    k_rep = jnp.repeat(k, h // hkv, axis=2)
+    v_rep = jnp.repeat(v, h // hkv, axis=2)
+    mha = attn.attend(q, k_rep, v_rep)
+    np.testing.assert_allclose(gqa, mha, atol=1e-6)
+
+
+def test_rope_preserves_norm_and_relative_positions():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 8, 2, 64), jnp.float32)
+    pos = jnp.arange(8)
+    y = attn.apply_rope(x, pos, theta=10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.PRNGKey(3), (1, 1, 1, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, 64))
+    def dot_at(p):
+        rq = attn.apply_rope(q, jnp.array([p]), theta=10_000.0)
+        rv = attn.apply_rope(v, jnp.array([p + 5]), theta=10_000.0)
+        return float(jnp.sum(rq * rv))
+    assert dot_at(0) == pytest.approx(dot_at(17), rel=1e-4)
+
+
+@pytest.mark.parametrize("kv_heads,window,softcap", [
+    (4, None, None), (2, None, None), (4, 16, None), (4, None, 30.0),
+])
+def test_decode_matches_prefill(kv_heads, window, softcap):
+    """Step-by-step KV-cache decode must reproduce full-sequence attention
+    — the core serving-correctness invariant."""
+    cfg = attn.AttentionConfig(d_model=64, num_heads=4,
+                               num_kv_heads=kv_heads,
+                               sliding_window=window, attn_softcap=softcap,
+                               dtype=jnp.float32)
+    key = jax.random.PRNGKey(5)
+    params = attn.attention_init(key, cfg)
+    b, t = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, t, 64), jnp.float32)
+    full = attn.self_attention(params, x, cfg,
+                               positions=jnp.arange(t))
+    cache = attn.init_kv_cache(cfg, b, window or t)
+    outs = []
+    for i in range(t):
+        o, cache = attn.decode_self_attention(
+            params, x[:, i:i + 1], cache, jnp.asarray(i, jnp.int32), cfg)
+        outs.append(o)
+    stepped = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(stepped, full, atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD / Mamba2
+# ---------------------------------------------------------------------------
+def test_ssd_chunked_equals_recurrent():
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    b, t, h, p, n = 2, 32, 2, 8, 16
+    x = jax.random.normal(ks[0], (b, t, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h))) * 0.2
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    bb = jax.random.normal(ks[3], (b, t, n), jnp.float32)
+    cc = jax.random.normal(ks[4], (b, t, n), jnp.float32)
+    y_chunk, final = ssm_mod.ssd_chunked(x, dt, a, bb, cc, chunk=8)
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for i in range(t):
+        y, state = ssm_mod.ssd_recurrent_step(
+            state, x[:, i], dt[:, i], a, bb[:, i], cc[:, i])
+        ys.append(y[:, None])
+    y_rec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_chunk, y_rec, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(final, state, atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_layer_decode_matches_prefill():
+    cfg = ssm_mod.SSMConfig(d_model=32, state=16, head_dim=8, expand=2,
+                            chunk=8, dtype=jnp.float32)
+    params = ssm_mod.ssm_init(jax.random.PRNGKey(8), cfg)
+    b, t = 1, 16
+    x = jax.random.normal(jax.random.PRNGKey(9), (b, t, 32), jnp.float32)
+    full = ssm_mod.ssm_layer(params, x, cfg)
+    cache = ssm_mod.init_ssm_cache(cfg, b, dtype=jnp.float32)
+    outs = []
+    for i in range(t):
+        y, cache = ssm_mod.ssm_decode_step(params, x[:, i:i + 1], cache, cfg)
+        outs.append(y)
+    stepped = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(stepped, full, atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def _moe_cfg(**kw):
+    d = dict(d_model=16, d_ff=32, num_experts=4, top_k=2,
+             capacity_factor=2.0, dtype=jnp.float32)
+    d.update(kw)
+    return moe_mod.MoEConfig(**d)
+
+
+def test_moe_output_shape_and_aux():
+    cfg = _moe_cfg()
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16), jnp.float32)
+    y, aux = moe_mod.moe_layer(params, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux["load_balance"]) >= 1.0 - 1e-5   # >= 1 by Cauchy-Schwarz
+    assert float(aux["z_loss"]) >= 0.0
+    assert not jnp.any(jnp.isnan(y))
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity 1 token/expert, most tokens are dropped and the layer
+    output for them is 0 (residual carries them)."""
+    cfg = _moe_cfg(capacity_factor=0.05, top_k=1)
+    params = moe_mod.moe_init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, 16), jnp.float32)
+    y, _ = moe_mod.moe_layer(params, x, cfg)
+    # capacity rounds to >= 8/expert: 4*8 = 32 kept, >= 32 of 64 dropped
+    zero_rows = np.sum(np.all(np.abs(np.asarray(y[0])) < 1e-9, axis=-1))
+    assert zero_rows >= 32
+
+
+def test_moe_router_prob_simplex():
+    cfg = _moe_cfg()
+    params = moe_mod.moe_init(jax.random.PRNGKey(4), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, 16), jnp.float32)
+    probs, _ = moe_mod.router_probs(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+def test_rmsnorm_unit_scale():
+    p = layers.rmsnorm_init(8)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) * 10
+    y = layers.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y.astype(jnp.float32) ** 2, axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-100, 100, 64)
+    y = layers.softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    np.testing.assert_allclose(layers.softcap(x, None), x)
+
+
+def test_embedding_tied_logits():
+    p = layers.embedding_init(jax.random.PRNGKey(0), vocab=11, dim=8)
+    ids = jnp.array([[0, 3, 10]])
+    e = layers.embedding_lookup(p, ids)
+    assert e.shape == (1, 3, 8)
+    logits = layers.embedding_logits(p, e)
+    assert logits.shape == (1, 3, 11)
+
+
+def test_moe_gather_dispatch_equals_dense():
+    """The scatter/gather MoE (§Perf optimization) must be numerically
+    identical to the one-hot einsum form."""
+    import dataclasses
+    for top_k, capf in ((2, 2.0), (1, 1.25), (4, 4.0)):
+        cfg_d = _moe_cfg(top_k=top_k, capacity_factor=capf)
+        cfg_g = dataclasses.replace(cfg_d, dispatch="gather")
+        params = moe_mod.moe_init(jax.random.PRNGKey(6), cfg_d)
+        x = jax.random.normal(jax.random.PRNGKey(7), (2, 16, 16),
+                              jnp.float32)
+        yd, auxd = moe_mod.moe_layer(params, x, cfg_d)
+        yg, auxg = moe_mod.moe_layer(params, x, cfg_g)
+        np.testing.assert_allclose(np.asarray(yd), np.asarray(yg),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(float(auxd["load_balance"]),
+                                   float(auxg["load_balance"]), rtol=1e-6)
+
+
+def test_moe_gather_dispatch_drops_same_tokens():
+    import dataclasses
+    cfg_d = _moe_cfg(capacity_factor=0.05, top_k=1)
+    cfg_g = dataclasses.replace(cfg_d, dispatch="gather")
+    params = moe_mod.moe_init(jax.random.PRNGKey(8), cfg_d)
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 64, 16), jnp.float32)
+    yd, _ = moe_mod.moe_layer(params, x, cfg_d)
+    yg, _ = moe_mod.moe_layer(params, x, cfg_g)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(yg),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_moe_gather_sharded_equals_dense_when_ample():
+    """With ample capacity (no drops) group-local routing must reproduce
+    the dense layer exactly (positions differ, outputs do not)."""
+    import dataclasses
+    cfg_d = _moe_cfg(top_k=2, capacity_factor=8.0)
+    params = moe_mod.moe_init(jax.random.PRNGKey(10), cfg_d)
+    x = jax.random.normal(jax.random.PRNGKey(11), (4, 16, 16), jnp.float32)
+    yd, _ = moe_mod.moe_layer(params, x, cfg_d)
+    for shards in (1, 4):
+        cfg_g = dataclasses.replace(cfg_d, dispatch="gather",
+                                    token_shards=shards)
+        yg, _ = moe_mod.moe_layer(params, x, cfg_g)
+        np.testing.assert_allclose(np.asarray(yd), np.asarray(yg),
+                                   atol=2e-5, rtol=2e-5,
+                                   err_msg=f"shards={shards}")
+
+
+def test_decode_sharded_softmax_matches_attend():
+    """The distributed-softmax decode path (identity constraint on 1
+    device) must equal the plain attend() decode path."""
+    for window, softcap in ((None, None), (16, None), (None, 30.0)):
+        cfg = attn.AttentionConfig(d_model=64, num_heads=4, num_kv_heads=2,
+                                   sliding_window=window,
+                                   attn_softcap=softcap, dtype=jnp.float32)
+        params = attn.attention_init(jax.random.PRNGKey(12), cfg)
+        b, t = 2, 24
+        x = jax.random.normal(jax.random.PRNGKey(13), (b, t, 64),
+                              jnp.float32)
+        c1 = attn.init_kv_cache(cfg, b, window or t)
+        c2 = attn.init_kv_cache(cfg, b, window or t)
+        for i in range(t):
+            idx = jnp.asarray(i, jnp.int32)
+            o1, c1 = attn.decode_self_attention(params, x[:, i:i+1], c1,
+                                                idx, cfg)
+            o2, c2 = attn.decode_self_attention(
+                params, x[:, i:i+1], c2, idx, cfg,
+                logits_constraint=lambda z: z)
+            np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                       atol=3e-5, rtol=3e-5)

@@ -1,0 +1,110 @@
+"""Executable checks of the paper's Section-4 theory on exact tabular
+IALMs (Lemma 1 / Corollary 1 / Lemma 2 / Theorem 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ialm, theory
+
+
+def _uniform_policy(na):
+    return lambda l: np.full((na,), 1.0 / na)
+
+
+def _const_influence(nu, p=None):
+    if p is None:
+        p = np.full((nu,), 1.0 / nu)
+    return lambda l: p
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_exact_influence_is_distribution(seed):
+    rng = np.random.default_rng(seed)
+    T1, T2, R, pi2, b0 = ialm.random_system(rng)
+    infl = ialm.exact_influence(T1, T2, pi2, b0)
+    # probe a few short histories
+    for l in [(0,), (1,), (0, 0, 1), (1, 1, 0), (0, 1, 1, 0, 0)]:
+        p = infl(l)
+        assert p.shape == (T1.shape[1],)
+        assert np.all(p >= -1e-12)
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-9)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_lemma1_same_policy_same_influence(seed):
+    """Lemma 1: one joint policy induces exactly one influence — the
+    filter is a deterministic function of (T1, T2, pi2, b0)."""
+    rng = np.random.default_rng(seed)
+    T1, T2, R, pi2, b0 = ialm.random_system(rng)
+    i1 = ialm.exact_influence(T1, T2, pi2, b0)
+    i2 = ialm.exact_influence(T1.copy(), T2.copy(), pi2.copy(), b0.copy())
+    for l in [(0,), (0, 1, 1), (1, 0, 0, 1, 1)]:
+        np.testing.assert_allclose(i1(l), i2(l), atol=1e-12)
+
+
+def test_corollary1_transition_independence():
+    """Corollary 1: if u is independent of the other agent's actions
+    (T2 doesn't depend on a2 ⇒ x2 evolves autonomously), every pi2 gives
+    the SAME influence distribution."""
+    rng = np.random.default_rng(0)
+    T1, T2, R, _, b0 = ialm.random_system(rng)
+    # make region 2's dynamics action-independent
+    T2 = np.repeat(T2[:, :, :1, :], T2.shape[2], axis=2)
+    pi_a = np.array([[1.0, 0.0], [1.0, 0.0]])
+    pi_b = np.array([[0.0, 1.0], [0.5, 0.5]])
+    ia = ialm.exact_influence(T1, T2, pi_a, b0)
+    ib = ialm.exact_influence(T1, T2, pi_b, b0)
+    for l in [(0,), (1, 0, 1), (0, 1, 1, 0, 0)]:
+        np.testing.assert_allclose(ia(l), ib(l), atol=1e-10)
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.0, 0.3))
+@settings(max_examples=15, deadline=None)
+def test_lemma2_bound_holds(seed, eps):
+    """|Q_M1 - Q_M2| <= R̄ (H-t)(H-t+1)/2 · ξ for perturbed influences."""
+    rng = np.random.default_rng(seed)
+    T1, _, R, _, _ = ialm.random_system(rng)
+    nu = T1.shape[1]
+    p1 = np.full((nu,), 1.0 / nu)
+    p2 = p1.copy()
+    p2[0] = min(1.0, p1[0] + eps)
+    p2 = p2 / p2.sum()
+    cert = theory.lemma2_certificate(
+        T1, R, horizon=4, influence1=_const_influence(nu, p1),
+        influence2=_const_influence(nu, p2),
+        policy=_uniform_policy(T1.shape[2]))
+    assert cert["holds"], cert
+    assert cert["lhs"] <= cert["bound"] + 1e-9
+
+
+def test_lemma2_bound_tightness_zero_perturbation():
+    rng = np.random.default_rng(7)
+    T1, _, R, _, _ = ialm.random_system(rng)
+    nu = T1.shape[1]
+    cert = theory.lemma2_certificate(
+        T1, R, horizon=4, influence1=_const_influence(nu),
+        influence2=_const_influence(nu), policy=_uniform_policy(T1.shape[2]))
+    assert cert["xi"] == pytest.approx(0.0, abs=1e-12)
+    assert cert["lhs"] == pytest.approx(0.0, abs=1e-12)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_theorem1_small_perturbation_same_optimal_policy(seed):
+    """Theorem 1's conclusion: when the action gap dominates 2Δ, the
+    optimal policies of the two IALMs coincide on every history where the
+    gap condition holds."""
+    rng = np.random.default_rng(seed)
+    T1, _, R, _, _ = ialm.random_system(rng)
+    nu = T1.shape[1]
+    p1 = np.full((nu,), 1.0 / nu)
+    p2 = p1 + np.linspace(-1e-4, 1e-4, nu)
+    p2 = np.abs(p2) / np.abs(p2).sum()
+    cert = theory.theorem1_certificate(
+        T1, R, horizon=4, influence1=_const_influence(nu, p1),
+        influence2=_const_influence(nu, p2))
+    # Theorem 1: gap > 2Δ ⇒ shared optimal policy
+    if cert["condition_met"]:
+        assert cert["same_optimal"], cert
