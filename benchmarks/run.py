@@ -41,18 +41,20 @@ def _emit(rows, name):
 
 
 # ---------------------------------------------------------------------------
-# shared tiny-scale MARL setup (CPU-budget versions of the paper envs)
+# shared tiny-scale MARL setup (CPU-budget versions of the paper envs).
+# Envs resolve through repro.envs.registry, so every registered scenario
+# automatically inherits every benchmark below.
 # ---------------------------------------------------------------------------
+def _env_names():
+    from repro.envs import registry
+    return registry.names()
+
+
 def _setup(env_name, n_side, *, horizon=32):
     from repro.core import influence
-    from repro.envs import traffic, warehouse
+    from repro.envs import registry
     from repro.marl import policy, ppo
-    if env_name == "traffic":
-        env_mod, env_cfg = traffic, traffic.TrafficConfig(
-            n=n_side, horizon=horizon)
-    else:
-        env_mod, env_cfg = warehouse, warehouse.WarehouseConfig(
-            k=n_side, horizon=horizon)
+    env_mod, env_cfg = registry.make(env_name, side=n_side, horizon=horizon)
     info = env_cfg.info()
     pc = policy.PolicyConfig(obs_dim=info.obs_dim, n_actions=info.n_actions,
                              hidden=(64, 64))
@@ -71,7 +73,7 @@ def fig3_learning(fast: bool = False):
     rows = []
     rounds = 3 if fast else 10
     inner = 10 if fast else 40
-    for env_name in ("traffic", "warehouse"):
+    for env_name in _env_names():
         env_mod, env_cfg, info, pc, ac, ppo_cfg = _setup(env_name, 2)
         # --- DIALS and untrained-DIALS
         for untrained in (False, True):
@@ -114,7 +116,7 @@ def fig3_scalability(fast: bool = False):
     from repro.marl import runner
     rows = []
     sides = (2, 3) if fast else (2, 3, 4, 5)
-    for env_name in ("traffic", "warehouse"):
+    for env_name in _env_names():
         for side in sides:
             env_mod, env_cfg, info, pc, ac, ppo_cfg = _setup(env_name, side)
             n = info.n_agents
@@ -200,13 +202,11 @@ def table_lemma2(fast: bool = False):
 
 def table_memory(fast: bool = False):
     """Paper Table 3 analogue: state bytes of GS vs per-agent LS."""
-    from repro.envs import traffic, warehouse
+    from repro.envs import registry
     rows = []
     for side in (2, 5, 7, 10):
-        for env_name, mod, cfg in (
-                ("traffic", traffic, traffic.TrafficConfig(n=side)),
-                ("warehouse", warehouse,
-                 warehouse.WarehouseConfig(k=side))):
+        for env_name in _env_names():
+            mod, cfg = registry.make(env_name, side=side)
             gs = mod.gs_init(jax.random.PRNGKey(0), cfg)
             ls = mod.ls_init(jax.random.PRNGKey(0), cfg)
             bytes_of = lambda t: sum(x.size * x.dtype.itemsize

@@ -1,4 +1,5 @@
-"""Quickstart: train 4 warehouse robots with DIALS in ~2 minutes on CPU.
+"""Quickstart: train a 4-agent networked system with DIALS in ~2 minutes
+on CPU.
 
 The three moving parts of the paper, end to end:
   1. a GLOBAL simulator (GS) used only to collect (ALSH, u) datasets,
@@ -7,17 +8,29 @@ The three moving parts of the paper, end to end:
      every agent trains PPO independently (and, in deployment, in
      parallel) for F steps between AIP refreshes.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Any registered environment works — the env resolves by name through
+``repro.envs.registry`` (traffic, warehouse, powergrid, supplychain, or
+your own).
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--env warehouse]
 """
+import argparse
+
 import jax
 
 from repro.core import dials, influence
-from repro.envs import warehouse
+from repro.envs import registry
 from repro.marl import policy, ppo
 
 
 def main():
-    env_cfg = warehouse.WarehouseConfig(k=2, horizon=32)   # 4 robots
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="warehouse", choices=registry.names())
+    ap.add_argument("--side", type=int, default=2,
+                    help="uniform size knob (side=2 -> 4 agents)")
+    args = ap.parse_args()
+
+    env_mod, env_cfg = registry.make(args.env, side=args.side, horizon=32)
     info = env_cfg.info()
 
     policy_cfg = policy.PolicyConfig(
@@ -33,9 +46,9 @@ def main():
         n_envs=8, rollout_steps=16, eval_episodes=8)
 
     trainer = dials.DIALSTrainer(
-        warehouse, env_cfg, policy_cfg, aip_cfg, ppo.PPOConfig(), cfg)
+        env_mod, env_cfg, policy_cfg, aip_cfg, ppo.PPOConfig(), cfg)
 
-    print(f"training {info.n_agents} agents with DIALS "
+    print(f"training {info.n_agents} {args.env} agents with DIALS "
           f"(F={cfg.aip_refresh} PPO iters/refresh)")
     _, history = trainer.run(jax.random.PRNGKey(0), log=lambda r: print(
         f"  round {r['round']}: GS return {r['gs_return']:.4f}  "
@@ -44,7 +57,6 @@ def main():
 
     first, last = history[0], history[-1]
     print(f"\nGS return {first['gs_return']:.4f} -> {last['gs_return']:.4f}")
-    assert last["gs_return"] >= first["gs_return"] - 1e-3 or True
     print("done.")
 
 

@@ -1,8 +1,10 @@
-"""Paper Figure 3 in miniature: train the 2x2 traffic grid with
+"""Paper Figure 3 in miniature: train a 4-agent networked system with
 (a) the global simulator, (b) DIALS, (c) untrained-DIALS, and compare
 final returns and wall time — the paper's three-way comparison on one CPU.
+Defaults to the 2x2 traffic grid; any registered env name works.
 
 Run:  PYTHONPATH=src python examples/traffic_gs_vs_dials.py [--rounds N]
+          [--env traffic]
 """
 import argparse
 import time
@@ -10,7 +12,7 @@ import time
 import jax
 
 from repro.core import dials, influence
-from repro.envs import traffic
+from repro.envs import registry
 from repro.marl import policy, ppo, runner
 
 
@@ -18,9 +20,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--inner", type=int, default=20)
+    ap.add_argument("--env", default="traffic", choices=registry.names())
     args = ap.parse_args()
 
-    env_cfg = traffic.TrafficConfig(n=2, horizon=32)
+    env_mod, env_cfg = registry.make(args.env, side=2, horizon=32)
     info = env_cfg.info()
     pc = policy.PolicyConfig(obs_dim=info.obs_dim,
                              n_actions=info.n_actions, hidden=(64, 64))
@@ -38,12 +41,13 @@ def main():
             untrained=untrained, eval_episodes=8)
         t0 = time.time()
         _, hist = dials.DIALSTrainer(
-            traffic, env_cfg, pc, ac, ppo_cfg, cfg).run(jax.random.PRNGKey(0))
+            env_mod, env_cfg, pc, ac, ppo_cfg, cfg).run(
+            jax.random.PRNGKey(0))
         results[name] = (hist[-1]["gs_return"], time.time() - t0)
 
     # GS baseline: the same number of PPO iterations, on the global sim
     init_fn, train_fn, eval_fn = runner.make_gs_trainer(
-        traffic, env_cfg, pc, ppo_cfg,
+        env_mod, env_cfg, pc, ppo_cfg,
         runner.RunConfig(n_envs=8, rollout_steps=16))
     state = init_fn(jax.random.PRNGKey(0))
     t0 = time.time()

@@ -5,5 +5,10 @@ simulator** (LS) built from the *same* per-region transition function, so
 the IBA exactness property — LS(x, a, u) == region-restriction of GS when
 u equals the realized influence — holds by construction and is property-
 tested.
+
+Importing any env module registers it in :mod:`repro.envs.registry`;
+importing this package registers all built-ins. Resolve by name with
+``registry.make(name, side=..., **overrides) -> (module, cfg)``.
 """
-from repro.envs import base, traffic, warehouse  # noqa: F401
+from repro.envs import base, registry  # noqa: F401
+from repro.envs import powergrid, supplychain, traffic, warehouse  # noqa: F401

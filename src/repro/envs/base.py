@@ -1,7 +1,8 @@
 """fPOSG environment interface.
 
-An environment module (traffic, warehouse) exposes two simulator
-namespaces with pure-JAX, jit/vmap-able step functions:
+An environment module (traffic, warehouse, powergrid, supplychain — see
+``repro.envs.registry``) exposes two simulator namespaces with pure-JAX,
+jit/vmap-able step functions:
 
 Global simulator (GS)
     ``gs_init(key, cfg) -> state``
@@ -13,16 +14,31 @@ Global simulator (GS)
 Local simulator (LS) — single region
     ``ls_init(key, cfg) -> local``
     ``ls_step(local, action (), u (M,), key, cfg) ->
-        (local', obs (O,), reward ())``
+        (local', obs (O,), reward (), done ())``
 
 The influence sources ``u`` are binary vectors (length M): the paper's
 traffic env has M=4 (car entering each incoming lane) and warehouse M=12
 (neighbor robot on each shared item cell).
+
+Exactness protocol (exercised generically by ``tests/test_registry.py``)
+— every module also factors its randomness so GS and LS can be driven by
+the *same* exogenous draws:
+
+    ``gs_exo(key, cfg) -> exo``            sample the exogenous noise
+    ``gs_step_given(state, actions, exo, cfg)``   deterministic GS step
+    ``exo_locals(exo, cfg) -> (N, ...)``   per-region restriction of exo
+    ``ls_step_given(local, action (), u (M,), exo_i, cfg)``
+                                           deterministic LS step
+
+and keeps ``gs_locals`` keys identical to the LS state keys (minus the
+step counter ``t``), so replaying region i through ``ls_step_given``
+with the realized ``u[i]`` and ``exo_locals(exo)[i]`` must reproduce the
+GS's region-i restriction bit-for-bit — Definition 3 as an executable
+property, for every registered env.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,194 @@
+"""Power-grid voltage control env — a ring of feeder buses.
+
+``n_buses`` agents sit on a ring of distribution feeders; agent i owns a
+feeder of ``feeder`` nodes whose discrete voltage levels drift under
+random load fluctuations. The agent's on-load tap changer (action:
+lower / hold / raise, a saturating integrator in [-tap_max, tap_max])
+shifts its feeder's voltage; the reward is the fraction of nodes inside
+the regulation band around nominal.
+
+Buses are coupled ONLY through the tie-lines to their two electrical
+neighbours: an over-voltage (under-voltage) excursion at a neighbour
+pushes this feeder's voltage up (down) by one level. Agent i's influence
+sources are therefore the four binary flags
+``[left_over, left_under, right_over, right_under]`` of its neighbours —
+computed from the PRE-step global state, so conditioning on u
+d-separates the region from the rest of the ring.
+
+The per-bus transition :func:`bus_step` is shared verbatim between GS
+and LS ⇒ IBA exactness by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs import registry
+from repro.envs.base import EnvInfo
+
+TAP_MAX = 2                       # tap positions in [-2, 2] -> 5 one-hot
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerGridConfig:
+    n_buses: int = 4              # ring length = number of agents
+    feeder: int = 6               # nodes per feeder
+    v_levels: int = 9             # discrete voltage levels [0, v_levels)
+    band: int = 1                 # |v - nominal| <= band is in-band
+    p_load: float = 0.4           # per-node load-fluctuation probability
+    horizon: int = 100
+
+    @property
+    def n_agents(self) -> int:
+        return self.n_buses
+
+    @property
+    def nominal(self) -> int:
+        return (self.v_levels - 1) // 2
+
+    def info(self) -> EnvInfo:
+        obs_dim = self.feeder + (2 * TAP_MAX + 1)
+        return EnvInfo(name="powergrid", n_agents=self.n_agents,
+                       obs_dim=obs_dim, n_actions=3, n_influence=4,
+                       horizon=self.horizon, alsh_dim=obs_dim + 3)
+
+
+# ---------------------------------------------------------------------------
+# Shared per-bus transition (the \dot{T}_i of the IALM)
+# ---------------------------------------------------------------------------
+def bus_step(volts, tap, action, u, load, cfg: PowerGridConfig):
+    """One bus region for one step.
+
+    volts: (F,) int32 node voltage levels; tap: () int32 in [-2, 2];
+    action: () in {0: lower, 1: hold, 2: raise};
+    u: (4,) bool — [left_over, left_under, right_over, right_under];
+    load: (F,) int32 in {-1, 0, +1} — the exogenous load fluctuations.
+
+    Returns (new_volts, new_tap, reward).
+    """
+    ub = u.astype(bool)
+    new_tap = jnp.clip(tap + action.astype(jnp.int32) - 1, -TAP_MAX, TAP_MAX)
+    # neighbour excursions propagate one level over the tie-lines
+    push = ((ub[0].astype(jnp.int32) + ub[2])
+            - (ub[1].astype(jnp.int32) + ub[3]))
+    new_volts = jnp.clip(
+        volts + load + (new_tap - tap) + push, 0, cfg.v_levels - 1)
+    in_band = jnp.abs(new_volts - cfg.nominal) <= cfg.band
+    reward = in_band.mean(dtype=jnp.float32)
+    return new_volts, new_tap, reward
+
+
+def _flags(volts, cfg: PowerGridConfig):
+    """(..., F) volts -> (over (...,), under (...,)) excursion flags."""
+    hi = cfg.nominal + cfg.band
+    lo = cfg.nominal - cfg.band
+    return volts.max(axis=-1) > hi, volts.min(axis=-1) < lo
+
+
+def _obs(volts, tap, cfg: PowerGridConfig):
+    return jnp.concatenate([
+        volts.astype(jnp.float32) / (cfg.v_levels - 1),
+        jax.nn.one_hot(tap + TAP_MAX, 2 * TAP_MAX + 1, dtype=jnp.float32),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Global simulator
+# ---------------------------------------------------------------------------
+def gs_init(key, cfg: PowerGridConfig):
+    nom = cfg.nominal
+    volts = jax.random.randint(
+        key, (cfg.n_agents, cfg.feeder), nom - 1, nom + 2)
+    taps = jnp.zeros((cfg.n_agents,), jnp.int32)
+    return {"volts": volts.astype(jnp.int32), "tap": taps,
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def gs_exo(key, cfg: PowerGridConfig):
+    """Exogenous load fluctuations, (N, F) int32 in {-1, 0, +1}."""
+    k1, k2 = jax.random.split(key)
+    hit = jax.random.bernoulli(k1, cfg.p_load, (cfg.n_agents, cfg.feeder))
+    up = jax.random.bernoulli(k2, 0.5, (cfg.n_agents, cfg.feeder))
+    return jnp.where(hit, jnp.where(up, 1, -1), 0).astype(jnp.int32)
+
+
+def exo_locals(load, cfg: PowerGridConfig):
+    """Per-region restriction of the exogenous draws (already per-bus)."""
+    return load
+
+
+def gs_influence(state, cfg: PowerGridConfig):
+    """u (N, 4) from the PRE-step volts: neighbour excursion flags."""
+    over, under = _flags(state["volts"], cfg)               # (N,), (N,)
+    left = lambda x: jnp.roll(x, 1)                         # x[i-1 mod N]
+    right = lambda x: jnp.roll(x, -1)                       # x[i+1 mod N]
+    return jnp.stack(
+        [left(over), left(under), right(over), right(under)], axis=-1)
+
+
+def gs_step_given(state, actions, load, cfg: PowerGridConfig):
+    """Deterministic GS step given the load draws (N, F)."""
+    u = gs_influence(state, cfg)                            # (N, 4)
+    step_fn = jax.vmap(lambda v, tp, a, uu, ld: bus_step(v, tp, a, uu,
+                                                         ld, cfg))
+    new_volts, new_taps, rewards = step_fn(
+        state["volts"], state["tap"], actions, u, load)
+    obs = jax.vmap(lambda v, tp: _obs(v, tp, cfg))(new_volts, new_taps)
+    new_state = {"volts": new_volts, "tap": new_taps, "t": state["t"] + 1}
+    done = new_state["t"] >= cfg.horizon
+    return new_state, obs, rewards, u.astype(jnp.float32), done
+
+
+def gs_step(state, actions, key, cfg: PowerGridConfig):
+    return gs_step_given(state, actions, gs_exo(key, cfg), cfg)
+
+
+def gs_obs(state, cfg: PowerGridConfig):
+    return jax.vmap(lambda v, tp: _obs(v, tp, cfg))(
+        state["volts"], state["tap"])
+
+
+def gs_locals(state, cfg: PowerGridConfig):
+    """Per-agent local states (N, ...) for dataset collection."""
+    return {"volts": state["volts"], "tap": state["tap"]}
+
+
+# ---------------------------------------------------------------------------
+# Local simulator (one bus; neighbour flags driven by the AIP)
+# ---------------------------------------------------------------------------
+def ls_init(key, cfg: PowerGridConfig):
+    nom = cfg.nominal
+    return {"volts": jax.random.randint(
+                key, (cfg.feeder,), nom - 1, nom + 2).astype(jnp.int32),
+            "tap": jnp.zeros((), jnp.int32),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def ls_step_given(local, action, u, load, cfg: PowerGridConfig):
+    """load: (F,) the region's exogenous draws."""
+    new_volts, new_tap, reward = bus_step(
+        local["volts"], local["tap"], action, u, load, cfg)
+    new = {"volts": new_volts, "tap": new_tap, "t": local["t"] + 1}
+    done = new["t"] >= cfg.horizon
+    return new, _obs(new_volts, new_tap, cfg), reward, done
+
+
+def ls_step(local, action, u, key, cfg: PowerGridConfig):
+    """u: (4,) influence-source bits (sampled from the AIP)."""
+    k1, k2 = jax.random.split(key)
+    hit = jax.random.bernoulli(k1, cfg.p_load, (cfg.feeder,))
+    up = jax.random.bernoulli(k2, 0.5, (cfg.feeder,))
+    load = jnp.where(hit, jnp.where(up, 1, -1), 0).astype(jnp.int32)
+    return ls_step_given(local, action, u, load, cfg)
+
+
+def ls_obs(local, cfg: PowerGridConfig):
+    return _obs(local["volts"], local["tap"], cfg)
+
+
+registry.register(
+    "powergrid", sys.modules[__name__], PowerGridConfig(),
+    sizer=lambda cfg, side: dataclasses.replace(cfg, n_buses=side * side))

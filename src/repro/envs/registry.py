@@ -1,0 +1,80 @@
+"""Environment registry — the env analogue of ``repro.configs.registry``.
+
+Every local-form fPOSG environment module self-registers here (see the
+bottom of ``traffic.py``/``warehouse.py``/``powergrid.py``/
+``supplychain.py``), after which the whole stack — benchmarks, examples,
+smoke tests and the exactness/conformance property suite — resolves it by
+name. Adding a scenario is therefore a one-file change: write the module,
+call :func:`register` at its bottom, import it from ``repro.envs``.
+
+``register(name, module, default_cfg)`` also takes an optional ``sizer``
+callback ``(cfg, side) -> cfg`` mapping the benchmarks' uniform "side"
+knob onto the env's own size field (traffic ``n=side`` ⇒ side² agents,
+powergrid ``n_buses=side²`` — so agent counts stay comparable across
+envs in the scalability sweeps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    """A registered environment: its module, default config, and sizer."""
+    name: str
+    module: Any                      # module following the base.py protocol
+    default_cfg: Any                 # frozen dataclass with .info()
+    sizer: Callable[[Any, int], Any]
+
+
+_ENVS: dict = {}
+
+
+def register(name: str, module, default_cfg, *,
+             sizer: Optional[Callable] = None) -> None:
+    """Register an env module under ``name``. Idempotent re-registration
+    of the same module is allowed (module reloads); clashes raise."""
+    prev = _ENVS.get(name)
+    if prev is not None and prev.module.__name__ != module.__name__:
+        raise ValueError(f"env {name!r} already registered "
+                         f"by {prev.module.__name__}")
+    if sizer is None:
+        sizer = lambda cfg, side: cfg
+    _ENVS[name] = EnvSpec(name, module, default_cfg, sizer)
+
+
+def _ensure_builtins() -> None:
+    # importing the package runs the built-in modules' register() calls
+    import repro.envs  # noqa: F401
+
+
+def names() -> list:
+    """Sorted names of every registered environment."""
+    _ensure_builtins()
+    return sorted(_ENVS)
+
+
+def get(name: str) -> EnvSpec:
+    _ensure_builtins()
+    try:
+        return _ENVS[name]
+    except KeyError:
+        raise KeyError(f"unknown env {name!r}; registered: {names()}") \
+            from None
+
+
+def make(name: str, *, side: Optional[int] = None, **overrides):
+    """Resolve ``name`` to ``(module, cfg)``.
+
+    ``side`` applies the env's sizer (uniform scale knob across envs);
+    ``overrides`` are ``dataclasses.replace`` field overrides applied
+    after sizing (e.g. ``horizon=32``).
+    """
+    spec = get(name)
+    cfg = spec.default_cfg
+    if side is not None:
+        cfg = spec.sizer(cfg, side)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return spec.module, cfg

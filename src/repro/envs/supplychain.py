@@ -1,0 +1,190 @@
+"""Supply-chain env — a production line of workcells with finite buffers.
+
+``n_cells`` agents form a line; cell i holds raw parts in an input store
+and finished parts in an output buffer, both capped at ``buf``. Each
+step a cell first tries to hand its oldest finished part downstream
+(blocked when the downstream input store is full), then — if the agent
+chooses to work, has a raw part, has output space and its machine did
+not break down this step — converts one raw part into a finished one.
+The line head receives raw parts from an external arrival process; the
+tail ships into an infinite sink. Reward = parts shipped minus a small
+work-in-progress holding cost (throughput vs inventory).
+
+Cells are coupled ONLY through part hand-offs, so agent i's influence
+sources are the two bits ``[upstream_handoff, downstream_backpressure]``
+— both computed from the PRE-step global state, so conditioning on u
+d-separates the cell from the rest of the line.
+
+The per-cell transition :func:`cell_step` is shared verbatim between GS
+and LS ⇒ IBA exactness by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs import registry
+from repro.envs.base import EnvInfo
+
+
+@dataclasses.dataclass(frozen=True)
+class SupplyChainConfig:
+    n_cells: int = 4              # line length = number of agents
+    buf: int = 4                  # capacity of input store AND output buffer
+    p_arrival: float = 0.6        # raw-part arrival probability at the head
+    p_break: float = 0.1          # per-step machine breakdown probability
+    hold_cost: float = 0.02      # WIP holding cost per stored part
+    horizon: int = 100
+
+    @property
+    def n_agents(self) -> int:
+        return self.n_cells
+
+    def info(self) -> EnvInfo:
+        obs_dim = 2 * (self.buf + 1)
+        return EnvInfo(name="supplychain", n_agents=self.n_agents,
+                       obs_dim=obs_dim, n_actions=2, n_influence=2,
+                       horizon=self.horizon, alsh_dim=obs_dim + 2)
+
+
+# ---------------------------------------------------------------------------
+# Shared per-cell transition (the \dot{T}_i of the IALM)
+# ---------------------------------------------------------------------------
+def cell_step(store, buffer, action, u, breakdown, cfg: SupplyChainConfig):
+    """One workcell for one step.
+
+    store, buffer: () int32 in [0, buf]; action: () in {0: idle, 1: work};
+    u: (2,) bool — [upstream hand-off arrives, downstream backpressure];
+    breakdown: () bool — exogenous machine-failure draw.
+
+    Returns (new_store, new_buffer, reward, shipped).
+
+    Invariants (given u's GS semantics — a hand-off only arrives when the
+    store had space pre-step): both levels stay in [0, buf].
+    """
+    ub = u.astype(bool)
+    # Gate the hand-off on store space: a no-op under GS semantics (the GS
+    # only raises the bit when the store had room pre-step), but the IALS
+    # loop drives this with AIP-sampled u, which must not push the local
+    # state out of its [0, buf] domain.
+    handoff_in, bp = ub[0] & (store < cfg.buf), ub[1]
+    ship = (buffer > 0) & ~bp
+    buf_after = buffer - ship.astype(jnp.int32)
+    work = ((action.astype(jnp.int32) == 1) & (store > 0)
+            & (buf_after < cfg.buf) & ~breakdown.astype(bool))
+    work_i = work.astype(jnp.int32)
+    new_store = store - work_i + handoff_in.astype(jnp.int32)
+    new_buffer = buf_after + work_i
+    reward = (ship.astype(jnp.float32)
+              - cfg.hold_cost * (new_store + new_buffer).astype(jnp.float32))
+    return new_store, new_buffer, reward, ship
+
+
+def _obs(store, buffer, cfg: SupplyChainConfig):
+    return jnp.concatenate([
+        jax.nn.one_hot(store, cfg.buf + 1, dtype=jnp.float32),
+        jax.nn.one_hot(buffer, cfg.buf + 1, dtype=jnp.float32),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Global simulator
+# ---------------------------------------------------------------------------
+def gs_init(key, cfg: SupplyChainConfig):
+    k1, k2 = jax.random.split(key)
+    n = cfg.n_agents
+    return {"store": jax.random.randint(k1, (n,), 0, cfg.buf + 1),
+            "buffer": jax.random.randint(k2, (n,), 0, cfg.buf + 1),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def gs_exo(key, cfg: SupplyChainConfig):
+    """Exogenous draws: per-cell breakdowns (N,) + head arrival ()."""
+    k1, k2 = jax.random.split(key)
+    return {"breakdown": jax.random.bernoulli(
+                k1, cfg.p_break, (cfg.n_agents,)),
+            "arrival": jax.random.bernoulli(k2, cfg.p_arrival)}
+
+
+def exo_locals(exo, cfg: SupplyChainConfig):
+    """Per-region restriction: only the breakdown bit reaches a cell's
+    transition directly (the head arrival enters through u)."""
+    return exo["breakdown"]
+
+
+def gs_influence(state, exo, cfg: SupplyChainConfig):
+    """u (N, 2) from the PRE-step state: [hand-off in, backpressure]."""
+    store, buffer = state["store"], state["buffer"]
+    full = store >= cfg.buf                                  # (N,)
+    # backpressure: downstream input store is full (tail ships to a sink)
+    bp = jnp.concatenate([full[1:], jnp.zeros((1,), bool)])
+    # every cell's outgoing hand-off this step, by the shared ship rule
+    ship = (buffer > 0) & ~bp                                # (N,)
+    head_in = exo["arrival"] & ~full[0]
+    handoff_in = jnp.concatenate([head_in[None], ship[:-1]])
+    return jnp.stack([handoff_in, bp], axis=-1)              # (N, 2)
+
+
+def gs_step_given(state, actions, exo, cfg: SupplyChainConfig):
+    """Deterministic GS step given the exogenous draws."""
+    u = gs_influence(state, exo, cfg)                        # (N, 2)
+    step_fn = jax.vmap(lambda s, b, a, uu, br: cell_step(s, b, a, uu,
+                                                         br, cfg))
+    new_store, new_buffer, rewards, _ship = step_fn(
+        state["store"], state["buffer"], actions, u, exo["breakdown"])
+    obs = jax.vmap(lambda s, b: _obs(s, b, cfg))(new_store, new_buffer)
+    new_state = {"store": new_store, "buffer": new_buffer,
+                 "t": state["t"] + 1}
+    done = new_state["t"] >= cfg.horizon
+    return new_state, obs, rewards, u.astype(jnp.float32), done
+
+
+def gs_step(state, actions, key, cfg: SupplyChainConfig):
+    return gs_step_given(state, actions, gs_exo(key, cfg), cfg)
+
+
+def gs_obs(state, cfg: SupplyChainConfig):
+    return jax.vmap(lambda s, b: _obs(s, b, cfg))(
+        state["store"], state["buffer"])
+
+
+def gs_locals(state, cfg: SupplyChainConfig):
+    """Per-agent local states (N, ...) for dataset collection."""
+    return {"store": state["store"], "buffer": state["buffer"]}
+
+
+# ---------------------------------------------------------------------------
+# Local simulator (one workcell; hand-offs driven by the AIP)
+# ---------------------------------------------------------------------------
+def ls_init(key, cfg: SupplyChainConfig):
+    k1, k2 = jax.random.split(key)
+    return {"store": jax.random.randint(k1, (), 0, cfg.buf + 1),
+            "buffer": jax.random.randint(k2, (), 0, cfg.buf + 1),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def ls_step_given(local, action, u, breakdown, cfg: SupplyChainConfig):
+    """breakdown: () the region's exogenous machine-failure draw."""
+    new_store, new_buffer, reward, _ = cell_step(
+        local["store"], local["buffer"], action, u, breakdown, cfg)
+    new = {"store": new_store, "buffer": new_buffer, "t": local["t"] + 1}
+    done = new["t"] >= cfg.horizon
+    return new, _obs(new_store, new_buffer, cfg), reward, done
+
+
+def ls_step(local, action, u, key, cfg: SupplyChainConfig):
+    """u: (2,) influence-source bits (sampled from the AIP)."""
+    breakdown = jax.random.bernoulli(key, cfg.p_break)
+    return ls_step_given(local, action, u, breakdown, cfg)
+
+
+def ls_obs(local, cfg: SupplyChainConfig):
+    return _obs(local["store"], local["buffer"], cfg)
+
+
+registry.register(
+    "supplychain", sys.modules[__name__], SupplyChainConfig(),
+    sizer=lambda cfg, side: dataclasses.replace(cfg, n_cells=side * side))

@@ -20,10 +20,12 @@ between GS and LS ⇒ IBA exactness by construction.
 from __future__ import annotations
 
 import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
 
+from repro.envs import registry
 from repro.envs.base import EnvInfo
 
 
@@ -141,9 +143,21 @@ def gs_step_given(state, actions, inject, cfg: TrafficConfig):
     return new_state, obs, rewards, u, done
 
 
+def gs_exo(key, cfg: TrafficConfig):
+    """Exogenous draws: boundary car-injection bits (n, n, 4)."""
+    return jax.random.bernoulli(key, cfg.p_in, (cfg.n, cfg.n, 4))
+
+
+def exo_locals(inject, cfg: TrafficConfig):
+    """Per-region restriction of the exogenous draws. Boundary injection
+    reaches a region only through its inflow u, so the LS transition
+    takes no direct exogenous input."""
+    del inject
+    return jnp.zeros((cfg.n_agents, 0))
+
+
 def gs_step(state, actions, key, cfg: TrafficConfig):
-    inject = jax.random.bernoulli(key, cfg.p_in, (cfg.n, cfg.n, 4))
-    return gs_step_given(state, actions, inject, cfg)
+    return gs_step_given(state, actions, gs_exo(key, cfg), cfg)
 
 
 def gs_obs(state, cfg: TrafficConfig):
@@ -168,6 +182,13 @@ def ls_init(key, cfg: TrafficConfig):
             "t": jnp.zeros((), jnp.int32)}
 
 
+def ls_step_given(local, action, u, exo, cfg: TrafficConfig):
+    """Uniform-protocol alias: the traffic LS takes no direct exogenous
+    input (``exo`` is the empty per-region restriction)."""
+    del exo
+    return ls_step(local, action, u, None, cfg)
+
+
 def ls_step(local, action, u, key, cfg: TrafficConfig):
     """u: (4,) influence-source bits (sampled from the AIP)."""
     del key
@@ -184,3 +205,8 @@ def ls_step(local, action, u, key, cfg: TrafficConfig):
 
 def ls_obs(local, cfg: TrafficConfig):
     return _obs(local["lanes"], local["phase"])
+
+
+registry.register(
+    "traffic", sys.modules[__name__], TrafficConfig(),
+    sizer=lambda cfg, side: dataclasses.replace(cfg, n=side))

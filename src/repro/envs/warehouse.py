@@ -15,11 +15,13 @@ GS and LS ⇒ IBA exactness by construction.
 from __future__ import annotations
 
 import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.envs import registry
 from repro.envs.base import EnvInfo
 
 
@@ -172,10 +174,20 @@ def gs_step_given(state, actions, spawn_grid, cfg: WarehouseConfig):
     return new_state, obs, rewards, u.astype(jnp.float32), done
 
 
-def gs_step(state, actions, key, cfg: WarehouseConfig):
+def gs_exo(key, cfg: WarehouseConfig):
+    """Exogenous draws: item-appearance bits on the global grid (G, G)."""
     g = cfg.grid
-    spawn = jax.random.bernoulli(key, cfg.p_item, (g, g))
-    return gs_step_given(state, actions, spawn, cfg)
+    return jax.random.bernoulli(key, cfg.p_item, (g, g))
+
+
+def exo_locals(spawn_grid, cfg: WarehouseConfig):
+    """Per-region restriction: each region's 12 item-cell spawn bits."""
+    cells = jnp.asarray(item_cells(cfg))
+    return spawn_grid[cells[..., 0], cells[..., 1]]          # (N, 12)
+
+
+def gs_step(state, actions, key, cfg: WarehouseConfig):
+    return gs_step_given(state, actions, gs_exo(key, cfg), cfg)
 
 
 def gs_obs(state, cfg: WarehouseConfig):
@@ -216,3 +228,8 @@ def ls_step_given(local, action, u, spawn, cfg: WarehouseConfig):
 
 def ls_obs(local, cfg: WarehouseConfig):
     return _obs(local["pos"], local["ages"])
+
+
+registry.register(
+    "warehouse", sys.modules[__name__], WarehouseConfig(),
+    sizer=lambda cfg, side: dataclasses.replace(cfg, k=side))

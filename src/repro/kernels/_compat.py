@@ -1,0 +1,6 @@
+"""Pallas-TPU API compatibility shims shared by the kernel modules."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -16,6 +16,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+
 
 def _gae_kernel(r_ref, v_ref, nv_ref, d_ref, adv_ref, carry_ref, *,
                 gamma: float, lam: float):
@@ -46,7 +49,7 @@ def gae_reverse_scan(rewards, values, next_values, dones, *,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((t, b), jnp.float32),
         scratch_shapes=[pltpu.VMEM((b,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(rewards, values, next_values, dones)

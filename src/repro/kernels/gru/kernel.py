@@ -19,6 +19,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
+
 
 def _gru_kernel(gi_ref, wh_ref, bh_ref, reset_ref, h0_ref, hs_ref, h_ref):
     t = pl.program_id(0)
@@ -63,7 +66,7 @@ def gru_scan(gi, wh, bh, h0, resets, *, interpret: bool = True):
         out_specs=pl.BlockSpec((1, bsz, hdim), lambda ti: (ti, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((t, bsz, hdim), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bsz, hdim), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(gi, wh, bh, resets, h0)

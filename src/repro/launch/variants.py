@@ -150,6 +150,35 @@ def _train_no_seqpar(spec, shape):
     return {"seq_parallel": False}
 
 
+# ---------------------------------------------------------------------------
+# §DIALS MARL scenarios: named (env, side) cells resolved through
+# repro.envs.registry — the env analogue of the arch/variant grid above,
+# so launch scripts and benchmarks name a scenario instead of hardcoding
+# an env module. Adding an env to the registry makes it launchable here
+# by adding one line.
+# ---------------------------------------------------------------------------
+MARL_SCENARIOS = {
+    "traffic-2x2": ("traffic", 2),
+    "traffic-5x5": ("traffic", 5),
+    "warehouse-2x2": ("warehouse", 2),
+    "warehouse-5x5": ("warehouse", 5),
+    "powergrid-ring4": ("powergrid", 2),
+    "powergrid-ring16": ("powergrid", 4),
+    "supplychain-line4": ("supplychain", 2),
+    "supplychain-line16": ("supplychain", 4),
+}
+
+
+def marl_scenario(name, **overrides):
+    """Resolve a named scenario to ``(env_module, env_cfg)``.
+
+    ``overrides`` are env-config field overrides (e.g. ``horizon=32``).
+    """
+    from repro.envs import registry
+    env_name, side = MARL_SCENARIOS[name]
+    return registry.make(env_name, side=side, **overrides)
+
+
 VARIANTS = {
     "train_no_seqpar": _train_no_seqpar,
     "train_zero3": _train_zero3,

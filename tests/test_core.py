@@ -1,13 +1,13 @@
-"""AIP learning, GS dataset collection, and the DIALS end-to-end loop."""
-import os
-
+"""AIP learning, GS dataset collection, and the DIALS end-to-end loop.
+Environments resolve through the registry, so the DIALS end-to-end smoke
+test runs against every registered scenario."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import dials, gs as gs_mod, ials as ials_mod, influence
-from repro.envs import traffic, warehouse
+from repro.envs import registry
 from repro.marl import policy as policy_mod, ppo as ppo_mod
 from repro.marl import runner as runner_mod
 
@@ -70,11 +70,11 @@ def test_aip_stacked_vmap_training_independent():
 # Algorithm 2: GS dataset collection
 # ---------------------------------------------------------------------------
 def test_collector_shapes_and_consistency():
-    cfg = warehouse.WarehouseConfig(k=2, horizon=16)
+    env_mod, cfg = registry.make("warehouse", horizon=16)
     info = cfg.info()
     pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
                                  n_actions=info.n_actions, hidden=(16,))
-    collect = gs_mod.make_collector(warehouse, cfg, pc, n_envs=3, steps=8)
+    collect = gs_mod.make_collector(env_mod, cfg, pc, n_envs=3, steps=8)
     params = jax.vmap(lambda k: policy_mod.policy_init(k, pc))(
         jax.random.split(jax.random.PRNGKey(0), info.n_agents))
     data = collect(params, jax.random.PRNGKey(1))
@@ -103,10 +103,10 @@ def _tiny_setup(env_mod, env_cfg, kind="fnn"):
 
 
 def test_gs_trainer_one_iteration():
-    cfg = traffic.TrafficConfig(n=2, horizon=16)
-    info, pc, _, ppo_cfg = _tiny_setup(traffic, cfg)
+    env_mod, cfg = registry.make("traffic", horizon=16)
+    info, pc, _, ppo_cfg = _tiny_setup(env_mod, cfg)
     init_fn, train_fn, eval_fn = runner_mod.make_gs_trainer(
-        traffic, cfg, pc, ppo_cfg, runner_mod.RunConfig(
+        env_mod, cfg, pc, ppo_cfg, runner_mod.RunConfig(
             n_envs=2, rollout_steps=8))
     state = init_fn(jax.random.PRNGKey(0))
     state2, metrics = train_fn(state)
@@ -120,10 +120,10 @@ def test_gs_trainer_one_iteration():
 def test_ials_trainer_zero_cross_agent_interaction():
     """Agents in the IALS loop are isolated: zeroing agent j's params
     must not change agent i's trajectory metrics (given same keys)."""
-    cfg = traffic.TrafficConfig(n=2, horizon=16)
-    info, pc, ac, ppo_cfg = _tiny_setup(traffic, cfg)
+    env_mod, cfg = registry.make("traffic", horizon=16)
+    info, pc, ac, ppo_cfg = _tiny_setup(env_mod, cfg)
     init_fn, train_fn = ials_mod.make_ials_trainer(
-        traffic, cfg, pc, ac, ppo_cfg, n_envs=2, rollout_steps=8)
+        env_mod, cfg, pc, ac, ppo_cfg, n_envs=2, rollout_steps=8)
     state = init_fn(jax.random.PRNGKey(0))
     aips = jax.vmap(lambda k: influence.aip_init(k, ac))(
         jax.random.split(jax.random.PRNGKey(1), info.n_agents))
@@ -142,18 +142,19 @@ def test_ials_trainer_zero_cross_agent_interaction():
 # ---------------------------------------------------------------------------
 # DIALS end-to-end (Algorithm 1)
 # ---------------------------------------------------------------------------
-def _dials_trainer(tmp_path=None, **kw):
-    cfg = warehouse.WarehouseConfig(k=2, horizon=16)
-    info, pc, ac, ppo_cfg = _tiny_setup(warehouse, cfg)
+def _dials_trainer(tmp_path=None, env_name="warehouse", **kw):
+    env_mod, cfg = registry.make(env_name, horizon=16)
+    info, pc, ac, ppo_cfg = _tiny_setup(env_mod, cfg)
     dcfg = dials.DIALSConfig(
         outer_rounds=2, aip_refresh=2, collect_envs=2, collect_steps=16,
         n_envs=2, rollout_steps=8, eval_episodes=2,
         ckpt_dir=str(tmp_path) if tmp_path else None, **kw)
-    return dials.DIALSTrainer(warehouse, cfg, pc, ac, ppo_cfg, dcfg)
+    return dials.DIALSTrainer(env_mod, cfg, pc, ac, ppo_cfg, dcfg)
 
 
-def test_dials_end_to_end_runs():
-    trainer = _dials_trainer()
+@pytest.mark.parametrize("env_name", registry.names())
+def test_dials_end_to_end_runs(env_name):
+    trainer = _dials_trainer(env_name=env_name)
     state, hist = trainer.run(jax.random.PRNGKey(0))
     assert len(hist) == 2
     for rec in hist:

@@ -5,13 +5,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra absent: property tests skip
+    from _hypothesis_stub import given, settings, st
+
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.distributed import mesh as mesh_lib
 
-SINGLE = AbstractMesh((16, 16), ("data", "model"))
-MULTI = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+def _abstract_mesh(sizes, names):
+    """AbstractMesh across jax versions: (sizes, names) vs shape_tuple."""
+    try:
+        return AbstractMesh(sizes, names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+SINGLE = _abstract_mesh((16, 16), ("data", "model"))
+MULTI = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 class _Leaf:

@@ -1,0 +1,186 @@
+"""Parameterized conformance suite for the environment registry.
+
+Every env registered in ``repro.envs.registry`` must satisfy the fPOSG
+module protocol of ``repro.envs.base``: EnvInfo shape consistency,
+GS↔LS exactness on the shared per-region transition (the IBA property
+the paper rests on), and jit/vmap-ability of ``gs_step``/``ls_step``.
+A new env added to the registry inherits this whole suite for free."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.envs import registry
+
+ENVS = registry.names()
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+def test_builtins_registered():
+    assert {"powergrid", "supplychain", "traffic", "warehouse"} <= set(ENVS)
+    assert len(ENVS) >= 4
+
+
+def test_make_applies_sizer_and_overrides():
+    _, cfg = registry.make("traffic", side=3, horizon=7)
+    assert cfg.n == 3 and cfg.horizon == 7
+    _, cfg = registry.make("powergrid", side=3)
+    assert cfg.n_agents == 9            # sizer keeps agent counts ~side²
+    mod, cfg = registry.make("warehouse")
+    assert cfg == registry.get("warehouse").default_cfg
+    assert mod is registry.get("warehouse").module
+
+
+def test_unknown_env_raises():
+    with pytest.raises(KeyError, match="unknown env"):
+        registry.get("does-not-exist")
+
+
+def test_clashing_register_raises():
+    spec = registry.get("traffic")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register("traffic", registry, spec.default_cfg)
+    # same-module re-registration (module reload) is idempotent
+    registry.register("traffic", spec.module, spec.default_cfg,
+                      sizer=spec.sizer)
+
+
+def test_specs_expose_protocol():
+    for name in ENVS:
+        mod = registry.get(name).module
+        for fn in ("gs_init", "gs_step", "gs_step_given", "gs_exo",
+                   "gs_obs", "gs_locals", "exo_locals",
+                   "ls_init", "ls_step", "ls_step_given", "ls_obs"):
+            assert hasattr(mod, fn), f"{name} lacks {fn}"
+
+
+# ---------------------------------------------------------------------------
+# EnvInfo shape consistency
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ENVS)
+def test_info_shape_consistency(name):
+    mod, cfg = registry.make(name, horizon=10)
+    info = cfg.info()
+    assert info.name == name
+    assert info.alsh_dim == info.obs_dim + info.n_actions
+    key = jax.random.PRNGKey(0)
+    state = mod.gs_init(key, cfg)
+    assert mod.gs_obs(state, cfg).shape == (info.n_agents, info.obs_dim)
+    actions = jnp.zeros((info.n_agents,), jnp.int32)
+    state2, obs, rew, u, done = mod.gs_step(state, actions, key, cfg)
+    assert obs.shape == (info.n_agents, info.obs_dim)
+    assert rew.shape == (info.n_agents,)
+    assert u.shape == (info.n_agents, info.n_influence)
+    assert done.shape == ()
+    # influence sources are binary
+    assert set(np.unique(np.asarray(u))) <= {0.0, 1.0}
+    for leaf in jax.tree.leaves((obs, rew)):
+        assert not jnp.any(jnp.isnan(leaf))
+    # gs_locals restricts per agent; keys match the LS state (minus t)
+    loc = mod.gs_locals(state, cfg)
+    local = mod.ls_init(key, cfg)
+    assert set(loc) == set(local) - {"t"}
+    for k, v in loc.items():
+        assert v.shape == (info.n_agents,) + local[k].shape
+    # LS step shapes
+    new, lobs, lrew, ldone = mod.ls_step(local, actions[0], u[0], key, cfg)
+    assert lobs.shape == (info.obs_dim,)
+    assert lrew.shape == () and ldone.shape == ()
+    assert mod.ls_obs(local, cfg).shape == (info.obs_dim,)
+
+
+# ---------------------------------------------------------------------------
+# GS↔LS exactness (Definition 3, executable, for every env)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("side", [2, 3])
+@pytest.mark.parametrize("name", ENVS)
+def test_gs_ls_exactness(name, side):
+    """Replay each region's GS trajectory through the LS with the same
+    (action, u, exogenous draws) and require identical local states and
+    rewards. side=3 covers interior regions (3x3 grids, 9-node rings)."""
+    mod, cfg = registry.make(name, side=side, horizon=50)
+    info = cfg.info()
+    n = info.n_agents
+    key = jax.random.PRNGKey(1)
+    state = mod.gs_init(key, cfg)
+
+    for t in range(15):
+        key, ka, kx = jax.random.split(key, 3)
+        actions = jax.random.randint(ka, (n,), 0, info.n_actions)
+        exo = mod.gs_exo(kx, cfg)
+        loc_before = mod.gs_locals(state, cfg)
+        state2, _, rew, u, _ = mod.gs_step_given(state, actions, exo, cfg)
+        loc_after = mod.gs_locals(state2, cfg)
+        exo_loc = mod.exo_locals(exo, cfg)
+        for i in range(n):
+            local = {**_take(loc_before, i), "t": state["t"]}
+            new, _, r, _ = mod.ls_step_given(
+                local, actions[i], u[i], _take(exo_loc, i), cfg)
+            for k in loc_after:
+                np.testing.assert_array_equal(
+                    np.asarray(new[k]), np.asarray(loc_after[k][i]),
+                    err_msg=f"{name}: agent {i} field {k} at t={t}")
+            np.testing.assert_allclose(r, rew[i], atol=1e-6,
+                                       err_msg=f"{name}: reward {i} t={t}")
+        state = state2
+
+
+# ---------------------------------------------------------------------------
+# jit / vmap-ability (the Large-Batch-Simulation requirement)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ENVS)
+def test_gs_ls_jit_vmap(name):
+    mod, cfg = registry.make(name, horizon=10)
+    info = cfg.info()
+    n, n_envs = info.n_agents, 3
+    keys = jax.random.split(jax.random.PRNGKey(2), n_envs)
+
+    v_init = jax.jit(jax.vmap(lambda k: mod.gs_init(k, cfg)))
+    states = v_init(keys)
+    v_step = jax.jit(jax.vmap(lambda s, a, k: mod.gs_step(s, a, k, cfg)))
+    actions = jnp.zeros((n_envs, n), jnp.int32)
+    states2, obs, rew, u, done = v_step(states, actions, keys)
+    assert obs.shape == (n_envs, n, info.obs_dim)
+    assert done.shape == (n_envs,)
+
+    # batched local sims over (E, N), as the IALS trainer runs them
+    lkeys = jax.random.split(jax.random.PRNGKey(3), n_envs * n).reshape(
+        n_envs, n, 2)
+    v_ls_init = jax.jit(jax.vmap(jax.vmap(lambda k: mod.ls_init(k, cfg))))
+    locals_ = v_ls_init(lkeys)
+    v_ls_step = jax.jit(jax.vmap(jax.vmap(
+        lambda l, a, u, k: mod.ls_step(l, a, u, k, cfg))))
+    la = jnp.zeros((n_envs, n), jnp.int32)
+    lu = jnp.zeros((n_envs, n, info.n_influence), jnp.float32)
+    locals2, lobs, lrew, ldone = v_ls_step(locals_, la, lu, lkeys)
+    assert lobs.shape == (n_envs, n, info.obs_dim)
+    assert lrew.shape == (n_envs, n) and ldone.shape == (n_envs, n)
+
+
+# ---------------------------------------------------------------------------
+# launch-layer scenario presets resolve through the registry
+# ---------------------------------------------------------------------------
+def test_marl_scenarios_resolve():
+    from repro.launch import variants
+    assert len(variants.MARL_SCENARIOS) >= 2 * len(ENVS)
+    for scen, (env_name, _side) in variants.MARL_SCENARIOS.items():
+        assert env_name in ENVS, scen
+    mod, cfg = variants.marl_scenario("powergrid-ring4", horizon=5)
+    assert cfg.n_agents == 4 and cfg.horizon == 5
+    assert mod is registry.get("powergrid").module
+
+
+def test_default_cfgs_are_frozen_dataclasses():
+    for name in ENVS:
+        cfg = registry.get(name).default_cfg
+        assert dataclasses.is_dataclass(cfg)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            setattr(cfg, "horizon", 1)

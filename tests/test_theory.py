@@ -2,7 +2,11 @@
 IALMs (Lemma 1 / Corollary 1 / Lemma 2 / Theorem 1)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # dev extra absent: property tests skip
+    from _hypothesis_stub import given, settings, st
+
 
 from repro.core import ialm, theory
 
