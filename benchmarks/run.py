@@ -66,9 +66,10 @@ def _setup(env_name, n_side, *, horizon=32):
     return env_mod, env_cfg, info, pc, ac, ppo_cfg
 
 
-def fig3_learning(fast: bool = False):
+def fig3_learning(fast: bool = False, shards=None):
     """GS vs DIALS vs untrained-DIALS mean return (4-agent envs)."""
     from repro.core import dials
+    from repro.launch import variants
     from repro.marl import runner
     rows = []
     rounds = 3 if fast else 10
@@ -80,7 +81,8 @@ def fig3_learning(fast: bool = False):
             cfg = dials.DIALSConfig(
                 outer_rounds=rounds, aip_refresh=inner, collect_envs=8,
                 collect_steps=64, n_envs=8, rollout_steps=16,
-                untrained=untrained, eval_episodes=8)
+                untrained=untrained, eval_episodes=8,
+                **variants.dials_variant_for(shards))
             tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
             t0 = time.time()
             _, hist = tr.run(jax.random.PRNGKey(0))
@@ -156,9 +158,10 @@ def fig3_scalability(fast: bool = False):
     return rows
 
 
-def fig4_f_sweep(fast: bool = False):
+def fig4_f_sweep(fast: bool = False, shards=None):
     """AIP training frequency F: returns + influence CE (paper Fig. 4)."""
     from repro.core import dials
+    from repro.launch import variants
     rows = []
     total_inner = 12 if fast else 60
     sweeps = ((2, 6), (6, 2), (total_inner, 1)) if fast else \
@@ -167,7 +170,8 @@ def fig4_f_sweep(fast: bool = False):
     for refresh, rounds in sweeps:
         cfg = dials.DIALSConfig(
             outer_rounds=rounds, aip_refresh=refresh, collect_envs=8,
-            collect_steps=64, n_envs=8, rollout_steps=16, eval_episodes=8)
+            collect_steps=64, n_envs=8, rollout_steps=16, eval_episodes=8,
+            **variants.dials_variant_for(shards))
         tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
         t0 = time.time()
         _, hist = tr.run(jax.random.PRNGKey(0))
@@ -249,15 +253,23 @@ BENCHES = {
 
 
 def main() -> None:
+    import inspect
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="reduced iteration counts (CI mode)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="DIALS runtime shard count (needs that many XLA "
+                         "devices; None = auto, 1 = unfused path)")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,metric,value")
     for n in names:
-        BENCHES[n](fast=args.fast)
+        fn = BENCHES[n]
+        kw = {"fast": args.fast}
+        if "shards" in inspect.signature(fn).parameters:
+            kw["shards"] = args.shards
+        fn(**kw)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,122 @@
+"""DIALS scaling benchmark — shard count × scenario sweep.
+
+Measures, for every (registered scenario, shard count) cell:
+
+* wall-clock per outer Algorithm-1 round (post-compilation),
+* inner agent-env steps/s (F · n_envs · rollout_steps · N per round),
+* speedup of the fused sharded runtime over the unfused python-loop
+  path (``shards=1`` — the F+3-syncs-per-round baseline).
+
+Writes ``experiments/bench/BENCH_dials_scaling.json`` — the perf
+trajectory artifact CI uploads — plus ``name,metric,value`` CSV lines on
+stdout.
+
+Shard counts > 1 need multiple XLA devices; this script forces
+``--xla_force_host_platform_device_count=<max shards>`` BEFORE importing
+jax, so it must run as its own process:
+
+    PYTHONPATH=src python -m benchmarks.scaling [--fast]
+        [--shards 1,2,4] [--scenarios traffic-2x2,supplychain-line4]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+OUT_PATH = os.path.join("experiments", "bench", "BENCH_dials_scaling.json")
+
+
+def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
+    # imported late: main() must set XLA_FLAGS first
+    import jax
+    from benchmarks.run import _setup
+    from repro.core import dials
+    from repro.launch import variants
+
+    rows = []
+    for scenario in scenarios:
+        env_name, side = variants.MARL_SCENARIOS[scenario]
+        env_mod, env_cfg, info, pc, ac, ppo_cfg = _setup(env_name, side)
+        n = info.n_agents
+        unfused_round_s = None
+        for shards in shard_counts:
+            if n % shards:
+                print(f"# skip {scenario} shards={shards}: "
+                      f"{n} agents not divisible")
+                continue
+            cfg = dials.DIALSConfig(
+                outer_rounds=rounds, aip_refresh=inner, collect_envs=4,
+                collect_steps=collect_steps, n_envs=8, rollout_steps=16,
+                eval_episodes=4, **variants.dials_variant_for(shards))
+            tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
+            t0 = time.time()
+            _, hist = tr.run(jax.random.PRNGKey(0))
+            total_s = time.time() - t0
+            # round 0 pays compilation; measure the steady-state rounds
+            # (with a single round, the compile-inclusive time is all
+            # there is — still a valid upper bound)
+            steady = ((hist[-1]["wall_s"] - hist[0]["wall_s"]) /
+                      (len(hist) - 1)) if len(hist) > 1 else hist[0]["wall_s"]
+            inner_steps = cfg.aip_refresh * cfg.n_envs * \
+                cfg.rollout_steps * n                  # F * E * T * N
+            row = {"label": f"{scenario}-s{shards}",
+                   "scenario": scenario, "n_agents": n, "shards": shards,
+                   "fused": shards > 1,
+                   "round_s": steady,
+                   "inner_steps_per_s": inner_steps / steady,
+                   "total_wall_s": total_s}
+            if shards == 1:
+                unfused_round_s = steady
+            if unfused_round_s is not None:
+                row["speedup_vs_unfused"] = unfused_round_s / steady
+            rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke: fewer rounds/steps")
+    ap.add_argument("--shards", default="1,2,4",
+                    help="comma-separated shard counts (1 = unfused "
+                         "python-loop baseline)")
+    ap.add_argument("--scenarios",
+                    default="traffic-2x2,supplychain-line4",
+                    help="comma-separated names from "
+                         "launch.variants.MARL_SCENARIOS")
+    ap.add_argument("--rounds", type=int, default=None)
+    args = ap.parse_args()
+
+    shard_counts = sorted({int(s) for s in args.shards.split(",")})
+    scenarios = [s.strip() for s in args.scenarios.split(",") if s.strip()]
+    rounds = args.rounds if args.rounds is not None else \
+        (2 if args.fast else 4)
+    if rounds < 1:
+        ap.error("--rounds must be >= 1")
+    inner = 4 if args.fast else 20
+    collect_steps = 32 if args.fast else 64
+
+    # multiple shards need multiple devices — force them before jax loads
+    n_dev = max(shard_counts)
+    if n_dev > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={n_dev}").strip()
+
+    rows = _sweep(scenarios, shard_counts, rounds=rounds, inner=inner,
+                  collect_steps=collect_steps)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    print("name,metric,value")
+    for r in rows:
+        for k, v in r.items():
+            if k not in ("label", "scenario"):
+                print(f"dials_scaling.{r['label']},{k},{v}")
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    main()

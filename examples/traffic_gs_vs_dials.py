@@ -4,7 +4,11 @@ final returns and wall time — the paper's three-way comparison on one CPU.
 Defaults to the 2x2 traffic grid; any registered env name works.
 
 Run:  PYTHONPATH=src python examples/traffic_gs_vs_dials.py [--rounds N]
-          [--env traffic]
+          [--env traffic] [--shards N]
+
+``--shards N`` forces the agent-sharded fused runtime (needs N XLA
+devices — e.g. XLA_FLAGS=--xla_force_host_platform_device_count=4);
+by default the driver picks it automatically when >1 device is visible.
 """
 import argparse
 import time
@@ -13,6 +17,7 @@ import jax
 
 from repro.core import dials, influence
 from repro.envs import registry
+from repro.launch import variants
 from repro.marl import policy, ppo, runner
 
 
@@ -21,6 +26,8 @@ def main():
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--inner", type=int, default=20)
     ap.add_argument("--env", default="traffic", choices=registry.names())
+    ap.add_argument("--shards", type=int, default=None,
+                    help="DIALS runtime shard count (None = auto)")
     args = ap.parse_args()
 
     env_mod, env_cfg = registry.make(args.env, side=2, horizon=32)
@@ -38,7 +45,8 @@ def main():
         cfg = dials.DIALSConfig(
             outer_rounds=args.rounds, aip_refresh=args.inner,
             collect_envs=8, collect_steps=64, n_envs=8, rollout_steps=16,
-            untrained=untrained, eval_episodes=8)
+            untrained=untrained, eval_episodes=8,
+            **variants.dials_variant_for(args.shards))
         t0 = time.time()
         _, hist = dials.DIALSTrainer(
             env_mod, env_cfg, pc, ac, ppo_cfg, cfg).run(

@@ -49,6 +49,10 @@ class DIALSConfig:
     max_aip_staleness: int = 2     # rounds; straggler tolerance
     ckpt_dir: Optional[str] = None
     ckpt_keep: int = 3
+    # agent-sharded runtime (repro.core.dials_sharded): None = auto
+    # (sharded whenever >1 device is visible), <=1 = force the
+    # single-device path, N = force an N-shard ("shards",) mesh.
+    shards: Optional[int] = None
 
 
 class DIALSTrainer:
@@ -78,6 +82,7 @@ class DIALSTrainer:
             lambda p, d: influence.eval_ce(p, d, aip_cfg)))
         self.manager = (CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
                         if cfg.ckpt_dir else None)
+        self._sharded = None       # lazily-built ShardedDIALSRunner
 
     # -- state --------------------------------------------------------------
     def init(self, key):
@@ -98,17 +103,51 @@ class DIALSTrainer:
                                if hasattr(x, "shape") else x), state))
             if tree is not None:
                 tree["round"] = int(step)
+                # the base key drives the per-round fold-in stream; a
+                # resumed run must continue it exactly
+                tree["key"] = jnp.asarray(tree["key"], state["key"].dtype)
                 return tree
         return state
+
+    # -- path selection ------------------------------------------------------
+    def _select_shards(self) -> int:
+        """Shard count for the sharded runtime; 0 = single-device path."""
+        from repro.distributed import runtime as runtime_lib
+        cfg, n_agents = self.cfg, self.info.n_agents
+        n_dev = len(jax.devices())
+        if cfg.shards is not None:
+            if cfg.shards <= 1:
+                return 0
+            if cfg.shards > n_dev:
+                raise ValueError(
+                    f"shards={cfg.shards} but only {n_dev} devices")
+            if n_agents % cfg.shards:
+                raise ValueError(
+                    f"{n_agents} agents cannot tile {cfg.shards} shards")
+            return cfg.shards
+        if n_dev <= 1:
+            return 0
+        s = runtime_lib.choose_shards(n_agents, n_dev)
+        return s if s > 1 else 0
 
     # -- Algorithm 1 --------------------------------------------------------
     def run(self, key, *, log: Optional[Callable] = None,
             straggler_mask: Optional[Callable] = None):
         """Runs ``outer_rounds`` rounds of (collect → AIP train → F inner
         steps). Returns (state, history). ``straggler_mask(round) ->
-        (N,) {0,1}`` simulates late shards (bounded-staleness refresh)."""
+        (N,) {0,1}`` simulates late shards (bounded-staleness refresh).
+
+        Dispatches to the agent-sharded fused runtime whenever more than
+        one device is visible (or ``cfg.shards`` forces a mesh); both
+        paths compute the same numbers — the sharded one in a single
+        program per round instead of ``F + 3``.
+        """
         cfg = self.cfg
         state = self.restore_or_init(key)
+        n_shards = self._select_shards()
+        if n_shards:
+            return self._run_sharded(state, n_shards, log=log,
+                                     straggler_mask=straggler_mask)
         history = []
         t_start = time.time()
         for rnd in range(state["round"], cfg.outer_rounds):
@@ -151,6 +190,48 @@ class DIALSTrainer:
             state["round"] = rnd + 1
             if self.manager is not None:
                 self.manager.save(rnd + 1, state)
+        if self.manager is not None:
+            self.manager.wait()
+        return state, history
+
+    # -- sharded path --------------------------------------------------------
+    def _sharded_runner(self, n_shards: int):
+        from repro.core import dials_sharded
+        if self._sharded is None or self._sharded.n_shards != n_shards:
+            self._sharded = dials_sharded.ShardedDIALSRunner(
+                self.env_mod, self.env_cfg, self.policy_cfg, self.aip_cfg,
+                self.ppo_cfg, self.cfg, n_shards=n_shards)
+        return self._sharded
+
+    def _run_sharded(self, state, n_shards: int, *, log, straggler_mask):
+        """The same round loop, one fused donated program per round; the
+        only per-round host sync is reading the metrics record."""
+        cfg = self.cfg
+        runner = self._sharded_runner(n_shards)
+        n = self.info.n_agents
+        base_key = state["key"]
+        carry = runner.shard_carry(
+            {"aips": state["aips"], "ials": state["ials"]})
+        history = []
+        t_start = time.time()
+        for rnd in range(state["round"], cfg.outer_rounds):
+            mask = (jnp.asarray(straggler_mask(rnd), jnp.float32)
+                    if straggler_mask is not None and not cfg.untrained
+                    else jnp.ones((n,), jnp.float32))
+            carry, rec = runner.round(carry, base_key, rnd, mask)
+            rec = {"round": rnd, **{k: float(v) for k, v in rec.items()},
+                   "wall_s": time.time() - t_start}
+            history.append(rec)
+            if log:
+                log(rec)
+            if self.manager is not None:
+                # device_get inside save() copies out before the next
+                # round donates these buffers
+                self.manager.save(rnd + 1, {
+                    "ials": carry["ials"], "aips": carry["aips"],
+                    "round": rnd + 1, "key": base_key})
+        state = {**runner.unshard_carry(carry),
+                 "round": cfg.outer_rounds, "key": base_key}
         if self.manager is not None:
             self.manager.wait()
         return state, history

@@ -1,0 +1,173 @@
+"""Sharded DIALS runtime — Algorithm 1 as ONE program over a device mesh.
+
+The single-device :class:`~repro.core.dials.DIALSTrainer` pays a host
+round-trip per inner step (``F + 3`` syncs per outer round). This runner
+executes one full outer round — GS collect → per-shard AIP training →
+F inner IALS+PPO steps → GS eval — as a **single jitted, donated-buffer
+program** with the agent axis of params/opt/AIPs/locals sharded over a
+1-D ``("shards",)`` mesh (``repro.distributed.runtime``):
+
+* the per-shard section (AIP train + bounded-staleness refresh + a
+  ``lax.scan`` over the F inner steps) runs under ``shard_map`` and is
+  **collective-free by construction** — :meth:`inner_jaxpr` exposes its
+  jaxpr so tests assert no cross-shard communication exists between AIP
+  refreshes (the paper's runtime-stays-constant claim, made checkable);
+* GS collect and the periodic GS eval need the full joint policy and
+  happen at the refresh boundary, where the partitioner inserts the one
+  gather per round that DIALS fundamentally requires;
+* per-agent randomness comes from ``repro.core.ials``'s shard-equivariant
+  keying, so the sharded round is numerically the single-device round —
+  the driver can switch paths freely.
+
+Host syncs per round: 1 (reading the metrics record).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import gs as gs_mod
+from repro.core import ials as ials_mod
+from repro.core import influence
+from repro.distributed import fault
+from repro.distributed import runtime as runtime_lib
+from repro.marl import runner as runner_mod
+
+
+class ShardedDIALSRunner:
+    """Mesh-resident executor of one Algorithm-1 outer round.
+
+    Built by ``DIALSTrainer`` when more than one device is available (or a
+    shard count is forced); owns no training-loop policy — checkpointing,
+    logging and the round loop stay in the driver.
+    """
+
+    def __init__(self, env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg, cfg,
+                 *, mesh=None, n_shards=None):
+        self.env_mod, self.env_cfg, self.cfg = env_mod, env_cfg, cfg
+        self.aip_cfg = aip_cfg
+        self.info = env_cfg.info()
+        n_agents = self.info.n_agents
+        if mesh is None:
+            if n_shards is None:
+                n_shards = runtime_lib.choose_shards(n_agents)
+            mesh = runtime_lib.shard_mesh(n_shards)
+        self.mesh = mesh
+        self.n_shards = mesh.shape[runtime_lib.SHARD_AXIS]
+        if n_agents % self.n_shards:
+            raise ValueError(
+                f"{n_agents} agents cannot tile {self.n_shards} shards")
+
+        self.collect = gs_mod.make_collector(
+            env_mod, env_cfg, policy_cfg,
+            n_envs=cfg.collect_envs, steps=cfg.collect_steps)
+        self.ials_init = ials_mod.make_ials_init(
+            env_mod, env_cfg, policy_cfg, aip_cfg, n_envs=cfg.n_envs)
+        self._agent_train = ials_mod.make_agent_trainer(
+            env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg,
+            n_envs=cfg.n_envs, rollout_steps=cfg.rollout_steps)
+        _, _, self.gs_eval = runner_mod.make_gs_trainer(
+            env_mod, env_cfg, policy_cfg, ppo_cfg,
+            runner_mod.RunConfig(n_envs=cfg.n_envs,
+                                 rollout_steps=cfg.rollout_steps))
+        self._shard_body = self._make_shard_body()
+        self._round_fn = self._make_round()
+        self.round = jax.jit(self._round_fn, donate_argnums=0)
+
+    # -- per-shard program ---------------------------------------------------
+    def _make_shard_body(self):
+        """The collective-free section: everything between AIP refreshes.
+
+        All arguments arrive pre-sliced to this shard's agents (leading
+        axis N/num_shards); nothing here may touch another shard.
+        """
+        cfg, aip_cfg = self.cfg, self.aip_cfg
+        train_aips = jax.vmap(
+            lambda p, d, k: influence.train_aip(p, d, k, aip_cfg))
+        eval_aips = jax.vmap(lambda p, d: influence.eval_ce(p, d, aip_cfg))
+        train_agents = jax.vmap(self._agent_train)
+
+        def shard_body(aips, ials, data, aip_keys, fresh_mask):
+            ce_before = eval_aips(aips, data)
+            if not cfg.untrained:
+                new_aips, _ = train_aips(aips, data, aip_keys)
+                aips = fault.masked_tree_update(aips, new_aips, fresh_mask)
+            ce_after = eval_aips(aips, data)
+
+            def inner(ials, _):
+                return train_agents(ials, aips)
+
+            ials, metrics = jax.lax.scan(
+                inner, ials, None, length=cfg.aip_refresh)
+            metrics = jax.tree.map(lambda x: x[-1], metrics)  # last F step
+            return aips, ials, ce_before, ce_after, metrics
+
+        return shard_body
+
+    def round_jaxpr(self):
+        """Jaxpr of the whole fused round, traced abstractly at this
+        runner's shapes (no FLOPs)."""
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        carry = {"aips": jax.eval_shape(
+                     lambda k: jax.vmap(
+                         lambda kk: influence.aip_init(kk, self.aip_cfg))(
+                         jax.random.split(k, self.info.n_agents)), key),
+                 "ials": jax.eval_shape(self.ials_init, key)}
+        rnd = jax.ShapeDtypeStruct((), jnp.int32)
+        mask = jax.ShapeDtypeStruct((self.info.n_agents,), jnp.float32)
+        return jax.make_jaxpr(self._round_fn)(carry, key, rnd, mask)
+
+    def inner_jaxpr(self):
+        """The per-shard body of the round, EXTRACTED from the traced
+        round program (not re-traced separately) — the artifact the
+        no-collectives assertion runs against. Everything between AIP
+        refreshes lives inside this one shard_map."""
+        bodies = runtime_lib.find_shard_map_jaxprs(self.round_jaxpr())
+        assert len(bodies) == 1, \
+            f"expected exactly one shard_map in the round, found {len(bodies)}"
+        return bodies[0]
+
+    # -- the fused round -----------------------------------------------------
+    def _make_round(self):
+        cfg, mesh = self.cfg, self.mesh
+        n_agents = self.info.n_agents
+        sharded = P(runtime_lib.SHARD_AXIS)
+        body = runtime_lib.shard_map_nocheck(
+            self._shard_body, mesh,
+            in_specs=(sharded,) * 5,
+            out_specs=(sharded,) * 5)
+
+        def round_fn(carry, base_key, rnd, fresh_mask):
+            """carry = {"aips", "ials"} (donated). Returns (carry', rec)."""
+            key = jax.random.fold_in(base_key, rnd)
+            kc, kt, ke = jax.random.split(key, 3)
+
+            # (1) Algorithm 2: datasets from the GS under the joint policy
+            data = self.collect(carry["ials"]["params"], kc)
+
+            # (2)+(3) per-shard: AIP train + F frozen-AIP inner steps
+            aips, ials, ce_before, ce_after, metrics = body(
+                carry["aips"], carry["ials"], data,
+                jax.random.split(kt, n_agents), fresh_mask)
+
+            # (4) periodic GS eval — the once-per-round joint-policy sync
+            ret = self.gs_eval(ials["params"], ke,
+                               episodes=cfg.eval_episodes)
+            rec = {"gs_return": ret,
+                   "ials_reward": metrics["reward"].mean(),
+                   "aip_ce_before": ce_before.mean(),
+                   "aip_ce_after": ce_after.mean()}
+            return {"aips": aips, "ials": ials}, rec
+
+        return round_fn
+
+    # -- placement -----------------------------------------------------------
+    def shard_carry(self, carry):
+        """Move an {"aips", "ials"} carry onto the mesh, agent-sharded."""
+        return runtime_lib.shard_agent_tree(carry, self.mesh)
+
+    def unshard_carry(self, carry):
+        """Fetch a mesh-resident carry back to host-addressable arrays
+        (checkpointing, path switching)."""
+        return jax.tree.map(jax.device_get, carry)

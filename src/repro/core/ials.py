@@ -3,14 +3,21 @@
 Each agent trains on its OWN local simulator whose inflow/coupling
 variables are sampled from its AIP every step: u ~ Î_θi(·|l_i^t), then
 x^{t+1} ~ T̂_i(·|x, a, u). There is NO cross-agent interaction inside this
-loop — N agents × E envs roll and update as one embarrassingly-parallel
-batched program (vmap over agents; shard the agent axis over the mesh and
-between AIP refreshes the program has zero cross-shard collectives, which
-is the paper's runtime-stays-constant claim).
+loop — the whole inner iteration is written as a *single-agent* program
+(:func:`make_agent_trainer`) and vmapped over an agent-major state, so N
+agents × E envs roll and update as one embarrassingly-parallel batched
+program.
+
+Shard-equivariance contract (the sharded DIALS runtime depends on it):
+every random draw inside the per-agent step derives from that agent's OWN
+key (``state["key"][i]``, fixed at init from the absolute agent id) — no
+draw depends on how many agents share the batch. Slicing the agent axis
+and running a shard therefore computes exactly what the full-batch program
+computes for those agents, which is how ``repro.core.dials_sharded`` gets
+single-device ≡ sharded numerics and zero cross-shard collectives between
+AIP refreshes (the paper's runtime-stays-constant claim).
 """
 from __future__ import annotations
-
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -22,71 +29,52 @@ from repro.marl import ppo as ppo_mod
 from repro.optim import adamw
 
 
-def make_ials_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
-                      aip_cfg: influence.AIPConfig,
-                      ppo_cfg: ppo_mod.PPOConfig, *, n_envs: int,
-                      rollout_steps: int):
+def make_agent_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                       aip_cfg: influence.AIPConfig,
+                       ppo_cfg: ppo_mod.PPOConfig, *, n_envs: int,
+                       rollout_steps: int):
+    """One DIALS inner iteration for ONE agent (Algorithm 3 body).
+
+    Returns ``agent_train(astate, aip_params) -> (astate', metrics)`` where
+    ``astate`` holds E local sims and the agent's policy/opt/key/iter —
+    leaves WITHOUT the agent axis. ``jax.vmap(agent_train)`` is the
+    full-batch trainer; a shard_map'd vmap over an agent slice is the
+    sharded one.
+    """
     info = env_cfg.info()
-    n_agents = info.n_agents
 
-    # local sims batched over (E, N)
-    v_ls_init = jax.vmap(jax.vmap(lambda k: env_mod.ls_init(k, env_cfg)))
-    v_ls_step = jax.vmap(jax.vmap(
-        lambda l, a, u, k: env_mod.ls_step(l, a, u, k, env_cfg)))
-    v_ls_obs = jax.vmap(jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg)))
+    # local sims batched over E envs of one agent
+    e_ls_init = jax.vmap(lambda k: env_mod.ls_init(k, env_cfg))
+    e_ls_step = jax.vmap(
+        lambda l, a, u, k: env_mod.ls_step(l, a, u, k, env_cfg))
+    e_ls_obs = jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg))
 
-    apply_agents = jax.vmap(
-        lambda p, o, h: policy_mod.policy_apply(p, o, h, policy_cfg),
-        in_axes=(0, 1, 1), out_axes=(1, 1, 1))
-    aip_agents = jax.vmap(
-        lambda p, f, h: influence.aip_apply(p, f, h, aip_cfg),
-        in_axes=(0, 1, 1), out_axes=(1, 1))
-
-    def init_fn(key):
-        kp, ke, kr = jax.random.split(key, 3)
-        params = jax.vmap(lambda k: policy_mod.policy_init(k, policy_cfg))(
-            jax.random.split(kp, n_agents))
-        opt = jax.vmap(adamw.init)(params)
-        locals_ = v_ls_init(
-            jax.random.split(ke, n_envs * n_agents).reshape(
-                n_envs, n_agents, 2))
-        return {
-            "params": params, "opt": opt, "locals": locals_,
-            "obs": v_ls_obs(locals_),
-            "h": policy_mod.initial_hidden(policy_cfg, n_envs, n_agents),
-            "aip_h": influence.initial_hidden(aip_cfg, n_envs, n_agents),
-            "prev_a": jnp.zeros((n_envs, n_agents), jnp.int32),
-            "key": kr, "iter": jnp.zeros((), jnp.int32),
-        }
-
-    def _rollout(state, aip_params):
+    def _rollout(astate, aip_params, k_iter):
         def step(carry, key):
-            locals_, obs, h, aip_h, prev_a, prev_done = carry
+            locals_, obs, h, aip_h, prev_a, prev_done = carry   # (E, ...)
             k_act, k_u, k_env, k_reset = jax.random.split(key, 4)
 
             # AIP consumes (x_t, a_{t-1}) and proposes u_t  (Alg. 3 line 8)
             feat = jnp.concatenate(
                 [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
-            u_logits, aip_h2 = aip_agents(aip_params, feat, aip_h)
-            u = influence.sample_sources(k_u, u_logits)      # (E, N, M)
+            u_logits, aip_h2 = influence.aip_apply(
+                aip_params, feat, aip_h, aip_cfg)
+            u = influence.sample_sources(k_u, u_logits)         # (E, M)
 
-            logits, value, h2 = apply_agents(state["params"], obs, h)
+            logits, value, h2 = policy_mod.policy_apply(
+                astate["params"], obs, h, policy_cfg)
             action, logp = policy_mod.sample_action(k_act, logits)
 
-            locals2, obs2, rew, done = v_ls_step(
-                locals_, action, u,
-                jax.random.split(k_env, n_envs * n_agents).reshape(
-                    n_envs, n_agents, 2))                    # done (E, N)
+            locals2, obs2, rew, done = e_ls_step(
+                locals_, action, u, jax.random.split(k_env, n_envs))
 
-            fresh = v_ls_init(
-                jax.random.split(k_reset, n_envs * n_agents).reshape(
-                    n_envs, n_agents, 2))
+            fresh = e_ls_init(jax.random.split(k_reset, n_envs))
             sel = lambda f, c: jnp.where(
-                done.reshape(done.shape + (1,) * (c.ndim - 2)), f, c)
+                done.reshape(done.shape + (1,) * (c.ndim - 1)), f, c)
             locals3 = jax.tree.map(sel, fresh, locals2)
-            obs3 = jnp.where(done[..., None], v_ls_obs(locals3), obs2)
-            h3 = jnp.where(done[..., None], jnp.zeros_like(h2), h2)
-            aip_h3 = jnp.where(done[..., None], jnp.zeros_like(aip_h2),
+            obs3 = jnp.where(done[:, None], e_ls_obs(locals3), obs2)
+            h3 = jnp.where(done[:, None], jnp.zeros_like(h2), h2)
+            aip_h3 = jnp.where(done[:, None], jnp.zeros_like(aip_h2),
                                aip_h2)
             prev3 = jnp.where(done, jnp.zeros_like(action), action)
 
@@ -95,49 +83,96 @@ def make_ials_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
                   "reset_pre": prev_done}
             return (locals3, obs3, h3, aip_h3, prev3, done), tr
 
-        carry0 = (state["locals"], state["obs"], state["h"], state["aip_h"],
-                  state["prev_a"], jnp.zeros((n_envs, n_agents), bool))
+        carry0 = (astate["locals"], astate["obs"], astate["h"],
+                  astate["aip_h"], astate["prev_a"],
+                  jnp.zeros((n_envs,), bool))
         carry, traj = jax.lax.scan(
-            step, carry0, jax.random.split(state["key"], rollout_steps))
-        return carry, traj
+            step, carry0, jax.random.split(k_iter, rollout_steps))
+        return carry, traj                     # traj leaves (T, E, ...)
 
-    def train_fn(state, aip_params):
-        """One DIALS inner iteration: rollout on the IALS + PPO for every
-        agent. ``aip_params`` stacked (N, ...) — frozen here (Alg. 1 line 9)."""
-        k_iter = jax.random.fold_in(state["key"], state["iter"])
-        state = {**state, "key": k_iter}
-        carry, traj = _rollout(state, aip_params)
+    def agent_train(astate, aip_params):
+        """Rollout on the IALS + one PPO update. ``aip_params`` — this
+        agent's predictor, frozen here (Alg. 1 line 9)."""
+        k_iter = jax.random.fold_in(astate["key"], astate["iter"])
+        carry, traj = _rollout(astate, aip_params, k_iter)
         locals_, obs, h, aip_h, prev_a, _ = carry
 
-        _, last_value, _ = apply_agents(state["params"], obs, h)  # (E, N)
+        _, last_value, _ = policy_mod.policy_apply(
+            astate["params"], obs, h, policy_cfg)               # (E,)
 
-        def nea(x):                            # (T,E,N) -> (E,N,T)
-            return jnp.moveaxis(x, (0, 1, 2), (2, 0, 1))
-        adv, ret = gae_mod.gae(nea(traj["reward"]), nea(traj["value"]),
-                               nea(traj["done"]), last_value,
+        et = lambda x: jnp.swapaxes(x, 0, 1)   # (T, E, ...) -> (E, T, ...)
+        adv, ret = gae_mod.gae(et(traj["reward"]), et(traj["value"]),
+                               et(traj["done"]), last_value,
                                gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
-
-        def net(x):                            # (T,E,N,...) -> (N,E,T,...)
-            return jnp.moveaxis(x, (0, 1, 2), (2, 1, 0))
         batch = {
-            "obs": net(traj["obs"]),
-            "actions": net(traj["action"]).astype(jnp.int32),
-            "logp_old": net(traj["logp"]),
-            "values_old": net(traj["value"]),
-            "adv": jnp.swapaxes(adv, 0, 1),
-            "ret": jnp.swapaxes(ret, 0, 1),
-            "resets": net(traj["reset_pre"]).astype(jnp.float32),
-            "h0": jnp.moveaxis(traj["h_pre"][0], 1, 0),
+            "obs": et(traj["obs"]),
+            "actions": et(traj["action"]).astype(jnp.int32),
+            "logp_old": et(traj["logp"]),
+            "values_old": et(traj["value"]),
+            "adv": adv,
+            "ret": ret,
+            "resets": et(traj["reset_pre"]).astype(jnp.float32),
+            "h0": traj["h_pre"][0],            # (E, H)
         }
-        keys = jax.random.split(jax.random.fold_in(k_iter, 1), n_agents)
-        new_params, new_opt, metrics = jax.vmap(
-            lambda p, o, b, k: ppo_mod.ppo_update(p, o, b, k, policy_cfg,
-                                                  ppo_cfg))(
-            state["params"], state["opt"], batch, keys)
-        new_state = {**state, "params": new_params, "opt": new_opt,
-                     "locals": locals_, "obs": obs, "h": h, "aip_h": aip_h,
-                     "prev_a": prev_a, "iter": state["iter"] + 1}
-        return new_state, {**jax.tree.map(jnp.mean, metrics),
-                           "reward": traj["reward"].mean()}
+        new_params, new_opt, metrics = ppo_mod.ppo_update(
+            astate["params"], astate["opt"], batch,
+            jax.random.fold_in(k_iter, 1), policy_cfg, ppo_cfg)
+        new_astate = {**astate, "params": new_params, "opt": new_opt,
+                      "locals": locals_, "obs": obs, "h": h, "aip_h": aip_h,
+                      "prev_a": prev_a, "iter": astate["iter"] + 1}
+        return new_astate, {**metrics, "reward": traj["reward"].mean()}
+
+    return agent_train
+
+
+def make_ials_init(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                   aip_cfg: influence.AIPConfig, *, n_envs: int):
+    """Agent-major IALS state init: every leaf has leading axis N, so the
+    whole state shards over the agent axis with one PartitionSpec."""
+    info = env_cfg.info()
+    n_agents = info.n_agents
+    e_ls_init = jax.vmap(lambda k: env_mod.ls_init(k, env_cfg))
+
+    def init_fn(key):
+        kp, ke, kr = jax.random.split(key, 3)
+        params = jax.vmap(lambda k: policy_mod.policy_init(k, policy_cfg))(
+            jax.random.split(kp, n_agents))
+        opt = jax.vmap(adamw.init)(params)
+        locals_ = jax.vmap(e_ls_init)(
+            jax.random.split(ke, n_agents * n_envs).reshape(
+                n_agents, n_envs, 2))
+        v_ls_obs = jax.vmap(jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg)))
+        # per-agent keys fold in the ABSOLUTE agent id: the draw stream of
+        # agent i is identical no matter how the agent axis is sliced.
+        keys = jax.vmap(lambda i: jax.random.fold_in(kr, i))(
+            jnp.arange(n_agents))
+        return {
+            "params": params, "opt": opt, "locals": locals_,
+            "obs": v_ls_obs(locals_),
+            "h": policy_mod.initial_hidden(policy_cfg, n_agents, n_envs),
+            "aip_h": influence.initial_hidden(aip_cfg, n_agents, n_envs),
+            "prev_a": jnp.zeros((n_agents, n_envs), jnp.int32),
+            "key": keys, "iter": jnp.zeros((n_agents,), jnp.int32),
+        }
+
+    return init_fn
+
+
+def make_ials_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                      aip_cfg: influence.AIPConfig,
+                      ppo_cfg: ppo_mod.PPOConfig, *, n_envs: int,
+                      rollout_steps: int):
+    """Full-batch (single-device) trainer: ``(init_fn, train_fn)`` with
+    ``train_fn(state, aip_params (N, ...)) -> (state, scalar metrics)``."""
+    init_fn = make_ials_init(env_mod, env_cfg, policy_cfg, aip_cfg,
+                             n_envs=n_envs)
+    agent_train = make_agent_trainer(
+        env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg,
+        n_envs=n_envs, rollout_steps=rollout_steps)
+    train_agents = jax.vmap(agent_train)
+
+    def train_fn(state, aip_params):
+        state, metrics = train_agents(state, aip_params)
+        return state, jax.tree.map(jnp.mean, metrics)
 
     return init_fn, jax.jit(train_fn)

@@ -1,2 +1,3 @@
-"""Distribution layer: logical-axis sharding rules, collectives, fault tolerance."""
-from repro.distributed import collectives, fault, mesh  # noqa: F401
+"""Distribution layer: logical-axis sharding rules, collectives, fault
+tolerance, and the agent-sharded runtime substrate."""
+from repro.distributed import collectives, fault, mesh, runtime  # noqa: F401

@@ -41,6 +41,16 @@ def ppermute_ring(x, axis_name: str, *, shift: int = 1):
 
 
 def pbroadcast(x, axis_name: str, root: int = 0):
+    """Broadcast ``x`` from shard ``root`` to every shard along
+    ``axis_name``: zero the value everywhere off-root, then ``psum`` — one
+    all-reduce, the standard root-broadcast under SPMD (no point-to-point
+    send primitive exists at the lax level)."""
     idx = jax.lax.axis_index(axis_name)
-    return jax.tree.map(
-        lambda a: jnp.where(idx == root, a, a) if a.ndim == 0 else a, x)
+
+    def one(a):
+        a = jnp.asarray(a)
+        calc = a.astype(jnp.float32) if a.dtype == jnp.bool_ else a
+        masked = jnp.where(idx == root, calc, jnp.zeros_like(calc))
+        return jax.lax.psum(masked, axis_name).astype(a.dtype)
+
+    return jax.tree.map(one, x)

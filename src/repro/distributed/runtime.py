@@ -1,0 +1,170 @@
+"""Sharded runtime substrate for the DIALS outer loop.
+
+Three things the agent-sharded Algorithm-1 program needs, factored out so
+tests and benchmarks can use them independently of the runner:
+
+* **mesh construction** — :func:`shard_mesh` builds the 1-D ``("shards",)``
+  device mesh; :func:`choose_shards` picks the largest shard count that
+  divides the agent count (the agent axis must tile exactly — DIALS has no
+  notion of a fractional region).
+* **agent-axis placement** — :func:`agent_sharding` /
+  :func:`shard_agent_tree`: every leaf of the IALS/AIP state has leading
+  axis N, so one ``PartitionSpec("shards")`` shards the whole state.
+* **jaxpr auditing** — :func:`jaxpr_primitives` /
+  :func:`collectives_in_jaxpr` / :func:`assert_no_collectives`: the
+  paper's runtime-stays-constant claim rests on the inner program having
+  ZERO cross-shard communication between AIP refreshes.  Rather than
+  trusting the partitioner, we walk the jaxpr of the per-shard body
+  (including every nested scan/cond/pjit sub-jaxpr) and assert that no
+  collective primitive appears — the claim as an executable check.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional, Set
+
+import jax
+import jax.extend
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+SHARD_AXIS = "shards"
+
+# Cross-device communication primitives (jax.lax collectives as they appear
+# in jaxprs). ``axis_index`` is deliberately absent: it reads the shard id
+# without communicating.
+COLLECTIVE_PRIMS: frozenset = frozenset({
+    "psum", "psum2", "pmin", "pmax", "pmean", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "reduce_scatter", "psum_scatter",
+    "collective_permute", "pgather", "pdot",
+})
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+def choose_shards(n_agents: int, n_devices: Optional[int] = None) -> int:
+    """Largest divisor of ``n_agents`` that is ≤ the device count."""
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    for s in range(min(n_agents, n_devices), 0, -1):
+        if n_agents % s == 0:
+            return s
+    return 1
+
+
+def shard_mesh(n_shards: Optional[int] = None, *,
+               devices: Optional[Iterable] = None) -> Mesh:
+    """1-D ``("shards",)`` mesh over the first ``n_shards`` devices."""
+    devices = list(devices) if devices is not None else jax.devices()
+    if n_shards is None:
+        n_shards = len(devices)
+    if n_shards > len(devices):
+        raise ValueError(
+            f"asked for {n_shards} shards but only {len(devices)} devices")
+    return Mesh(np.array(devices[:n_shards]), (SHARD_AXIS,))
+
+
+def shard_map_nocheck(f, mesh: Mesh, *, in_specs, out_specs):
+    """Version-compat ``shard_map`` with replication checking disabled
+    (the DIALS per-shard body produces sharded-only outputs). jax moved
+    ``jax.experimental.shard_map`` (``check_rep=``) to ``jax.shard_map``
+    (``check_vma=``); support both so the pinned floor can move freely."""
+    sm = getattr(jax, "shard_map", None)
+    if callable(sm):
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+# ---------------------------------------------------------------------------
+# Agent-axis placement
+# ---------------------------------------------------------------------------
+def agent_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis (agent) sharding over the shard mesh."""
+    return NamedSharding(mesh, P(SHARD_AXIS))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard_agent_tree(tree, mesh: Mesh):
+    """Place a pytree whose every leaf has leading agent axis N onto the
+    mesh, N/num_shards agents per device."""
+    sh = agent_sharding(mesh)
+    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+def local_slice_struct(tree, n_shards: int):
+    """ShapeDtypeStructs of one shard's slice of an agent-stacked tree —
+    what the per-shard body of a ``shard_map`` actually sees."""
+    def one(x):
+        n = x.shape[0]
+        if n % n_shards:
+            raise ValueError(
+                f"agent axis {n} not divisible by {n_shards} shards")
+        return jax.ShapeDtypeStruct((n // n_shards,) + tuple(x.shape[1:]),
+                                    x.dtype)
+    return jax.tree.map(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr auditing
+# ---------------------------------------------------------------------------
+def _sub_jaxprs(eqn):
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if isinstance(v, jax.extend.core.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jax.extend.core.Jaxpr):
+                yield v
+
+
+def jaxpr_primitives(jaxpr) -> Set[str]:
+    """All primitive names in a (Closed)Jaxpr, recursing into nested
+    scan/while/cond/pjit/custom_* sub-jaxprs."""
+    if isinstance(jaxpr, jax.extend.core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    prims: Set[str] = set()
+    for eqn in jaxpr.eqns:
+        prims.add(eqn.primitive.name)
+        for sub in _sub_jaxprs(eqn):
+            prims |= jaxpr_primitives(sub)
+    return prims
+
+
+def collectives_in_jaxpr(jaxpr) -> Set[str]:
+    return jaxpr_primitives(jaxpr) & COLLECTIVE_PRIMS
+
+
+def find_shard_map_jaxprs(jaxpr):
+    """The body jaxprs of every ``shard_map`` eqn in a traced program
+    (recursing through nested sub-jaxprs). Auditing these — extracted
+    from the REAL program rather than traced separately — is what ties
+    the no-collectives assertion to the code that actually runs."""
+    if isinstance(jaxpr, jax.extend.core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    found = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "shard_map":
+            body = eqn.params.get("jaxpr")
+            if body is not None:
+                found.append(body)
+        for sub in _sub_jaxprs(eqn):
+            found.extend(find_shard_map_jaxprs(sub))
+    return found
+
+
+def assert_no_collectives(jaxpr, *, what: str = "program") -> None:
+    """Raise if any cross-shard collective appears anywhere in ``jaxpr``."""
+    found = collectives_in_jaxpr(jaxpr)
+    if found:
+        raise AssertionError(
+            f"{what} must be collective-free between AIP refreshes but "
+            f"contains {sorted(found)}")

@@ -179,6 +179,16 @@ def marl_scenario(name, **overrides):
     return registry.make(env_name, side=side, **overrides)
 
 
+def dials_variant_for(shards):
+    """§DIALS runtime knob: ``DIALSConfig`` overrides for a shard count —
+    the resolver behind every ``--shards N`` CLI flag (benchmarks/run.py,
+    benchmarks/scaling.py, examples/traffic_gs_vs_dials.py). ``None`` =
+    auto path selection (sharded iff >1 device visible), ``1`` = force
+    the unfused python-loop path (F+3 host syncs per round), ``N`` =
+    force an N-shard ``("shards",)`` mesh."""
+    return {"shards": shards}
+
+
 VARIANTS = {
     "train_no_seqpar": _train_no_seqpar,
     "train_zero3": _train_zero3,

@@ -1,0 +1,100 @@
+"""Multi-device contract check for the sharded DIALS runtime.
+
+Run by ``tests/test_runtime.py`` in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process must keep the single real CPU device — see tests/conftest.py).
+Asserts, on the smallest traffic config:
+
+1. the driver auto-selects the sharded path (4 shards for 4 agents);
+2. sharded execution is bitwise-deterministic per seed;
+3. sharded ≡ single-device numerics: GS-collect-trained AIPs to 1e-6 and
+   policy params / returns to optimizer-step tolerance — XLA batches the
+   agent axis differently at different widths (ulp-level reassociation),
+   and Adam's first-step update is ``±lr`` wherever a gradient component
+   sits near zero, so ulp noise lawfully becomes O(lr) parameter noise;
+   anything beyond a few·lr means a real sharding bug;
+4. the per-shard round body contains no cross-shard collectives, on the
+   real 4-device mesh.
+
+Prints MULTIDEVICE-OK on success.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dials, influence
+from repro.distributed import runtime
+from repro.envs import registry
+from repro.marl import policy as policy_mod, ppo as ppo_mod
+
+
+def build_trainer(**kw):
+    env_mod, cfg = registry.make("traffic", horizon=16)
+    info = cfg.info()
+    pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                 n_actions=info.n_actions, hidden=(16,))
+    ac = influence.AIPConfig(in_dim=info.alsh_dim,
+                             n_sources=info.n_influence, kind="fnn",
+                             hidden=(16,), epochs=2, batch=16)
+    ppo_cfg = ppo_mod.PPOConfig(epochs=1, minibatches=2)
+    dcfg = dials.DIALSConfig(
+        outer_rounds=2, aip_refresh=2, collect_envs=2, collect_steps=16,
+        n_envs=2, rollout_steps=8, eval_episodes=2, **kw)
+    return dials.DIALSTrainer(env_mod, cfg, pc, ac, ppo_cfg, dcfg)
+
+
+def tree_close(a, b, atol, what):
+    def one(x, y):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   err_msg=what)
+    jax.tree.map(one, a, b)
+
+
+def main():
+    assert len(jax.devices()) == 8, \
+        f"expected 8 forced host devices, got {jax.devices()}"
+
+    single = build_trainer(shards=1)
+    s_single, h_single = single.run(jax.random.PRNGKey(0))
+
+    sharded = build_trainer()                 # auto path selection
+    assert sharded._select_shards() == 4, sharded._select_shards()
+    s_shard, h_shard = sharded.run(jax.random.PRNGKey(0))
+
+    # (2) bitwise determinism: same seed through the same runner again
+    s_again, h_again = sharded.run(jax.random.PRNGKey(0))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b), err_msg="determinism"),
+        {"p": s_shard["ials"]["params"], "a": s_shard["aips"]},
+        {"p": s_again["ials"]["params"], "a": s_again["aips"]})
+    assert [r["gs_return"] for r in h_shard] == \
+        [r["gs_return"] for r in h_again]
+
+    # (3) sharded ≡ single-device
+    tree_close(s_single["aips"], s_shard["aips"], 1e-6, "AIP params")
+    tree_close(s_single["ials"]["params"], s_shard["ials"]["params"],
+               1e-2, "policy params (optimizer-step tolerance)")
+    for r1, r2 in zip(h_single, h_shard):
+        np.testing.assert_allclose(r1["aip_ce_before"], r2["aip_ce_before"],
+                                   atol=1e-5, err_msg="ce_before")
+        np.testing.assert_allclose(r1["aip_ce_after"], r2["aip_ce_after"],
+                                   atol=1e-5, err_msg="ce_after")
+        np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
+                                   atol=5e-2, err_msg="gs_return")
+
+    # (4) zero cross-shard collectives between AIP refreshes
+    jx = sharded._sharded.inner_jaxpr()
+    runtime.assert_no_collectives(jx, what="per-shard round body")
+
+    # the sharded state really lived on the 4-shard mesh
+    assert sharded._sharded.n_shards == 4
+
+    print("MULTIDEVICE-OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,6 +16,11 @@ def pytest_addoption(parser):
                      help="run slow tests (full reduced-arch sweeps)")
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test, needs --run-slow")
+
+
 def pytest_collection_modifyitems(config, items):
     if config.getoption("--run-slow"):
         return

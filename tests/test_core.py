@@ -142,12 +142,12 @@ def test_ials_trainer_zero_cross_agent_interaction():
 # ---------------------------------------------------------------------------
 # DIALS end-to-end (Algorithm 1)
 # ---------------------------------------------------------------------------
-def _dials_trainer(tmp_path=None, env_name="warehouse", **kw):
+def _dials_trainer(tmp_path=None, env_name="warehouse", outer_rounds=2, **kw):
     env_mod, cfg = registry.make(env_name, horizon=16)
     info, pc, ac, ppo_cfg = _tiny_setup(env_mod, cfg)
     dcfg = dials.DIALSConfig(
-        outer_rounds=2, aip_refresh=2, collect_envs=2, collect_steps=16,
-        n_envs=2, rollout_steps=8, eval_episodes=2,
+        outer_rounds=outer_rounds, aip_refresh=2, collect_envs=2,
+        collect_steps=16, n_envs=2, rollout_steps=8, eval_episodes=2,
         ckpt_dir=str(tmp_path) if tmp_path else None, **kw)
     return dials.DIALSTrainer(env_mod, cfg, pc, ac, ppo_cfg, dcfg)
 
@@ -180,6 +180,27 @@ def test_dials_checkpoint_restart_resumes(tmp_path):
     assert hist2 == []                     # already complete
     jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=0),
                  state["aips"], state2["aips"])
+
+
+def test_dials_resume_is_deterministic(tmp_path):
+    """2 rounds + restart + 2 more == 4 straight rounds: the restored
+    base key must continue the per-round fold-in stream exactly, and the
+    restored per-agent iter counters must continue the inner streams."""
+    s4, h4 = _dials_trainer(tmp_path / "straight", outer_rounds=4).run(
+        jax.random.PRNGKey(0))
+    part_dir = tmp_path / "parts"
+    _dials_trainer(part_dir, outer_rounds=2).run(jax.random.PRNGKey(0))
+    s_res, h_res = _dials_trainer(part_dir, outer_rounds=4).run(
+        jax.random.PRNGKey(0))
+    assert [h["round"] for h in h_res] == [2, 3]
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=0),
+        {"p": s4["ials"]["params"], "a": s4["aips"],
+         "it": s4["ials"]["iter"]},
+        {"p": s_res["ials"]["params"], "a": s_res["aips"],
+         "it": s_res["ials"]["iter"]})
+    for r4, rr in zip(h4[2:], h_res):
+        assert r4["gs_return"] == pytest.approx(rr["gs_return"], abs=0)
 
 
 def test_dials_straggler_mask_keeps_old_aips():

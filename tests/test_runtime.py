@@ -1,0 +1,192 @@
+"""Sharded DIALS runtime (repro.distributed.runtime +
+repro.core.dials_sharded).
+
+In-process tests cover the mesh/jaxpr utilities, the fixed ``pbroadcast``
+collective (driven through ``vmap(..., axis_name=...)`` so no real mesh is
+needed), and the no-collectives audit of the per-shard round body.
+
+The multi-device contract — sharded-vs-single-device equivalence,
+bitwise determinism, jaxpr cleanliness on a real 4-shard mesh — needs
+more than one XLA device, which the main pytest process must not force
+(see conftest). It runs ``tests/_multidevice_check.py`` in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; marked slow
+(CI runs it in the dedicated ``runtime-multidevice`` job).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import collectives, runtime
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+# single source of the tiny traffic config: the sharded-vs-unfused
+# equivalence claims only hold if every comparison uses the same setup
+from _multidevice_check import build_trainer  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# jaxpr auditing
+# ---------------------------------------------------------------------------
+def test_audit_detects_collectives():
+    jx = jax.make_jaxpr(
+        jax.vmap(lambda x: jax.lax.psum(x, "i"), axis_name="i"))(
+        jnp.arange(4.0))
+    assert "psum" in runtime.collectives_in_jaxpr(jx)
+    with pytest.raises(AssertionError, match="psum"):
+        runtime.assert_no_collectives(jx)
+
+
+def test_audit_clean_program_passes():
+    jx = jax.make_jaxpr(lambda x: jnp.sin(x).sum() * 2)(jnp.arange(4.0))
+    assert runtime.collectives_in_jaxpr(jx) == set()
+    runtime.assert_no_collectives(jx)
+
+
+def test_audit_recurses_into_scan():
+    def f(x):
+        def body(c, t):
+            return c + jax.lax.psum(t, "i"), c
+        out, _ = jax.lax.scan(body, x[0], x)
+        return out
+
+    jx = jax.make_jaxpr(jax.vmap(f, axis_name="i"))(jnp.ones((4, 3)))
+    assert "psum" in runtime.collectives_in_jaxpr(jx)
+
+
+def test_audit_recurses_into_cond():
+    def f(flag, x):
+        return jax.lax.cond(flag, lambda v: jax.lax.pmax(v, "i"),
+                            lambda v: v, x)
+
+    jx = jax.make_jaxpr(
+        jax.vmap(f, in_axes=(None, 0), axis_name="i"))(True, jnp.arange(4.0))
+    assert runtime.collectives_in_jaxpr(jx) & {"pmax", "psum"}
+
+
+# ---------------------------------------------------------------------------
+# mesh / placement helpers
+# ---------------------------------------------------------------------------
+def test_choose_shards_largest_divisor():
+    assert runtime.choose_shards(4, 8) == 4
+    assert runtime.choose_shards(4, 3) == 2
+    assert runtime.choose_shards(25, 8) == 5
+    assert runtime.choose_shards(7, 2) == 1
+    assert runtime.choose_shards(16, 16) == 16
+
+
+def test_shard_mesh_single_device():
+    mesh = runtime.shard_mesh(1)
+    assert mesh.shape[runtime.SHARD_AXIS] == 1
+    with pytest.raises(ValueError, match="devices"):
+        runtime.shard_mesh(len(jax.devices()) + 1)
+
+
+def test_local_slice_struct():
+    tree = {"a": jnp.zeros((4, 3)), "b": jnp.zeros((4,), jnp.int32)}
+    sl = runtime.local_slice_struct(tree, 2)
+    assert sl["a"].shape == (2, 3) and sl["b"].shape == (2,)
+    with pytest.raises(ValueError, match="divisible"):
+        runtime.local_slice_struct(tree, 3)
+
+
+def test_shard_agent_tree_roundtrip():
+    mesh = runtime.shard_mesh(1)
+    tree = {"x": jnp.arange(8.0).reshape(4, 2)}
+    placed = runtime.shard_agent_tree(tree, mesh)
+    np.testing.assert_array_equal(np.asarray(placed["x"]),
+                                  np.asarray(tree["x"]))
+
+
+# ---------------------------------------------------------------------------
+# pbroadcast (satellite fix): a REAL root-broadcast now
+# ---------------------------------------------------------------------------
+def test_pbroadcast_broadcasts_root_value():
+    x = jnp.arange(8.0).reshape(4, 2)
+    out = jax.vmap(lambda v: collectives.pbroadcast(v, "i", root=2),
+                   axis_name="i")(x)
+    np.testing.assert_array_equal(
+        np.asarray(out), np.broadcast_to(np.asarray(x[2]), (4, 2)))
+
+
+def test_pbroadcast_pytree_and_dtypes():
+    tree = {"i": jnp.arange(4, dtype=jnp.int32),
+            "f": jnp.arange(12.0).reshape(4, 3),
+            "b": jnp.array([True, False, True, False])}
+    out = jax.vmap(lambda v: collectives.pbroadcast(v, "i", root=1),
+                   axis_name="i")(tree)
+    assert out["i"].dtype == jnp.int32 and out["i"].tolist() == [1, 1, 1, 1]
+    np.testing.assert_array_equal(
+        np.asarray(out["f"]), np.broadcast_to(np.arange(3.0) + 3, (4, 3)))
+    assert out["b"].dtype == jnp.bool_ and out["b"].tolist() == [False] * 4
+
+
+# ---------------------------------------------------------------------------
+# sharded round body: collective-free by construction
+# ---------------------------------------------------------------------------
+def _tiny_runner(n_shards=1):
+    from repro.core import dials_sharded
+    tr = build_trainer()
+    return dials_sharded.ShardedDIALSRunner(
+        tr.env_mod, tr.env_cfg, tr.policy_cfg, tr.aip_cfg, tr.ppo_cfg,
+        tr.cfg, n_shards=n_shards)
+
+
+def test_inner_round_body_is_collective_free():
+    """The paper's runtime-stays-constant claim: between AIP refreshes the
+    per-shard program (AIP train + F inner IALS+PPO steps) communicates
+    with nobody. The audited jaxpr is EXTRACTED from the traced round
+    program (the round's one shard_map eqn), not re-traced separately."""
+    runner = _tiny_runner(n_shards=1)
+    jx = runner.inner_jaxpr()
+    runtime.assert_no_collectives(jx, what="per-shard round body")
+    # sanity: the audit actually saw a non-trivial program, and the round
+    # program really contains exactly one shard_map
+    assert {"scan", "dot_general"} <= runtime.jaxpr_primitives(jx)
+    assert len(runtime.find_shard_map_jaxprs(runner.round_jaxpr())) == 1
+
+
+@pytest.mark.slow
+def test_single_shard_fused_round_matches_python_loop():
+    """The fused one-program round on a 1-device mesh reproduces the
+    unfused python-loop path (same math, F+3 syncs -> 1)."""
+    import jax.random as jr
+    tr = build_trainer()
+    s1, h1 = tr.run(jr.PRNGKey(0))
+
+    tr2 = build_trainer()
+    state = tr2.restore_or_init(jr.PRNGKey(0))
+    s2, h2 = tr2._run_sharded(state, 1, log=None, straggler_mask=None)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b), atol=1e-5),
+        {"p": s1["ials"]["params"], "a": s1["aips"]},
+        {"p": s2["ials"]["params"], "a": s2["aips"]})
+    for r1, r2 in zip(h1, h2):
+        np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the multi-device contract, in a subprocess with 8 forced host devices
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_multidevice_sharded_equivalence():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests",
+                                      "_multidevice_check.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, \
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "MULTIDEVICE-OK" in proc.stdout
