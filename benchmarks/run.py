@@ -66,7 +66,7 @@ def _setup(env_name, n_side, *, horizon=32):
     return env_mod, env_cfg, info, pc, ac, ppo_cfg
 
 
-def fig3_learning(fast: bool = False, shards=None):
+def fig3_learning(fast: bool = False, shards=None, async_collect=False):
     """GS vs DIALS vs untrained-DIALS mean return (4-agent envs)."""
     from repro.core import dials
     from repro.launch import variants
@@ -82,7 +82,7 @@ def fig3_learning(fast: bool = False, shards=None):
                 outer_rounds=rounds, aip_refresh=inner, collect_envs=8,
                 collect_steps=64, n_envs=8, rollout_steps=16,
                 untrained=untrained, eval_episodes=8,
-                **variants.dials_variant_for(shards))
+                **variants.dials_variant_for(shards, async_collect))
             tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
             t0 = time.time()
             _, hist = tr.run(jax.random.PRNGKey(0))
@@ -158,7 +158,7 @@ def fig3_scalability(fast: bool = False):
     return rows
 
 
-def fig4_f_sweep(fast: bool = False, shards=None):
+def fig4_f_sweep(fast: bool = False, shards=None, async_collect=False):
     """AIP training frequency F: returns + influence CE (paper Fig. 4)."""
     from repro.core import dials
     from repro.launch import variants
@@ -171,7 +171,7 @@ def fig4_f_sweep(fast: bool = False, shards=None):
         cfg = dials.DIALSConfig(
             outer_rounds=rounds, aip_refresh=refresh, collect_envs=8,
             collect_steps=64, n_envs=8, rollout_steps=16, eval_episodes=8,
-            **variants.dials_variant_for(shards))
+            **variants.dials_variant_for(shards, async_collect))
         tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
         t0 = time.time()
         _, hist = tr.run(jax.random.PRNGKey(0))
@@ -261,6 +261,10 @@ def main() -> None:
     ap.add_argument("--shards", type=int, default=None,
                     help="DIALS runtime shard count (needs that many XLA "
                          "devices; None = auto, 1 = unfused path)")
+    ap.add_argument("--async-collect", action="store_true",
+                    help="overlap each round's GS collect with the "
+                         "previous round's inner steps (one-round "
+                         "dataset lag, bounded by max_aip_staleness)")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,metric,value")
@@ -269,6 +273,8 @@ def main() -> None:
         kw = {"fast": args.fast}
         if "shards" in inspect.signature(fn).parameters:
             kw["shards"] = args.shards
+        if "async_collect" in inspect.signature(fn).parameters:
+            kw["async_collect"] = args.async_collect
         fn(**kw)
 
 

@@ -2,7 +2,11 @@
 
 Measures, for every (registered scenario, shard count) cell:
 
-* wall-clock per outer Algorithm-1 round (post-compilation),
+* wall-clock per outer Algorithm-1 round (post-compilation), with the
+  GS collect on the critical path (``round_s``) AND overlapped with the
+  inner steps (``round_s_async`` — ``DIALSConfig.async_collect``, the
+  double-buffered collect of repro.distributed.async_collect) plus
+  their ratio ``overlap_speedup``,
 * inner agent-env steps/s (F · n_envs · rollout_steps · N per round),
 * speedup of the fused sharded runtime over the unfused python-loop
   path (``shards=1`` — the F+3-syncs-per-round baseline).
@@ -46,27 +50,42 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
                 print(f"# skip {scenario} shards={shards}: "
                       f"{n} agents not divisible")
                 continue
-            cfg = dials.DIALSConfig(
-                outer_rounds=rounds, aip_refresh=inner, collect_envs=4,
-                collect_steps=collect_steps, n_envs=8, rollout_steps=16,
-                eval_episodes=4, **variants.dials_variant_for(shards))
-            tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
-            t0 = time.time()
-            _, hist = tr.run(jax.random.PRNGKey(0))
-            total_s = time.time() - t0
-            # round 0 pays compilation; measure the steady-state rounds
-            # (with a single round, the compile-inclusive time is all
-            # there is — still a valid upper bound)
-            steady = ((hist[-1]["wall_s"] - hist[0]["wall_s"]) /
-                      (len(hist) - 1)) if len(hist) > 1 else hist[0]["wall_s"]
+            # every cell runs twice: collect on the critical path
+            # (async_collect=False) vs overlapped (True)
+            steady_by_mode, total_by_mode = {}, {}
+            for overlap in (False, True):
+                cfg = dials.DIALSConfig(
+                    outer_rounds=rounds, aip_refresh=inner, collect_envs=4,
+                    collect_steps=collect_steps, n_envs=8, rollout_steps=16,
+                    eval_episodes=4,
+                    **variants.dials_variant_for(shards, overlap))
+                tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac,
+                                        ppo_cfg, cfg)
+                t0 = time.time()
+                _, hist = tr.run(jax.random.PRNGKey(0))
+                total_by_mode[overlap] = time.time() - t0
+                # round 0 pays compilation (and async priming); measure
+                # the steady-state rounds (with a single round, the
+                # compile-inclusive time is all there is — still a valid
+                # upper bound)
+                steady_by_mode[overlap] = (
+                    (hist[-1]["wall_s"] - hist[0]["wall_s"]) /
+                    (len(hist) - 1)) if len(hist) > 1 \
+                    else hist[0]["wall_s"]
+            steady = steady_by_mode[False]
             inner_steps = cfg.aip_refresh * cfg.n_envs * \
                 cfg.rollout_steps * n                  # F * E * T * N
             row = {"label": f"{scenario}-s{shards}",
                    "scenario": scenario, "n_agents": n, "shards": shards,
                    "fused": shards > 1,
                    "round_s": steady,
+                   "round_s_async": steady_by_mode[True],
+                   "overlap_speedup": steady / steady_by_mode[True],
                    "inner_steps_per_s": inner_steps / steady,
-                   "total_wall_s": total_s}
+                   "inner_steps_per_s_async":
+                       inner_steps / steady_by_mode[True],
+                   "total_wall_s": total_by_mode[False],
+                   "total_wall_s_async": total_by_mode[True]}
             if shards == 1:
                 unfused_round_s = steady
             if unfused_round_s is not None:

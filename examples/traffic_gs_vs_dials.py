@@ -4,11 +4,14 @@ final returns and wall time — the paper's three-way comparison on one CPU.
 Defaults to the 2x2 traffic grid; any registered env name works.
 
 Run:  PYTHONPATH=src python examples/traffic_gs_vs_dials.py [--rounds N]
-          [--env traffic] [--shards N]
+          [--env traffic] [--shards N] [--async-collect]
 
 ``--shards N`` forces the agent-sharded fused runtime (needs N XLA
 devices — e.g. XLA_FLAGS=--xla_force_host_platform_device_count=4);
 by default the driver picks it automatically when >1 device is visible.
+``--async-collect`` overlaps each round's GS collect with the previous
+round's inner steps (one-round dataset lag, bounded by
+``max_aip_staleness``).
 """
 import argparse
 import time
@@ -28,6 +31,8 @@ def main():
     ap.add_argument("--env", default="traffic", choices=registry.names())
     ap.add_argument("--shards", type=int, default=None,
                     help="DIALS runtime shard count (None = auto)")
+    ap.add_argument("--async-collect", action="store_true",
+                    help="double-buffered overlapped GS collect")
     args = ap.parse_args()
 
     env_mod, env_cfg = registry.make(args.env, side=2, horizon=32)
@@ -46,7 +51,7 @@ def main():
             outer_rounds=args.rounds, aip_refresh=args.inner,
             collect_envs=8, collect_steps=64, n_envs=8, rollout_steps=16,
             untrained=untrained, eval_episodes=8,
-            **variants.dials_variant_for(args.shards))
+            **variants.dials_variant_for(args.shards, args.async_collect))
         t0 = time.time()
         _, hist = dials.DIALSTrainer(
             env_mod, env_cfg, pc, ac, ppo_cfg, cfg).run(

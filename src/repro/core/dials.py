@@ -12,10 +12,30 @@ dynamics stationary (Section 4.3), and Lemma 2/Theorem 1 bound the cost of
 the staleness.
 
 Production hooks: periodic GS evaluation, checkpoint/restart via
-``CheckpointManager``, bounded-staleness AIP refresh (straggler
-mitigation — late agents keep their previous AIP, which DIALS tolerates by
-design), and the ``untrained`` ablation (the paper's untrained-DIALS
-baseline).
+``CheckpointManager``, the ``untrained`` ablation (the paper's
+untrained-DIALS baseline), and **bounded staleness made real**:
+
+* ``async_collect=True`` overlaps round k+1's GS collect with round k's
+  F inner steps (``repro.distributed.async_collect`` — double-buffered
+  dataset slots, spare-device or host-thread dispatch). The dataset
+  consumed each round carries its collection-round tag in the round
+  record (``data_round``); the steady-state lag is exactly one round,
+  the staleness Lemma 2 licenses.
+* ``max_aip_staleness`` is enforced, not decorative: a dataset older
+  than the bound triggers a blocking force-sync collect
+  (``forced_sync`` in the record), and an agent whose predictor would
+  fall further behind than the bound — e.g. a straggler that keeps
+  missing its refresh — is force-refreshed through
+  ``repro.distributed.fault.freshness_gate`` (``stale_forced``).
+  ``async_collect=True, max_aip_staleness=0`` degenerates to the serial
+  schedule, which is how the equivalence tests pin the semantics.
+
+Checkpoint-resume caveat under ``async_collect``: the in-flight dataset
+is not checkpointed, so the first resumed round re-primes with a
+force-sync collect (``forced_sync=True``, ``data_round == round``) —
+the resumed schedule trains that round on FRESHER data than the
+uninterrupted run would have (safe direction under Lemma 2, but not the
+sync path's bitwise run-vs-restore equality).
 """
 from __future__ import annotations
 
@@ -30,6 +50,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core import gs as gs_mod
 from repro.core import ials as ials_mod
 from repro.core import influence
+from repro.distributed import async_collect as async_mod
 from repro.distributed import fault
 from repro.marl import policy as policy_mod
 from repro.marl import ppo as ppo_mod
@@ -42,17 +63,32 @@ class DIALSConfig:
     outer_rounds: int = 4
     collect_envs: int = 8
     collect_steps: int = 128       # per env -> dataset size = envs*steps
+    collect_holdout: int = 1       # env streams per agent held out of AIP
+    #                                training; eval_ce runs on these (the
+    #                                paper's held-out Fig.-4 CE). 0 = legacy
+    #                                train-set CE (forced when collect_envs=1)
     untrained: bool = False        # paper's untrained-DIALS ablation
     eval_episodes: int = 8
     n_envs: int = 16
     rollout_steps: int = 16
-    max_aip_staleness: int = 2     # rounds; straggler tolerance
+    max_aip_staleness: int = 2     # rounds; straggler/async-lag tolerance
+    async_collect: bool = False    # overlap round k+1's GS collect with
+    #                                round k's inner steps (one-round
+    #                                dataset lag, bounded by
+    #                                max_aip_staleness)
     ckpt_dir: Optional[str] = None
     ckpt_keep: int = 3
     # agent-sharded runtime (repro.core.dials_sharded): None = auto
     # (sharded whenever >1 device is visible), <=1 = force the
     # single-device path, N = force an N-shard ("shards",) mesh.
     shards: Optional[int] = None
+
+
+def holdout_sequences(cfg: DIALSConfig) -> int:
+    """How many collected env streams per agent are held out for the
+    held-out CE metric: ``collect_holdout`` clamped so at least one
+    sequence always remains for AIP training."""
+    return max(0, min(cfg.collect_holdout, cfg.collect_envs - 1))
 
 
 class DIALSTrainer:
@@ -65,6 +101,7 @@ class DIALSTrainer:
         self.policy_cfg, self.aip_cfg = policy_cfg, aip_cfg
         self.ppo_cfg, self.cfg = ppo_cfg, cfg
         self.info = env_cfg.info()
+        self.n_eval_seqs = holdout_sequences(cfg)
 
         self.collect = gs_mod.make_collector(
             env_mod, env_cfg, policy_cfg,
@@ -130,12 +167,31 @@ class DIALSTrainer:
         s = runtime_lib.choose_shards(n_agents, n_dev)
         return s if s > 1 else 0
 
+    # -- key plumbing --------------------------------------------------------
+    def _collect_key(self, base_key, rnd: int):
+        """The round-``rnd`` collect key of the per-round fold-in stream —
+        the same derivation the serial path (and the fused sharded round
+        program) performs, so async and serial runs draw identical
+        collect randomness for any given round."""
+        return jax.random.split(jax.random.fold_in(base_key, rnd), 3)[0]
+
+    def _make_collector_executor(self):
+        """Loop-path executor: a host worker thread driving the same
+        jitted collector (safe here — this path never donates buffers).
+        Placement is deliberately left untouched: committing the dataset
+        to a spare device would drag every downstream jit (AIP train,
+        inner steps) into recompiles and cross-device transfers. The
+        sharded driver is the one that collects on a spare device — it
+        re-places the dataset onto the mesh explicitly."""
+        return async_mod.AsyncCollector(self.collect, mode="thread")
+
     # -- Algorithm 1 --------------------------------------------------------
     def run(self, key, *, log: Optional[Callable] = None,
             straggler_mask: Optional[Callable] = None):
         """Runs ``outer_rounds`` rounds of (collect → AIP train → F inner
         steps). Returns (state, history). ``straggler_mask(round) ->
-        (N,) {0,1}`` simulates late shards (bounded-staleness refresh).
+        (N,) {0,1}`` simulates late shards (bounded-staleness refresh,
+        force-refreshed past ``max_aip_staleness``).
 
         Dispatches to the agent-sharded fused runtime whenever more than
         one device is visible (or ``cfg.shards`` forces a mesh); both
@@ -148,48 +204,89 @@ class DIALSTrainer:
         if n_shards:
             return self._run_sharded(state, n_shards, log=log,
                                      straggler_mask=straggler_mask)
+        n = self.info.n_agents
+        collector = (self._make_collector_executor()
+                     if cfg.async_collect else None)
+        # collection round of each agent's newest trained-on dataset;
+        # resume treats the checkpointed AIPs as fresh at their round
+        reports = jnp.full((n,), state["round"] - 1, jnp.int32)
         history = []
         t_start = time.time()
-        for rnd in range(state["round"], cfg.outer_rounds):
-            key = jax.random.fold_in(state["key"], rnd)
-            kc, kt, ke = jax.random.split(key, 3)
+        try:
+            for rnd in range(state["round"], cfg.outer_rounds):
+                key = jax.random.fold_in(state["key"], rnd)
+                kc, kt, ke = jax.random.split(key, 3)
 
-            # (1) Algorithm 2: datasets from the GS
-            data = self.collect(state["ials"]["params"], kc)
+                # (1) Algorithm 2: datasets from the GS. Async: consume
+                # the double buffer (freshness-gated; round 0 primes with
+                # a blocking collect) and launch the NEXT round's collect
+                # under THIS round's entry policy — it overlaps the F
+                # inner steps below and is consumed one round later.
+                if collector is not None:
+                    tagged, forced_sync = collector.obtain(
+                        rnd, state["ials"]["params"], kc,
+                        max_staleness=cfg.max_aip_staleness)
+                    # pipeline the next round's collect — unless the
+                    # bound forbids any lag (a tag-rnd dataset could
+                    # never be consumed at rnd+1, so don't collect it)
+                    if (rnd + 1 < cfg.outer_rounds and collector.idle()
+                            and cfg.max_aip_staleness > 0):
+                        collector.submit(
+                            state["ials"]["params"],
+                            self._collect_key(state["key"], rnd + 1), rnd)
+                    data, data_round = tagged.data, tagged.round
+                else:
+                    data = self.collect(state["ials"]["params"], kc)
+                    data_round, forced_sync = rnd, False
+                train_data, eval_data = gs_mod.split_dataset(
+                    data, self.n_eval_seqs)
 
-            # (2) parallel AIP training (skipped for untrained-DIALS)
-            ce_before = self.eval_aips(state["aips"], data)
-            if not cfg.untrained:
-                new_aips, _ = self.train_aips(
-                    state["aips"], data,
-                    jax.random.split(kt, self.info.n_agents))
-                if straggler_mask is not None:
-                    mask = jnp.asarray(straggler_mask(rnd), jnp.float32)
-                    new_aips = fault.masked_tree_update(
-                        state["aips"], new_aips, mask)
-                state["aips"] = new_aips
-            ce_after = self.eval_aips(state["aips"], data)
+                # (2) parallel AIP training (skipped for untrained-DIALS)
+                ce_before = self.eval_aips(state["aips"], eval_data)
+                stale_forced = 0
+                if not cfg.untrained:
+                    new_aips, _ = self.train_aips(
+                        state["aips"], train_data,
+                        jax.random.split(kt, n))
+                    if straggler_mask is not None:
+                        mask = jnp.asarray(straggler_mask(rnd), jnp.float32)
+                        eff, reports, forced = fault.freshness_gate(
+                            mask, reports, data_round, rnd,
+                            cfg.max_aip_staleness)
+                        new_aips = fault.masked_tree_update(
+                            state["aips"], new_aips, eff)
+                        stale_forced = int(forced.sum())
+                    else:
+                        reports = jnp.full_like(reports, data_round)
+                    state["aips"] = new_aips
+                ce_after = self.eval_aips(state["aips"], eval_data)
 
-            # (3) F inner IALS+PPO steps, AIPs frozen
-            metrics = None
-            for _ in range(cfg.aip_refresh):
-                state["ials"], metrics = self.ials_train(
-                    state["ials"], state["aips"])
+                # (3) F inner IALS+PPO steps, AIPs frozen
+                metrics = None
+                for _ in range(cfg.aip_refresh):
+                    state["ials"], metrics = self.ials_train(
+                        state["ials"], state["aips"])
 
-            ret = self.gs_eval(state["ials"]["params"], ke,
-                               episodes=cfg.eval_episodes)
-            rec = {"round": rnd,
-                   "gs_return": float(ret),
-                   "ials_reward": float(metrics["reward"]),
-                   "aip_ce_before": float(ce_before.mean()),
-                   "aip_ce_after": float(ce_after.mean()),
-                   "wall_s": time.time() - t_start}
-            history.append(rec)
-            if log:
-                log(rec)
-            state["round"] = rnd + 1
-            if self.manager is not None:
-                self.manager.save(rnd + 1, state)
+                ret = self.gs_eval(state["ials"]["params"], ke,
+                                   episodes=cfg.eval_episodes)
+                rec = {"round": rnd,
+                       "gs_return": float(ret),
+                       "ials_reward": float(metrics["reward"]),
+                       "aip_ce_before": float(ce_before.mean()),
+                       "aip_ce_after": float(ce_after.mean()),
+                       "data_round": int(data_round),
+                       "forced_sync": bool(forced_sync),
+                       "stale_forced": stale_forced,
+                       "wall_s": time.time() - t_start}
+                history.append(rec)
+                if log:
+                    log(rec)
+                state["round"] = rnd + 1
+                if self.manager is not None:
+                    self.manager.save(rnd + 1, state)
+        finally:
+            if collector is not None:
+                collector.close()
         if self.manager is not None:
             self.manager.wait()
         return state, history
@@ -204,22 +301,58 @@ class DIALSTrainer:
         return self._sharded
 
     def _run_sharded(self, state, n_shards: int, *, log, straggler_mask):
-        """The same round loop, one fused donated program per round; the
-        only per-round host sync is reading the metrics record."""
+        """The same round loop over the mesh. Sync: one fused donated
+        program per round. Async: the round is split into a collect
+        program and a shard-train program — round k+1's collect is
+        dispatched (onto a spare device when one exists) BEFORE round k's
+        shard-train program, so it runs while the shard_map section does.
+        Dispatch order also makes this donation-safe: the collect is
+        enqueued with the pre-donation parameter buffers."""
+        from repro.distributed import runtime as runtime_lib
         cfg = self.cfg
         runner = self._sharded_runner(n_shards)
         n = self.info.n_agents
         base_key = state["key"]
         carry = runner.shard_carry(
-            {"aips": state["aips"], "ials": state["ials"]})
+            {"aips": state["aips"], "ials": state["ials"],
+             "reports": jnp.full((n,), state["round"] - 1, jnp.int32)})
+        collector = None
+        if cfg.async_collect:
+            # dispatch mode only: a host thread could race the donation
+            collector = async_mod.AsyncCollector(
+                runner.collect, mode="dispatch",
+                spare_device=runtime_lib.spare_device(runner.n_shards))
         history = []
         t_start = time.time()
         for rnd in range(state["round"], cfg.outer_rounds):
             mask = (jnp.asarray(straggler_mask(rnd), jnp.float32)
                     if straggler_mask is not None and not cfg.untrained
                     else jnp.ones((n,), jnp.float32))
-            carry, rec = runner.round(carry, base_key, rnd, mask)
-            rec = {"round": rnd, **{k: float(v) for k, v in rec.items()},
+            if collector is None:
+                carry, rec = runner.round(carry, base_key, rnd, mask)
+                forced_sync = False
+            else:
+                tagged, forced_sync = collector.obtain(
+                    rnd, carry["ials"]["params"],
+                    self._collect_key(base_key, rnd),
+                    max_staleness=cfg.max_aip_staleness)
+                # a tag-rnd dataset can only be consumed if the bound
+                # tolerates one round of lag
+                if (rnd + 1 < cfg.outer_rounds and collector.idle()
+                        and cfg.max_aip_staleness > 0):
+                    collector.submit(
+                        carry["ials"]["params"],
+                        self._collect_key(base_key, rnd + 1), rnd)
+                # agent-shard the dataset onto the mesh (it arrives on the
+                # spare device when one exists); an async transfer
+                data = runner.place_dataset(tagged.data)
+                carry, rec = runner.train_round(
+                    carry, data, base_key, rnd, tagged.round, mask)
+            raw = {k: float(v) for k, v in rec.items()}
+            rec = {"round": rnd, **raw,
+                   "data_round": int(raw["data_round"]),
+                   "stale_forced": int(raw["stale_forced"]),
+                   "forced_sync": bool(forced_sync),
                    "wall_s": time.time() - t_start}
             history.append(rec)
             if log:
@@ -230,8 +363,9 @@ class DIALSTrainer:
                 self.manager.save(rnd + 1, {
                     "ials": carry["ials"], "aips": carry["aips"],
                     "round": rnd + 1, "key": base_key})
-        state = {**runner.unshard_carry(carry),
-                 "round": cfg.outer_rounds, "key": base_key}
+        unshard = runner.unshard_carry(carry)
+        unshard.pop("reports", None)     # keep both paths' state schema
+        state = {**unshard, "round": cfg.outer_rounds, "key": base_key}
         if self.manager is not None:
             self.manager.wait()
         return state, history

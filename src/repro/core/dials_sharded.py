@@ -9,15 +9,27 @@ program** with the agent axis of params/opt/AIPs/locals sharded over a
 
 * the per-shard section (AIP train + bounded-staleness refresh + a
   ``lax.scan`` over the F inner steps) runs under ``shard_map`` and is
-  **collective-free by construction** — :meth:`inner_jaxpr` exposes its
-  jaxpr so tests assert no cross-shard communication exists between AIP
-  refreshes (the paper's runtime-stays-constant claim, made checkable);
+  **collective-free by construction** — :meth:`inner_jaxpr` /
+  :meth:`split_inner_jaxpr` expose its jaxpr so tests assert no
+  cross-shard communication exists between AIP refreshes (the paper's
+  runtime-stays-constant claim, made checkable);
 * GS collect and the periodic GS eval need the full joint policy and
   happen at the refresh boundary, where the partitioner inserts the one
   gather per round that DIALS fundamentally requires;
 * per-agent randomness comes from ``repro.core.ials``'s shard-equivariant
   keying, so the sharded round is numerically the single-device round —
   the driver can switch paths freely.
+
+For the overlapped-collect driver (``DIALSConfig.async_collect``) the
+fused round is **split in two**: :attr:`collect` (Algorithm 2 alone) and
+:meth:`train_round` (everything after it, taking the dataset plus its
+collection-round tag as arguments). The driver dispatches round k+1's
+collect — on a spare device when the machine has one beyond the mesh —
+before round k's shard-train program, so the two overlap; the per-shard
+body enforces ``max_aip_staleness`` through
+``repro.distributed.fault.freshness_gate`` (stragglers are tolerated up
+to the bound, then force-refreshed), with the per-agent report rounds
+carried on-mesh.
 
 Host syncs per round: 1 (reading the metrics record).
 """
@@ -27,6 +39,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import dials as dials_mod
 from repro.core import gs as gs_mod
 from repro.core import ials as ials_mod
 from repro.core import influence
@@ -40,7 +53,8 @@ class ShardedDIALSRunner:
 
     Built by ``DIALSTrainer`` when more than one device is available (or a
     shard count is forced); owns no training-loop policy — checkpointing,
-    logging and the round loop stay in the driver.
+    logging, the round loop, and the async-collect double buffer stay in
+    the driver.
     """
 
     def __init__(self, env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg, cfg,
@@ -48,6 +62,7 @@ class ShardedDIALSRunner:
         self.env_mod, self.env_cfg, self.cfg = env_mod, env_cfg, cfg
         self.aip_cfg = aip_cfg
         self.info = env_cfg.info()
+        self.n_eval_seqs = dials_mod.holdout_sequences(cfg)
         n_agents = self.info.n_agents
         if mesh is None:
             if n_shards is None:
@@ -72,28 +87,41 @@ class ShardedDIALSRunner:
             runner_mod.RunConfig(n_envs=cfg.n_envs,
                                  rollout_steps=cfg.rollout_steps))
         self._shard_body = self._make_shard_body()
+        self._train_fn = self._make_train()
         self._round_fn = self._make_round()
+        # sync path: the whole round fused. async path: the driver calls
+        # self.collect and train_round separately so they can overlap.
         self.round = jax.jit(self._round_fn, donate_argnums=0)
+        self.train_round = jax.jit(self._train_fn, donate_argnums=0)
 
     # -- per-shard program ---------------------------------------------------
     def _make_shard_body(self):
         """The collective-free section: everything between AIP refreshes.
 
         All arguments arrive pre-sliced to this shard's agents (leading
-        axis N/num_shards); nothing here may touch another shard.
+        axis N/num_shards) except the two replicated scalars (current
+        round, dataset collection round); nothing here may touch another
+        shard — the freshness gate and masked update are elementwise.
         """
         cfg, aip_cfg = self.cfg, self.aip_cfg
+        n_eval = self.n_eval_seqs
         train_aips = jax.vmap(
             lambda p, d, k: influence.train_aip(p, d, k, aip_cfg))
         eval_aips = jax.vmap(lambda p, d: influence.eval_ce(p, d, aip_cfg))
         train_agents = jax.vmap(self._agent_train)
 
-        def shard_body(aips, ials, data, aip_keys, fresh_mask):
-            ce_before = eval_aips(aips, data)
+        def shard_body(aips, ials, reports, data, aip_keys, fresh_mask,
+                       rnd, data_round):
+            train_data, eval_data = gs_mod.split_dataset(data, n_eval)
+            ce_before = eval_aips(aips, eval_data)
+            forced = jnp.zeros_like(fresh_mask)
             if not cfg.untrained:
-                new_aips, _ = train_aips(aips, data, aip_keys)
-                aips = fault.masked_tree_update(aips, new_aips, fresh_mask)
-            ce_after = eval_aips(aips, data)
+                new_aips, _ = train_aips(aips, train_data, aip_keys)
+                eff, reports, forced = fault.freshness_gate(
+                    fresh_mask, reports, data_round, rnd,
+                    cfg.max_aip_staleness)
+                aips = fault.masked_tree_update(aips, new_aips, eff)
+            ce_after = eval_aips(aips, eval_data)
 
             def inner(ials, _):
                 return train_agents(ials, aips)
@@ -101,55 +129,87 @@ class ShardedDIALSRunner:
             ials, metrics = jax.lax.scan(
                 inner, ials, None, length=cfg.aip_refresh)
             metrics = jax.tree.map(lambda x: x[-1], metrics)  # last F step
-            return aips, ials, ce_before, ce_after, metrics
+            return aips, ials, reports, ce_before, ce_after, metrics, forced
 
         return shard_body
+
+    # -- abstract tracing (tests / audits) -----------------------------------
+    def _abstract_carry(self):
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        return {"aips": jax.eval_shape(
+                    lambda k: jax.vmap(
+                        lambda kk: influence.aip_init(kk, self.aip_cfg))(
+                        jax.random.split(k, self.info.n_agents)), key),
+                "ials": jax.eval_shape(self.ials_init, key),
+                "reports": jax.ShapeDtypeStruct(
+                    (self.info.n_agents,), jnp.int32)}
 
     def round_jaxpr(self):
         """Jaxpr of the whole fused round, traced abstractly at this
         runner's shapes (no FLOPs)."""
         key = jax.ShapeDtypeStruct((2,), jnp.uint32)
-        carry = {"aips": jax.eval_shape(
-                     lambda k: jax.vmap(
-                         lambda kk: influence.aip_init(kk, self.aip_cfg))(
-                         jax.random.split(k, self.info.n_agents)), key),
-                 "ials": jax.eval_shape(self.ials_init, key)}
+        carry = self._abstract_carry()
         rnd = jax.ShapeDtypeStruct((), jnp.int32)
         mask = jax.ShapeDtypeStruct((self.info.n_agents,), jnp.float32)
         return jax.make_jaxpr(self._round_fn)(carry, key, rnd, mask)
 
-    def inner_jaxpr(self):
-        """The per-shard body of the round, EXTRACTED from the traced
-        round program (not re-traced separately) — the artifact the
-        no-collectives assertion runs against. Everything between AIP
-        refreshes lives inside this one shard_map."""
-        bodies = runtime_lib.find_shard_map_jaxprs(self.round_jaxpr())
+    def train_round_jaxpr(self):
+        """Jaxpr of the shard-train program of the SPLIT round (the async
+        path's second half: AIP train + F inner steps + GS eval, dataset
+        passed in)."""
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        carry = self._abstract_carry()
+        data = jax.eval_shape(self.collect, carry["ials"]["params"], key)
+        scalar = jax.ShapeDtypeStruct((), jnp.int32)
+        mask = jax.ShapeDtypeStruct((self.info.n_agents,), jnp.float32)
+        return jax.make_jaxpr(self._train_fn)(
+            carry, data, key, scalar, scalar, mask)
+
+    def _one_shard_map_body(self, jaxpr, what):
+        bodies = runtime_lib.find_shard_map_jaxprs(jaxpr)
         assert len(bodies) == 1, \
-            f"expected exactly one shard_map in the round, found {len(bodies)}"
+            f"expected exactly one shard_map in the {what}, " \
+            f"found {len(bodies)}"
         return bodies[0]
 
-    # -- the fused round -----------------------------------------------------
-    def _make_round(self):
+    def inner_jaxpr(self):
+        """The per-shard body of the round, EXTRACTED from the traced
+        fused round program (not re-traced separately) — the artifact the
+        no-collectives assertion runs against. Everything between AIP
+        refreshes lives inside this one shard_map."""
+        return self._one_shard_map_body(self.round_jaxpr(), "round")
+
+    def split_inner_jaxpr(self):
+        """Same audit artifact, extracted from the split shard-train
+        program the async-collect driver actually runs."""
+        return self._one_shard_map_body(
+            self.train_round_jaxpr(), "shard-train program")
+
+    # -- the shard-train program ---------------------------------------------
+    def _make_train(self):
         cfg, mesh = self.cfg, self.mesh
         n_agents = self.info.n_agents
         sharded = P(runtime_lib.SHARD_AXIS)
         body = runtime_lib.shard_map_nocheck(
             self._shard_body, mesh,
-            in_specs=(sharded,) * 5,
-            out_specs=(sharded,) * 5)
+            in_specs=(sharded,) * 6 + (P(), P()),
+            out_specs=(sharded,) * 7)
 
-        def round_fn(carry, base_key, rnd, fresh_mask):
-            """carry = {"aips", "ials"} (donated). Returns (carry', rec)."""
+        def train_fn(carry, data, base_key, rnd, data_round, fresh_mask):
+            """carry = {"aips", "ials", "reports"} (donated). ``data`` is
+            the round's dataset, ``data_round`` its collection tag (= rnd
+            on the serial schedule, rnd-1 in the async steady state).
+            Returns (carry', rec)."""
             key = jax.random.fold_in(base_key, rnd)
-            kc, kt, ke = jax.random.split(key, 3)
+            _kc, kt, ke = jax.random.split(key, 3)
 
-            # (1) Algorithm 2: datasets from the GS under the joint policy
-            data = self.collect(carry["ials"]["params"], kc)
-
-            # (2)+(3) per-shard: AIP train + F frozen-AIP inner steps
-            aips, ials, ce_before, ce_after, metrics = body(
-                carry["aips"], carry["ials"], data,
-                jax.random.split(kt, n_agents), fresh_mask)
+            # (2)+(3) per-shard: AIP train + staleness gate + F frozen-AIP
+            # inner steps
+            aips, ials, reports, ce_before, ce_after, metrics, forced = \
+                body(carry["aips"], carry["ials"], carry["reports"], data,
+                     jax.random.split(kt, n_agents), fresh_mask,
+                     jnp.asarray(rnd, jnp.int32),
+                     jnp.asarray(data_round, jnp.int32))
 
             # (4) periodic GS eval — the once-per-round joint-policy sync
             ret = self.gs_eval(ials["params"], ke,
@@ -157,14 +217,39 @@ class ShardedDIALSRunner:
             rec = {"gs_return": ret,
                    "ials_reward": metrics["reward"].mean(),
                    "aip_ce_before": ce_before.mean(),
-                   "aip_ce_after": ce_after.mean()}
-            return {"aips": aips, "ials": ials}, rec
+                   "aip_ce_after": ce_after.mean(),
+                   "data_round": jnp.asarray(data_round, jnp.int32),
+                   "stale_forced": forced.sum()}
+            return {"aips": aips, "ials": ials, "reports": reports}, rec
+
+        return train_fn
+
+    # -- the fused round -----------------------------------------------------
+    def _make_round(self):
+        def round_fn(carry, base_key, rnd, fresh_mask):
+            """The serial schedule: collect under THIS round's policy
+            (data_round = rnd), then the shard-train section, one fused
+            donated program."""
+            key = jax.random.fold_in(base_key, rnd)
+            kc, _kt, _ke = jax.random.split(key, 3)
+
+            # (1) Algorithm 2: datasets from the GS under the joint policy
+            data = self.collect(carry["ials"]["params"], kc)
+            return self._train_fn(carry, data, base_key, rnd, rnd,
+                                  fresh_mask)
 
         return round_fn
 
     # -- placement -----------------------------------------------------------
+    def place_dataset(self, data):
+        """Agent-shard a collected dataset onto the mesh (leaves are
+        agent-major, (N, S, T, ...)). The async driver uses this to move
+        a spare-device collect result next to the shard-train program."""
+        return runtime_lib.shard_agent_tree(data, self.mesh)
+
     def shard_carry(self, carry):
-        """Move an {"aips", "ials"} carry onto the mesh, agent-sharded."""
+        """Move an {"aips", "ials", "reports"} carry onto the mesh,
+        agent-sharded."""
         return runtime_lib.shard_agent_tree(carry, self.mesh)
 
     def unshard_carry(self, carry):

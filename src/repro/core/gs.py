@@ -13,6 +13,28 @@ import jax.numpy as jnp
 from repro.marl import policy as policy_mod
 
 
+def split_dataset(data, n_eval: int):
+    """Split a collected dataset (leaves (N, S, T, ...)) along the
+    sequence axis S into (train, held_out): the LAST ``n_eval`` env
+    streams per agent are held out of AIP training so ``eval_ce`` is the
+    paper's true held-out Fig.-4 metric rather than train-set CE.
+
+    ``n_eval <= 0`` returns the full dataset for both views (legacy
+    train-set CE — the only option when only one sequence was collected).
+    Static slicing: safe inside jit/shard_map, no collectives.
+    """
+    if n_eval <= 0:
+        return data, data
+    n_seq = jax.tree.leaves(data)[0].shape[1]
+    if n_eval >= n_seq:
+        raise ValueError(
+            f"cannot hold out {n_eval} of {n_seq} collected sequences — "
+            f"at least one must remain for AIP training")
+    train = jax.tree.map(lambda x: x[:, :n_seq - n_eval], data)
+    held = jax.tree.map(lambda x: x[:, n_seq - n_eval:], data)
+    return train, held
+
+
 def make_collector(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
                    *, n_envs: int, steps: int):
     info = env_cfg.info()

@@ -109,13 +109,29 @@ def bce_loss(params, feats, targets, resets, cfg: AIPConfig):
     return ce.mean()
 
 
+def epoch_minibatch_indices(perm, batch: int):
+    """Cover a permutation of S sequence indices with ceil(S/batch)
+    fixed-size minibatches. When batch does not divide S, the last
+    minibatch wraps around to the permutation's head instead of dropping
+    the remainder — every sequence is visited at least once per epoch
+    (a handful are visited twice; under a fresh permutation per epoch no
+    sequence is systematically favoured). Requires ``batch <= len(perm)``
+    (the wrap covers at most one full extra pass); callers clamp with
+    ``min(cfg.batch, n_seq)``."""
+    n_seq = perm.shape[0]
+    n_mb = -(-n_seq // batch)
+    pad = n_mb * batch - n_seq
+    if pad:
+        perm = jnp.concatenate([perm, perm[:pad]])
+    return perm.reshape(n_mb, batch)
+
+
 def train_aip(params, dataset, key, cfg: AIPConfig):
     """Minibatch Adam on BCE. dataset: {feats (S, T, F), u (S, T, M),
     resets (S, T)} — S sequences of length T. Returns (params, final_loss)."""
     opt = adamw.init(params)
     n_seq = dataset["feats"].shape[0]
     batch = min(cfg.batch, n_seq)
-    n_mb = max(1, n_seq // batch)
 
     def one_mb(carry, idx):
         params, opt = carry
@@ -130,8 +146,8 @@ def train_aip(params, dataset, key, cfg: AIPConfig):
 
     def one_epoch(carry, ekey):
         perm = jax.random.permutation(ekey, n_seq)
-        idxs = perm[:n_mb * batch].reshape(n_mb, batch)
-        return jax.lax.scan(one_mb, carry, idxs)
+        return jax.lax.scan(one_mb, carry,
+                            epoch_minibatch_indices(perm, batch))
 
     (params, _), losses = jax.lax.scan(
         one_epoch, (params, opt), jax.random.split(key, cfg.epochs))

@@ -1,0 +1,176 @@
+"""Double-buffered asynchronous GS collect — overlap Algorithm 2 with
+Algorithm 3.
+
+The serial Algorithm-1 round pays the GS collect (Algorithm 2) on the
+critical path of every round. The paper's staleness tolerance (Lemma 2 /
+Theorem 1) licenses training round k's AIPs on influence data gathered
+under the joint policy of round k-1, which is exactly the license to
+pipeline: collect round k+1's datasets WHILE round k's F inner IALS
+steps run (cf. Shacklett et al., *Large Batch Simulation for Deep RL* —
+simulation/learning pipelining; and Suau et al., *IALS* — periodic,
+lag-tolerant AIP retraining).
+
+This module is the executor for that overlap, shared by both DIALS
+driver paths:
+
+* **Double-buffered dataset slots** — ``_current`` (the tagged dataset
+  being consumed this round) and ``_pending`` (the one in flight). Every
+  dataset is a :class:`TaggedDataset` carrying the **collection round**
+  of the joint policy that produced it, so staleness is an auditable
+  number, not a vibe.
+* **Background dispatch**, two modes:
+    - ``"dispatch"`` — the collect program is enqueued from the driver
+      thread and runs under JAX async dispatch; with a ``spare_device``
+      (a device outside the shard mesh) inputs are transferred there
+      first, so the collect executes concurrently with the shard-train
+      program instead of queueing behind it. This is the only safe mode
+      next to donated-buffer programs: the enqueue happens before the
+      trainer donates its carry.
+    - ``"thread"`` — a single worker thread calls the jitted collector
+      and blocks until ready; used by the single-device python-loop
+      path, where it overlaps collect with the F host-dispatched inner
+      steps (no donation hazard: that path never donates buffers).
+* **The dataset-level freshness gate** — :meth:`AsyncCollector.obtain`
+  swaps the double buffer at the round boundary: when the current slot
+  is stale for the new round it harvests the in-flight slot, BLOCKING if
+  the producer hasn't finished (a no-op in the steady state — the
+  collect had a whole round of inner steps to complete). The blocking
+  barrier is deliberate: which dataset trains round r must be a function
+  of the round alone, never of thread scheduling, or per-seed
+  determinism dies. If the harvested (or absent) dataset still exceeds
+  ``max_staleness`` rounds of age, the collector **force-syncs** — a
+  fresh blocking collect under the current policy. ``max_staleness=0``
+  therefore degenerates to the serial schedule — the property the
+  async-vs-serial equivalence tests pin down.
+
+Per-agent staleness (stragglers inside one dataset) is the trainers'
+job, via :func:`repro.distributed.fault.freshness_gate`.
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class TaggedDataset:
+    """A collected dataset plus the outer round of the joint policy that
+    generated it. ``age = current_round - round`` is the staleness the
+    Lemma-2 bound is paid for."""
+    data: Any
+    round: int
+
+
+class _Ready:
+    """Future-like wrapper for dispatch-mode results: the computation is
+    already enqueued on a device, so from the host's point of view it is
+    always 'done' (the arrays resolve whenever the consumer needs them)."""
+
+    def __init__(self, value):
+        self._value = value
+
+    def done(self) -> bool:
+        return True
+
+    def result(self):
+        return self._value
+
+
+class AsyncCollector:
+    """Background executor for the GS collect with one in-flight slot.
+
+    ``collect_fn(params, key) -> dataset`` must be a jitted, functionally
+    pure program (both driver paths pass ``gs.make_collector``'s output).
+    """
+
+    def __init__(self, collect_fn, *, mode: str = "auto",
+                 spare_device=None):
+        if mode == "auto":
+            mode = "dispatch" if spare_device is not None else "thread"
+        if mode not in ("dispatch", "thread"):
+            raise ValueError(f"unknown dispatch mode {mode!r}")
+        self._collect = collect_fn
+        self.mode = mode
+        self.spare_device = spare_device
+        self._executor = (
+            concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="gs-collect")
+            if mode == "thread" else None)
+        self._current: Optional[TaggedDataset] = None
+        self._pending: Optional[Tuple[int, Any]] = None   # (round, future)
+
+    # -- dispatch -----------------------------------------------------------
+    def _run(self, params, key):
+        if self.spare_device is not None:
+            # commit the inputs to the spare device so the jitted collect
+            # executes there, off the trainer's devices (the transfers and
+            # the collect itself all go through async dispatch)
+            params = jax.device_put(params, self.spare_device)
+            key = jax.device_put(key, self.spare_device)
+        return self._collect(params, key)
+
+    def _run_blocking(self, params, key):
+        data = self._run(params, key)
+        jax.block_until_ready(data)
+        return data
+
+    def idle(self) -> bool:
+        """True when no collect is in flight — i.e. submit() is legal.
+        Under the blocking-barrier schedule obtain() always drains the
+        in-flight slot before the driver submits again, so this is a
+        defensive guard on the single-slot contract rather than a state
+        the steady loop ever observes as False."""
+        return self._pending is None
+
+    def submit(self, params, key, round: int) -> None:
+        """Launch the collect for ``round``'s joint policy in the
+        background. One in-flight collect at a time: the double buffer
+        has exactly two slots (consuming + in flight)."""
+        if self._pending is not None:
+            raise RuntimeError("a collect is already in flight — obtain() "
+                               "must harvest it before the next submit()")
+        if self._executor is not None:
+            fut = self._executor.submit(self._run_blocking, params, key)
+        else:
+            fut = _Ready(self._run(params, key))
+        self._pending = (int(round), fut)
+
+    def collect_now(self, params, key, round: int) -> TaggedDataset:
+        """Synchronous (force-sync) collect under the current policy."""
+        return TaggedDataset(self._run(params, key), int(round))
+
+    # -- the freshness gate -------------------------------------------------
+    def obtain(self, current_round: int, params, key, *,
+               max_staleness: int) -> Tuple[TaggedDataset, bool]:
+        """The dataset to train on at ``current_round``, freshness-gated.
+
+        Steady state: the current slot is one round stale, so the buffers
+        swap — blocking on the in-flight collect if the producer hasn't
+        finished (determinism over opportunism: the consumed dataset must
+        depend on the round number, not on thread scheduling). Force-sync
+        path (returns True): the dataset is still older than
+        ``max_staleness`` rounds after the swap — or there is nothing in
+        flight — so a fresh blocking collect runs under the current
+        policy (tag = ``current_round``). The first call always primes
+        the pipeline this way.
+        """
+        if self._pending is not None and (
+                self._current is None or
+                self._current.round < current_round):
+            pending_round, fut = self._pending
+            self._current = TaggedDataset(fut.result(), pending_round)
+            self._pending = None
+        forced = (self._current is None or
+                  current_round - self._current.round > max_staleness)
+        if forced:
+            self._current = self.collect_now(params, key, current_round)
+        return self._current, forced
+
+    def close(self) -> None:
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)
+        self._pending = None
+        self._current = None

@@ -82,3 +82,31 @@ def heartbeat_mask(report_steps: jax.Array, current_step: int,
                    max_staleness: int) -> jax.Array:
     """(N,) last-report step per shard -> {0,1} fresh mask."""
     return (current_step - report_steps <= max_staleness).astype(jnp.float32)
+
+
+def freshness_gate(fresh_mask: jax.Array, report_rounds: jax.Array,
+                   data_round, current_round, max_staleness: int):
+    """The bounded-staleness contract, enforced (Lemma 2 / Theorem 1).
+
+    ``fresh_mask`` (N,) {0,1} says whose AIP update arrived in time this
+    round (1 = apply, 0 = straggler keeps its old predictor).
+    ``report_rounds`` (N,) is the collection round of the newest dataset
+    each agent's predictor was trained on. Stragglers are tolerated only
+    UP TO ``max_staleness`` rounds: an agent whose last report would fall
+    further behind is **force-refreshed** — its mask entry is overridden
+    to 1 so it takes the update trained on the current (``data_round``)
+    dataset instead of silently training on arbitrarily old influence.
+
+    Returns ``(effective_mask, new_report_rounds, forced)`` where
+    ``forced`` (N,) {0,1} marks the agents whose refresh was forced.
+    All ops are elementwise — safe inside a collective-free shard body.
+    """
+    within = heartbeat_mask(report_rounds, current_round, max_staleness)
+    fresh_mask = fresh_mask.astype(jnp.float32)
+    # forced = would have straggled AND already past the bound
+    forced = (1.0 - within) * (1.0 - fresh_mask)
+    effective = jnp.maximum(fresh_mask, forced)
+    new_reports = jnp.where(
+        effective > 0,
+        jnp.asarray(data_round, report_rounds.dtype), report_rounds)
+    return effective, new_reports, forced

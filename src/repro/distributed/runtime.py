@@ -64,6 +64,17 @@ def shard_mesh(n_shards: Optional[int] = None, *,
     return Mesh(np.array(devices[:n_shards]), (SHARD_AXIS,))
 
 
+def spare_device(n_in_use: int):
+    """First device beyond the first ``n_in_use``, or None.
+
+    The sharded runtime puts the ``("shards",)`` mesh on the first
+    ``n_shards`` devices; when the machine has more, the overlapped GS
+    collect (repro.distributed.async_collect) runs on the next one so it
+    never contends with the shard-train program's devices."""
+    devices = jax.devices()
+    return devices[n_in_use] if len(devices) > n_in_use else None
+
+
 def shard_map_nocheck(f, mesh: Mesh, *, in_specs, out_specs):
     """Version-compat ``shard_map`` with replication checking disabled
     (the DIALS per-shard body produces sharded-only outputs). jax moved

@@ -179,14 +179,17 @@ def marl_scenario(name, **overrides):
     return registry.make(env_name, side=side, **overrides)
 
 
-def dials_variant_for(shards):
-    """§DIALS runtime knob: ``DIALSConfig`` overrides for a shard count —
-    the resolver behind every ``--shards N`` CLI flag (benchmarks/run.py,
-    benchmarks/scaling.py, examples/traffic_gs_vs_dials.py). ``None`` =
-    auto path selection (sharded iff >1 device visible), ``1`` = force
-    the unfused python-loop path (F+3 host syncs per round), ``N`` =
-    force an N-shard ``("shards",)`` mesh."""
-    return {"shards": shards}
+def dials_variant_for(shards, async_collect=False):
+    """§DIALS runtime knobs: ``DIALSConfig`` overrides — the resolver
+    behind every ``--shards N`` / ``--async-collect`` CLI flag
+    (benchmarks/run.py, benchmarks/scaling.py,
+    examples/traffic_gs_vs_dials.py). ``shards``: ``None`` = auto path
+    selection (sharded iff >1 device visible), ``1`` = force the unfused
+    python-loop path (F+3 host syncs per round), ``N`` = force an
+    N-shard ``("shards",)`` mesh. ``async_collect`` overlaps round k+1's
+    GS collect with round k's inner steps (one-round dataset lag,
+    bounded by ``max_aip_staleness``)."""
+    return {"shards": shards, "async_collect": async_collect}
 
 
 VARIANTS = {

@@ -14,7 +14,14 @@ Asserts, on the smallest traffic config:
    sits near zero, so ulp noise lawfully becomes O(lr) parameter noise;
    anything beyond a few·lr means a real sharding bug;
 4. the per-shard round body contains no cross-shard collectives, on the
-   real 4-device mesh.
+   real 4-device mesh — for BOTH the fused round and the split
+   shard-train program the async-collect driver runs;
+5. the async-collect contract on the real mesh: the overlapped collect
+   dispatches onto the spare device (4 shards < 8 devices), round 0
+   primes like the serial round, the steady state carries the documented
+   one-round dataset lag, ``max_aip_staleness=0`` force-syncs every
+   round and reproduces the sync sharded run, and the async run is
+   deterministic per seed.
 
 Prints MULTIDEVICE-OK on success.
 """
@@ -85,12 +92,53 @@ def main():
         np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
                                    atol=5e-2, err_msg="gs_return")
 
-    # (4) zero cross-shard collectives between AIP refreshes
+    # (4) zero cross-shard collectives between AIP refreshes — fused
+    # round AND the split shard-train program of the async driver
     jx = sharded._sharded.inner_jaxpr()
     runtime.assert_no_collectives(jx, what="per-shard round body")
+    runtime.assert_no_collectives(sharded._sharded.split_inner_jaxpr(),
+                                  what="shard-train program")
 
     # the sharded state really lived on the 4-shard mesh
     assert sharded._sharded.n_shards == 4
+
+    # (5) async-collect contract on the real mesh
+    assert runtime.spare_device(4) == jax.devices()[4]
+    asy = build_trainer(async_collect=True)
+    s_asy, h_asy = asy.run(jax.random.PRNGKey(0))
+    assert asy._sharded.n_shards == 4
+    assert [r["data_round"] for r in h_asy] == [0, 0], h_asy
+    assert [r["forced_sync"] for r in h_asy] == [True, False], h_asy
+    # round 0 primes with the serial round-0 collect: records agree with
+    # the sync sharded run's round 0
+    np.testing.assert_allclose(h_asy[0]["gs_return"],
+                               h_shard[0]["gs_return"], atol=1e-5,
+                               err_msg="async prime round")
+    np.testing.assert_allclose(h_asy[0]["aip_ce_after"],
+                               h_shard[0]["aip_ce_after"], atol=1e-5,
+                               err_msg="async prime ce")
+    # determinism of the overlapped schedule
+    _, h_asy2 = asy.run(jax.random.PRNGKey(0))
+    assert [r["gs_return"] for r in h_asy] == \
+        [r["gs_return"] for r in h_asy2], "async determinism"
+
+    # staleness bound 0: force-sync every round == the sync sharded run
+    b0 = build_trainer(async_collect=True, max_aip_staleness=0)
+    s_b0, h_b0 = b0.run(jax.random.PRNGKey(0))
+    assert all(r["forced_sync"] for r in h_b0)
+    for r1, r2 in zip(h_shard, h_b0):
+        np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
+                                   atol=1e-5, err_msg="b0 == sync")
+    tree_close(s_shard["aips"], s_b0["aips"], 1e-5,
+               "AIP params (async staleness-0 vs sync)")
+
+    # the freshness gate force-refreshes a permanent straggler in the
+    # sharded body: bound 1, 2 rounds -> round 1 forces agent 0
+    strag = build_trainer(max_aip_staleness=1)
+    mask = np.array([0.0, 1.0, 1.0, 1.0], np.float32)
+    _, h_strag = strag.run(jax.random.PRNGKey(0),
+                           straggler_mask=lambda rnd: mask)
+    assert [r["stale_forced"] for r in h_strag] == [0, 1], h_strag
 
     print("MULTIDEVICE-OK")
     return 0

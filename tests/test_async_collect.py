@@ -1,0 +1,259 @@
+"""Async / overlapped GS collect (repro.distributed.async_collect) and the
+now-real staleness machinery (DIALSConfig.max_aip_staleness +
+fault.freshness_gate) through the public DIALSTrainer.run API.
+
+The async schedule's contract, pinned by construction:
+
+* round 0 primes the double buffer with a blocking collect — identical to
+  the serial round 0;
+* steady state trains round k on the dataset collected under round k-1's
+  entry policy (``data_round == k-1``: the documented one-round lag that
+  Lemma 2 licenses);
+* ``max_aip_staleness=0`` leaves no lag to tolerate, so the force-sync
+  path fires every round and the async run degenerates to the serial
+  schedule — on the single-device loop path this is BITWISE equality;
+* the ``untrained`` ablation never consumes the dataset for training, so
+  async and serial histories must agree exactly on returns/rewards even
+  with the lag (only the CE metrics see the lagged data).
+
+The same contract on a real multi-device mesh runs in
+``tests/_multidevice_check.py`` (CI's runtime-multidevice job).
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dials, influence
+from repro.distributed import async_collect
+from repro.envs import registry
+from repro.marl import policy as policy_mod, ppo as ppo_mod
+
+
+def build_trainer(**kw):
+    env_mod, cfg = registry.make("traffic", horizon=16)
+    info = cfg.info()
+    pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                 n_actions=info.n_actions, hidden=(16,))
+    ac = influence.AIPConfig(in_dim=info.alsh_dim,
+                             n_sources=info.n_influence, kind="fnn",
+                             hidden=(16,), epochs=2, batch=16)
+    ppo_cfg = ppo_mod.PPOConfig(epochs=1, minibatches=2)
+    kw.setdefault("shards", 1)      # loop path unless a test overrides
+    kw.setdefault("outer_rounds", 3)
+    dcfg = dials.DIALSConfig(
+        aip_refresh=2, collect_envs=2, collect_steps=16,
+        n_envs=2, rollout_steps=8, eval_episodes=2, **kw)
+    return dials.DIALSTrainer(env_mod, cfg, pc, ac, ppo_cfg, dcfg)
+
+
+# ---------------------------------------------------------------------------
+# AsyncCollector mechanics (thread mode, controllable fake collector)
+# ---------------------------------------------------------------------------
+class _FakeCollect:
+    """Deterministic fake: returns (params, key) echo + call count; can be
+    held back with an event to simulate a slow background collect."""
+
+    def __init__(self):
+        self.calls = 0
+        self.release = threading.Event()
+        self.release.set()
+
+    def __call__(self, params, key):
+        self.release.wait(timeout=30)
+        self.calls += 1
+        return {"params": params, "key": key}
+
+
+def test_collector_primes_then_pipelines():
+    fake = _FakeCollect()
+    c = async_collect.AsyncCollector(fake, mode="thread")
+    d0, forced = c.obtain(0, 10.0, 0, max_staleness=2)
+    assert forced and d0.round == 0 and fake.calls == 1     # prime
+    c.submit(11.0, 1, round=0)
+    d1, forced = c.obtain(1, 11.0, 1, max_staleness=2)
+    assert d1.round == 0 and d1.data["params"] == 11.0
+    assert not forced                                       # harvested async
+    assert c.idle()
+    c.close()
+
+
+def test_collector_barrier_blocks_until_inflight_slot_ready():
+    """obtain() at a round the current slot is stale for BLOCKS on the
+    in-flight collect instead of opportunistically reusing older data:
+    which dataset trains round r is a function of the round alone, never
+    of thread scheduling (per-seed determinism)."""
+    fake = _FakeCollect()
+    c = async_collect.AsyncCollector(fake, mode="thread")
+    c.obtain(0, 0.0, 0, max_staleness=2)                    # prime, tag 0
+    fake.release.clear()                                    # stall the bg
+    c.submit(1.0, 1, round=0)
+    out = {}
+    t = threading.Thread(target=lambda: out.update(zip(
+        ("d", "forced"), c.obtain(1, 1.0, 1, max_staleness=2))))
+    t.start()
+    t.join(timeout=0.5)
+    assert t.is_alive(), "obtain() must wait for the in-flight collect"
+    fake.release.set()
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert out["d"].round == 0 and not out["forced"]
+    assert out["d"].data["params"] == 1.0                   # the bg result
+    assert fake.calls == 2 and c.idle()
+    c.close()
+
+
+def test_collector_force_syncs_when_harvest_still_too_old():
+    """A harvested slot older than the bound (here: the bound is 0, so
+    the one-round lag itself is intolerable) triggers a fresh blocking
+    collect tagged with the current round."""
+    fake = _FakeCollect()
+    c = async_collect.AsyncCollector(fake, mode="thread")
+    c.obtain(0, 0.0, 0, max_staleness=0)                    # prime, tag 0
+    c.submit(1.0, 1, round=0)
+    d, forced = c.obtain(1, 1.0, 1, max_staleness=0)
+    assert forced and d.round == 1 and d.data["params"] == 1.0
+    assert c.idle() and fake.calls == 3     # prime + discarded bg + sync
+    c.close()
+
+
+def test_collector_single_inflight_slot():
+    fake = _FakeCollect()
+    c = async_collect.AsyncCollector(fake, mode="thread")
+    c.submit(0.0, 0, round=0)
+    with pytest.raises(RuntimeError, match="in flight"):
+        c.submit(1.0, 1, round=1)
+    c.close()
+
+
+# ---------------------------------------------------------------------------
+# same-seed equivalence through the public DIALSTrainer.run API (loop path)
+# ---------------------------------------------------------------------------
+def test_async_staleness_zero_is_bitwise_serial():
+    """max_aip_staleness=0 forbids any lag: every round force-syncs with
+    the serial round's own collect key and policy, so the async run IS
+    the serial run, bit for bit."""
+    s1, h1 = build_trainer().run(jax.random.PRNGKey(0))
+    s2, h2 = build_trainer(async_collect=True,
+                           max_aip_staleness=0).run(jax.random.PRNGKey(0))
+    assert [r["gs_return"] for r in h1] == [r["gs_return"] for r in h2]
+    assert [r["aip_ce_after"] for r in h1] == \
+        [r["aip_ce_after"] for r in h2]
+    assert all(r["forced_sync"] for r in h2)
+    assert [r["data_round"] for r in h2] == [r["round"] for r in h2]
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        {"p": s1["ials"]["params"], "a": s1["aips"]},
+        {"p": s2["ials"]["params"], "a": s2["aips"]})
+
+
+def test_async_steady_state_has_one_round_lag():
+    """Happy path: round 0 primes (forced, tag 0), round k>=1 trains on
+    the tag k-1 dataset that was collected during round k-1."""
+    _, hist = build_trainer(async_collect=True).run(jax.random.PRNGKey(0))
+    assert [r["data_round"] for r in hist] == [0, 0, 1]
+    assert [r["forced_sync"] for r in hist] == [True, False, False]
+    # serial history for reference: tags follow the round index
+    _, serial = build_trainer().run(jax.random.PRNGKey(0))
+    assert [r["data_round"] for r in serial] == [0, 1, 2]
+    # round 0 primes with the serial round-0 collect -> identical record
+    assert hist[0]["gs_return"] == serial[0]["gs_return"]
+    assert hist[0]["aip_ce_after"] == serial[0]["aip_ce_after"]
+
+
+def test_async_untrained_histories_match_serial_exactly():
+    """The untrained ablation never trains on the dataset, so the lag is
+    invisible to the policy stream: returns/rewards must match the serial
+    run exactly; only the CE metrics see the lagged datasets."""
+    _, h1 = build_trainer(untrained=True).run(jax.random.PRNGKey(0))
+    _, h2 = build_trainer(untrained=True,
+                          async_collect=True).run(jax.random.PRNGKey(0))
+    assert [r["gs_return"] for r in h1] == [r["gs_return"] for r in h2]
+    assert [r["ials_reward"] for r in h1] == [r["ials_reward"] for r in h2]
+
+
+def test_async_run_is_deterministic():
+    _, h1 = build_trainer(async_collect=True).run(jax.random.PRNGKey(0))
+    _, h2 = build_trainer(async_collect=True).run(jax.random.PRNGKey(0))
+    assert [r["gs_return"] for r in h1] == [r["gs_return"] for r in h2]
+    assert [r["data_round"] for r in h1] == [r["data_round"] for r in h2]
+
+
+# ---------------------------------------------------------------------------
+# the staleness bound is ENFORCED (satellite: dead machinery made real)
+# ---------------------------------------------------------------------------
+def test_straggler_force_refreshed_past_staleness_bound():
+    """An agent whose straggler_mask never clears must still be refreshed
+    once its predictor's data is max_aip_staleness rounds old — before
+    this gate existed, a permanent straggler trained on arbitrarily old
+    influence forever."""
+    trainer = build_trainer(outer_rounds=4, max_aip_staleness=1)
+    state0 = trainer.init(jax.random.PRNGKey(0))
+    # agent 0 never reports in time; the rest always do
+    mask = np.array([0.0, 1.0, 1.0, 1.0], np.float32)
+    state, hist = trainer.run(jax.random.PRNGKey(0),
+                              straggler_mask=lambda rnd: mask)
+    # rounds 0 (report -1, age 1 <= 1): tolerated; round 1 (age 2 > 1):
+    # forced; round 2 tolerated again; round 3 forced.
+    assert [r["stale_forced"] for r in hist] == [0, 1, 0, 1]
+    # the forced refresh really replaced agent 0's predictor
+    leaf0 = jax.tree.leaves(state0["aips"])[0][0]
+    leaf = jax.tree.leaves(state["aips"])[0][0]
+    assert not np.allclose(np.asarray(leaf0), np.asarray(leaf))
+
+
+def test_straggler_within_bound_keeps_old_aips():
+    """Inside the bound nothing is forced: with the default bound (2) and
+    2 rounds, a permanent straggler's AIPs never change (the seed
+    behavior, now an explicit consequence of the gate)."""
+    trainer = build_trainer(outer_rounds=2)
+    state0 = trainer.init(jax.random.PRNGKey(0))
+    state, hist = trainer.run(
+        jax.random.PRNGKey(0),
+        straggler_mask=lambda rnd: np.zeros(4, np.float32))
+    assert [r["stale_forced"] for r in hist] == [0, 0]
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(a, b, atol=0),
+                 state0["aips"], state["aips"])
+
+
+# ---------------------------------------------------------------------------
+# sharded path (1-shard mesh runs on the single real CPU device)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_sharded_async_staleness_zero_matches_serial():
+    """The split collect/shard-train programs at bound 0 reproduce the
+    serial loop path (same math; split-vs-fused XLA fusion differences
+    stay at ulp scale)."""
+    s1, h1 = build_trainer().run(jax.random.PRNGKey(0))
+    tr = build_trainer(async_collect=True, max_aip_staleness=0)
+    state = tr.restore_or_init(jax.random.PRNGKey(0))
+    s2, h2 = tr._run_sharded(state, 1, log=None, straggler_mask=None)
+    assert all(r["forced_sync"] for r in h2)
+    for r1, r2 in zip(h1, h2):
+        np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
+                                   atol=1e-5)
+        assert r1["data_round"] == r2["data_round"]
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b), atol=1e-5),
+        {"p": s1["ials"]["params"], "a": s1["aips"]},
+        {"p": s2["ials"]["params"], "a": s2["aips"]})
+
+
+@pytest.mark.slow
+def test_sharded_async_one_round_lag_and_loop_agreement():
+    """Sharded async vs loop async: same schedule, same tags, same
+    numbers (to the usual cross-path tolerance)."""
+    _, h_loop = build_trainer(async_collect=True).run(jax.random.PRNGKey(0))
+    tr = build_trainer(async_collect=True)
+    state = tr.restore_or_init(jax.random.PRNGKey(0))
+    _, h_shard = tr._run_sharded(state, 1, log=None, straggler_mask=None)
+    assert [r["data_round"] for r in h_shard] == \
+        [r["data_round"] for r in h_loop] == [0, 0, 1]
+    for r1, r2 in zip(h_loop, h_shard):
+        np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
+                                   atol=1e-5)
+        np.testing.assert_allclose(r1["aip_ce_after"], r2["aip_ce_after"],
+                                   atol=1e-5)

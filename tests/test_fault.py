@@ -63,6 +63,41 @@ def test_heartbeat_mask():
     np.testing.assert_array_equal(np.asarray(mask), [1.0, 1.0, 0.0, 1.0])
 
 
+def test_freshness_gate_forces_refresh_past_bound():
+    """A straggler (mask 0) keeps its old predictor only while its data
+    is within max_staleness rounds; past the bound the gate overrides the
+    mask (forced refresh) and the report round advances."""
+    reports = jnp.array([4, 4, 1, 1], jnp.int32)
+    mask = jnp.array([1.0, 0.0, 1.0, 0.0])
+    eff, new_reports, forced = fault.freshness_gate(
+        mask, reports, data_round=5, current_round=5, max_staleness=2)
+    # agent 1: stale by 1 round only -> straggle allowed
+    # agent 3: stale by 4 rounds -> forced through
+    np.testing.assert_array_equal(np.asarray(eff), [1.0, 0.0, 1.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(forced), [0.0, 0.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(new_reports), [5, 4, 5, 5])
+
+
+def test_freshness_gate_zero_bound_forces_everyone():
+    reports = jnp.full((3,), -1, jnp.int32)
+    eff, new_reports, forced = fault.freshness_gate(
+        jnp.zeros((3,)), reports, data_round=0, current_round=0,
+        max_staleness=0)
+    np.testing.assert_array_equal(np.asarray(eff), [1.0, 1.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(new_reports), [0, 0, 0])
+
+
+def test_freshness_gate_jits_and_traces_round():
+    """The gate runs inside the sharded round program: must accept traced
+    round scalars under jit."""
+    f = jax.jit(lambda m, r, d, c: fault.freshness_gate(m, r, d, c, 2))
+    eff, rep, forced = f(jnp.zeros((2,)), jnp.zeros((2,), jnp.int32),
+                         jnp.asarray(3), jnp.asarray(3))
+    np.testing.assert_array_equal(np.asarray(eff), [1.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(rep), [3, 3])
+    np.testing.assert_array_equal(np.asarray(forced), [1.0, 1.0])
+
+
 # ---------------------------------------------------------------------------
 # elastic resharding (host mesh scale)
 # ---------------------------------------------------------------------------

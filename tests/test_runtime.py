@@ -139,9 +139,10 @@ def _tiny_runner(n_shards=1):
 
 def test_inner_round_body_is_collective_free():
     """The paper's runtime-stays-constant claim: between AIP refreshes the
-    per-shard program (AIP train + F inner IALS+PPO steps) communicates
-    with nobody. The audited jaxpr is EXTRACTED from the traced round
-    program (the round's one shard_map eqn), not re-traced separately."""
+    per-shard program (AIP train + staleness gate + F inner IALS+PPO
+    steps) communicates with nobody. The audited jaxpr is EXTRACTED from
+    the traced round program (the round's one shard_map eqn), not
+    re-traced separately."""
     runner = _tiny_runner(n_shards=1)
     jx = runner.inner_jaxpr()
     runtime.assert_no_collectives(jx, what="per-shard round body")
@@ -149,6 +150,33 @@ def test_inner_round_body_is_collective_free():
     # program really contains exactly one shard_map
     assert {"scan", "dot_general"} <= runtime.jaxpr_primitives(jx)
     assert len(runtime.find_shard_map_jaxprs(runner.round_jaxpr())) == 1
+
+
+def test_split_shard_train_program_is_collective_free():
+    """The async-collect driver runs the SPLIT round: a collect program
+    plus a shard-train program. The shard-train half (the one whose
+    shard_map body carries the freshness gate) must stay collective-free,
+    and the collect half must not touch the mesh at all (no shard_map —
+    it can run on a spare device)."""
+    runner = _tiny_runner(n_shards=1)
+    jx = runner.split_inner_jaxpr()
+    runtime.assert_no_collectives(jx, what="shard-train program")
+    assert {"scan", "dot_general"} <= runtime.jaxpr_primitives(jx)
+
+    params = jax.eval_shape(
+        lambda k: runner.ials_init(k)["params"],
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    collect_jx = jax.make_jaxpr(runner.collect)(
+        params, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    assert runtime.find_shard_map_jaxprs(collect_jx) == []
+    runtime.assert_no_collectives(collect_jx, what="collect program")
+
+
+def test_spare_device_helper():
+    n_dev = len(jax.devices())
+    assert runtime.spare_device(n_dev) is None
+    if n_dev > 1:
+        assert runtime.spare_device(1) == jax.devices()[1]
 
 
 @pytest.mark.slow
