@@ -15,13 +15,16 @@ size). ``collective_bytes`` is parsed from the post-SPMD HLO by
 from __future__ import annotations
 
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip (TPU v5e)
+PEAK_FLOPS_FP32 = PEAK_FLOPS / 2   # fp32 programs run at half the bf16 MXU rate
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link (~per chip, 1 link claimed)
 
 
 def terms(*, flops: float, bytes_accessed: float, collective_bytes: float,
-          n_devices: int) -> dict:
-    compute_s = flops / (n_devices * PEAK_FLOPS)
+          n_devices: int, peak_flops: float = PEAK_FLOPS) -> dict:
+    """``peak_flops`` defaults to the bf16 peak; pass ``PEAK_FLOPS_FP32``
+    when the FLOP count describes an fp32 program (the MARL kernels)."""
+    compute_s = flops / (n_devices * peak_flops)
     memory_s = bytes_accessed / (n_devices * HBM_BW)
     collective_s = collective_bytes / (n_devices * ICI_BW)
     bottleneck = max(

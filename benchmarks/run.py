@@ -66,7 +66,8 @@ def _setup(env_name, n_side, *, horizon=32):
     return env_mod, env_cfg, info, pc, ac, ppo_cfg
 
 
-def fig3_learning(fast: bool = False, shards=None, async_collect=False):
+def fig3_learning(fast: bool = False, shards=None, async_collect=False,
+                  use_kernels="auto"):
     """GS vs DIALS vs untrained-DIALS mean return (4-agent envs)."""
     from repro.core import dials
     from repro.launch import variants
@@ -82,6 +83,7 @@ def fig3_learning(fast: bool = False, shards=None, async_collect=False):
                 outer_rounds=rounds, aip_refresh=inner, collect_envs=8,
                 collect_steps=64, n_envs=8, rollout_steps=16,
                 untrained=untrained, eval_episodes=8,
+                use_kernels=use_kernels,
                 **variants.dials_variant_for(shards, async_collect))
             tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
             t0 = time.time()
@@ -158,7 +160,8 @@ def fig3_scalability(fast: bool = False):
     return rows
 
 
-def fig4_f_sweep(fast: bool = False, shards=None, async_collect=False):
+def fig4_f_sweep(fast: bool = False, shards=None, async_collect=False,
+                 use_kernels="auto"):
     """AIP training frequency F: returns + influence CE (paper Fig. 4)."""
     from repro.core import dials
     from repro.launch import variants
@@ -171,6 +174,7 @@ def fig4_f_sweep(fast: bool = False, shards=None, async_collect=False):
         cfg = dials.DIALSConfig(
             outer_rounds=rounds, aip_refresh=refresh, collect_envs=8,
             collect_steps=64, n_envs=8, rollout_steps=16, eval_episodes=8,
+            use_kernels=use_kernels,
             **variants.dials_variant_for(shards, async_collect))
         tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
         t0 = time.time()
@@ -265,6 +269,11 @@ def main() -> None:
                     help="overlap each round's GS collect with the "
                          "previous round's inner steps (one-round "
                          "dataset lag, bounded by max_aip_staleness)")
+    ap.add_argument("--use-kernels", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="Pallas fast paths for the AIP/policy GRU and "
+                         "GAE (auto = kernel on TPU, oracle elsewhere; "
+                         "on = interpret-mode kernels off-TPU)")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,metric,value")
@@ -275,6 +284,8 @@ def main() -> None:
             kw["shards"] = args.shards
         if "async_collect" in inspect.signature(fn).parameters:
             kw["async_collect"] = args.async_collect
+        if "use_kernels" in inspect.signature(fn).parameters:
+            kw["use_kernels"] = args.use_kernels
         fn(**kw)
 
 

@@ -82,6 +82,20 @@ class DIALSConfig:
     # (sharded whenever >1 device is visible), <=1 = force the
     # single-device path, N = force an N-shard ("shards",) mesh.
     shards: Optional[int] = None
+    # Pallas fast paths for the inner-loop hot spots (AIP GRU, policy
+    # GRU, GAE). "auto" defers to the sub-configs (which themselves
+    # default to auto = kernel on TPU, oracle elsewhere); an explicit
+    # "on"/"off" here overrides all three (repro.kernels.dispatch).
+    use_kernels: str = "auto"
+
+
+def apply_kernel_mode(policy_cfg, aip_cfg, ppo_cfg, mode: str):
+    """Propagate a driver-level ``use_kernels`` onto the three
+    sub-configs that own a hot spot. Idempotent; "auto" is a no-op."""
+    from repro.kernels import dispatch
+    return (dispatch.override_mode(policy_cfg, mode),
+            dispatch.override_mode(aip_cfg, mode),
+            dispatch.override_mode(ppo_cfg, mode))
 
 
 def holdout_sequences(cfg: DIALSConfig) -> int:
@@ -98,6 +112,8 @@ class DIALSTrainer:
                  aip_cfg: influence.AIPConfig, ppo_cfg: ppo_mod.PPOConfig,
                  cfg: DIALSConfig):
         self.env_mod, self.env_cfg = env_mod, env_cfg
+        policy_cfg, aip_cfg, ppo_cfg = apply_kernel_mode(
+            policy_cfg, aip_cfg, ppo_cfg, cfg.use_kernels)
         self.policy_cfg, self.aip_cfg = policy_cfg, aip_cfg
         self.ppo_cfg, self.cfg = ppo_cfg, cfg
         self.info = env_cfg.info()

@@ -60,6 +60,9 @@ class ShardedDIALSRunner:
     def __init__(self, env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg, cfg,
                  *, mesh=None, n_shards=None):
         self.env_mod, self.env_cfg, self.cfg = env_mod, env_cfg, cfg
+        # idempotent: a DIALSTrainer-built runner arrives pre-overridden
+        policy_cfg, aip_cfg, ppo_cfg = dials_mod.apply_kernel_mode(
+            policy_cfg, aip_cfg, ppo_cfg, cfg.use_kernels)
         self.aip_cfg = aip_cfg
         self.info = env_cfg.info()
         self.n_eval_seqs = dials_mod.holdout_sequences(cfg)

@@ -103,7 +103,8 @@ def make_agent_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
         et = lambda x: jnp.swapaxes(x, 0, 1)   # (T, E, ...) -> (E, T, ...)
         adv, ret = gae_mod.gae(et(traj["reward"]), et(traj["value"]),
                                et(traj["done"]), last_value,
-                               gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
+                               gamma=ppo_cfg.gamma, lam=ppo_cfg.lam,
+                               use_kernels=ppo_cfg.use_kernels)
         batch = {
             "obs": et(traj["obs"]),
             "actions": et(traj["action"]).astype(jnp.int32),

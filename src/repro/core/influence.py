@@ -34,6 +34,9 @@ class AIPConfig:
     lr: float = 1e-4
     epochs: int = 100
     batch: int = 128
+    use_kernels: str = "auto"   # Pallas GRU scan in aip_sequence/train_aip:
+    #                             auto (kernel on TPU) | on | off
+    eval_chunk: int = 64        # eval_ce sequence-chunk size (memory cap)
 
 
 def _dense_init(key, din, dout):
@@ -89,7 +92,8 @@ def aip_sequence(params, feats, h0, resets, cfg: AIPConfig):
     at episode boundaries."""
     x = _trunk(params, feats)
     if cfg.kind == "gru":
-        hs, _ = gru_mod.gru_sequence(params["gru"], x, h0, reset_mask=resets)
+        hs, _ = gru_mod.gru_sequence(params["gru"], x, h0, reset_mask=resets,
+                                     use_kernels=cfg.use_kernels)
         x = hs
     return _dense(params["heads"], x)
 
@@ -100,13 +104,17 @@ def sample_sources(key, logits):
         .astype(jnp.float32)
 
 
+def _bce_elementwise(logits, targets):
+    """Per-element stable sigmoid cross-entropy (..., M)."""
+    return jnp.maximum(logits, 0) - logits * targets + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
 def bce_loss(params, feats, targets, resets, cfg: AIPConfig):
     """Expected cross-entropy (Section 3.2). feats (B,T,F), targets (B,T,M)."""
     h0 = initial_hidden(cfg, feats.shape[0])
     logits = aip_sequence(params, feats, h0, resets, cfg)
-    ce = jnp.maximum(logits, 0) - logits * targets + \
-        jnp.log1p(jnp.exp(-jnp.abs(logits)))
-    return ce.mean()
+    return _bce_elementwise(logits, targets).mean()
 
 
 def epoch_minibatch_indices(perm, batch: int):
@@ -155,6 +163,36 @@ def train_aip(params, dataset, key, cfg: AIPConfig):
 
 
 def eval_ce(params, dataset, cfg: AIPConfig):
-    """CE of the AIP on held-out GS trajectories (the paper's Fig. 4 metric)."""
-    return bce_loss(params, dataset["feats"], dataset["u"],
-                    dataset["resets"], cfg)
+    """CE of the AIP on held-out GS trajectories (the paper's Fig. 4 metric).
+
+    Evaluated in fixed-size sequence chunks (``cfg.eval_chunk``) rather
+    than one full-dataset batch: the all-at-once forward materialises
+    (S, T, hidden) activations, a memory spike that scales with
+    collect size × T. Small datasets (S ≤ chunk) take the single-batch
+    path, which is exactly the old behaviour.
+    """
+    feats, u, resets = dataset["feats"], dataset["u"], dataset["resets"]
+    n_seq, t_len = feats.shape[0], feats.shape[1]
+    chunk = max(1, cfg.eval_chunk)
+    if n_seq <= chunk:
+        return bce_loss(params, feats, u, resets, cfg)
+    n_chunks = -(-n_seq // chunk)
+    pad = n_chunks * chunk - n_seq
+
+    def chunked(x):
+        if pad:
+            x = jnp.concatenate(
+                [x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        return x.reshape((n_chunks, chunk) + x.shape[1:])
+
+    valid = chunked(jnp.ones((n_seq,), jnp.float32))      # (C, chunk)
+
+    def one_chunk(args):
+        f, uu, rr, w = args
+        logits = aip_sequence(params, f, initial_hidden(cfg, chunk), rr, cfg)
+        ce = _bce_elementwise(logits, uu)                 # (chunk, T, M)
+        return (ce.sum(axis=(1, 2)) * w).sum()
+
+    sums = jax.lax.map(one_chunk,
+                       (chunked(feats), chunked(u), chunked(resets), valid))
+    return sums.sum() / (n_seq * t_len * u.shape[-1])

@@ -12,7 +12,15 @@ Each kernel package has three files:
 | gru             | AIP/policy GRU recurrence (fused gates per step)       |
 | gae             | GAE-lambda reverse scan over rollouts                  |
 
+``gru`` and ``gae`` are TRAINABLE (``jax.custom_vjp`` with Pallas
+backward-scan kernels) and sit on the DIALS hot path: the
+``use_kernels: auto|on|off`` knob on ``AIPConfig`` / ``PolicyConfig`` /
+``PPOConfig`` (driven globally by ``DIALSConfig``) routes
+``aip_sequence``/``train_aip``, ``policy_sequence``, and the inner-step
+GAE through them — resolved once per call site by
+``repro.kernels.dispatch``.
+
 On CPU (this container) the kernels execute with ``interpret=True``; the
 BlockSpecs encode the intended TPU VMEM tiling (MXU-aligned 128-multiples).
 """
-from repro.kernels import flash_attention, gae, gru, ssd  # noqa: F401
+from repro.kernels import dispatch, flash_attention, gae, gru, ssd  # noqa: F401

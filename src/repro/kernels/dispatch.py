@@ -1,0 +1,79 @@
+"""Unified kernel dispatch — the one place ``use_kernels`` is resolved.
+
+Every MARL hot spot (AIP GRU, policy GRU, GAE reverse scan) carries a
+``use_kernels: "auto" | "on" | "off"`` knob on its config
+(``AIPConfig`` / ``PolicyConfig`` / ``PPOConfig``, driven globally by
+``DIALSConfig``). This module turns that string into a concrete
+:class:`KernelDecision` exactly once per call site, at trace time:
+
+* ``"off"``  — pure-jnp oracle (``repro.nn.gru`` / ``repro.marl.gae``).
+* ``"on"``   — Pallas kernel, compiled on TPU, **interpret mode**
+  elsewhere (CPU CI runs the real kernel logic through the Pallas
+  interpreter; slow but numerically the kernel).
+* ``"auto"`` — kernel on TPU, oracle elsewhere. The production default:
+  "jax_pallas means Pallas on the hot path" without making CPU runs pay
+  interpreter overhead.
+
+Resolving here — rather than per kernel call with an ``interpret=None``
+default — keeps ``interpret`` out of jit static arguments: the op
+wrappers receive a concrete bool and each (kernel, interpret) pair is
+built once (``functools.lru_cache`` in the kernel modules), so flipping
+call sites between ``None``/``True`` can no longer trigger redundant
+recompiles of identical programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+
+MODES = ("auto", "on", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDecision:
+    """Resolved dispatch: route to Pallas? and under the interpreter?"""
+    use: bool            # True -> Pallas kernel, False -> jnp oracle
+    interpret: bool      # Pallas interpret mode (any non-TPU backend)
+
+
+def resolve(mode: Union[str, KernelDecision] = "auto", *,
+            backend: Optional[str] = None) -> KernelDecision:
+    """Resolve a ``use_kernels`` mode against the (default) backend.
+
+    Accepts an already-resolved :class:`KernelDecision` unchanged so
+    callers can pre-resolve once and thread the decision through.
+    """
+    if isinstance(mode, KernelDecision):
+        return mode
+    if mode not in MODES:
+        raise ValueError(
+            f"use_kernels must be one of {MODES}, got {mode!r}")
+    if backend is None:
+        backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    use = on_tpu if mode == "auto" else (mode == "on")
+    return KernelDecision(use=use, interpret=not on_tpu)
+
+
+def interpret_default(backend: Optional[str] = None) -> bool:
+    """The interpret flag a kernel op should use when called directly
+    without a resolved decision (tests, benchmarks)."""
+    return resolve("on", backend=backend).interpret
+
+
+def override_mode(cfg, mode: str):
+    """Propagate a driver-level ``use_kernels`` onto a sub-config.
+
+    ``"auto"`` (the driver default) defers to whatever the sub-config
+    says; an explicit ``"on"``/``"off"`` wins. Returns ``cfg`` itself
+    when nothing changes so config identity (jit static hashing) is
+    preserved on the common path.
+    """
+    if mode not in MODES:
+        raise ValueError(
+            f"use_kernels must be one of {MODES}, got {mode!r}")
+    if mode == "auto" or cfg.use_kernels == mode:
+        return cfg
+    return dataclasses.replace(cfg, use_kernels=mode)

@@ -1,11 +1,18 @@
-"""GAE-λ reverse-scan Pallas kernel.
+"""GAE-λ reverse-scan Pallas kernels.
 
-The advantage recursion is strictly sequential in t but embarrassingly
-parallel over the (agents × envs) batch — on TPU that maps to a grid over
-T (reverse-indexed through the BlockSpec index map, so block t reads slice
-T-1-t) with the carry in VMEM scratch and the batch laid out on the
-8×128 VPU lanes. One fused multiply-add per step instead of a scan of
-tiny XLA kernels.
+Forward: the advantage recursion is strictly sequential in t but
+embarrassingly parallel over the (agents × envs) batch — on TPU that
+maps to a grid over T (reverse-indexed through the BlockSpec index map,
+so block t reads slice T-1-t) with the carry in VMEM scratch and the
+batch laid out on the 8×128 VPU lanes. One fused multiply-add per step
+instead of a scan of tiny XLA kernels.
+
+Backward: the recursion is LINEAR in (r, v, nv), so the adjoint is the
+transposed recurrence — a FORWARD-time scan of the advantage cotangent
+ā_t = g_t + γλ(1-d_{t-1})·ā_{t-1}, from which every input cotangent is
+elementwise: dr = ā, dv = -ā, dnv = γ(1-d)·ā. :func:`gae_reverse_scan`
+carries a ``jax.custom_vjp`` running that adjoint as a second Pallas
+kernel (no residuals beyond the dones mask).
 """
 from __future__ import annotations
 
@@ -17,7 +24,6 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
-
 
 
 def _gae_kernel(r_ref, v_ref, nv_ref, d_ref, adv_ref, carry_ref, *,
@@ -36,9 +42,8 @@ def _gae_kernel(r_ref, v_ref, nv_ref, d_ref, adv_ref, carry_ref, *,
     adv_ref[0] = adv
 
 
-def gae_reverse_scan(rewards, values, next_values, dones, *,
-                     gamma: float, lam: float, interpret: bool = True):
-    """All inputs (T, B) fp32, time-major. Returns advantages (T, B)."""
+def _gae_forward(rewards, values, next_values, dones, *,
+                 gamma: float, lam: float, interpret: bool):
     t, b = rewards.shape
     rev = lambda ti: (t - 1 - ti, 0)       # reverse time through index map
     spec = pl.BlockSpec((1, b), rev)
@@ -53,3 +58,67 @@ def gae_reverse_scan(rewards, values, next_values, dones, *,
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(rewards, values, next_values, dones)
+
+
+def _gae_bwd_kernel(g_ref, d_ref, dr_ref, dnv_ref, carry_ref, *,
+                    gamma: float, lam: float):
+    """Adjoint step, forward in time. carry holds γλ(1-d_{t-1})·ā_{t-1}."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    g, d = g_ref[0], d_ref[0]                               # (B,)
+    nd = 1.0 - d
+    abar = g + carry_ref[...]
+    dr_ref[0] = abar
+    dnv_ref[0] = gamma * nd * abar
+    carry_ref[...] = gamma * lam * nd * abar
+
+
+def _gae_backward(g, dones, *, gamma: float, lam: float, interpret: bool):
+    t, b = g.shape
+    spec = pl.BlockSpec((1, b), lambda ti: (ti, 0))         # forward time
+    return pl.pallas_call(
+        functools.partial(_gae_bwd_kernel, gamma=gamma, lam=lam),
+        grid=(t,),
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((t, b), jnp.float32),
+                   jax.ShapeDtypeStruct((t, b), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((b,), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(g, dones)
+
+
+@functools.lru_cache(maxsize=None)
+def _gae_scan_with_vjp(gamma: float, lam: float, interpret: bool):
+    @jax.custom_vjp
+    def scan_fn(rewards, values, next_values, dones):
+        return _gae_forward(rewards, values, next_values, dones,
+                            gamma=gamma, lam=lam, interpret=interpret)
+
+    def fwd(rewards, values, next_values, dones):
+        adv = _gae_forward(rewards, values, next_values, dones,
+                           gamma=gamma, lam=lam, interpret=interpret)
+        return adv, dones
+
+    def bwd(dones, g):
+        dr, dnv = _gae_backward(g, dones, gamma=gamma, lam=lam,
+                                interpret=interpret)
+        return dr, -dr, dnv, jnp.zeros_like(dones)
+
+    scan_fn.defvjp(fwd, bwd)
+    return scan_fn
+
+
+def gae_reverse_scan(rewards, values, next_values, dones, *,
+                     gamma: float, lam: float, interpret: bool = True):
+    """All inputs (T, B) fp32, time-major. Returns advantages (T, B).
+    Differentiable w.r.t. (rewards, values, next_values) through the
+    linear-adjoint Pallas kernel; dones get a zero cotangent."""
+    return _gae_scan_with_vjp(float(gamma), float(lam), bool(interpret))(
+        rewards, values, next_values, dones)

@@ -1,25 +1,26 @@
-"""Public GAE op matching repro.marl.gae.gae's contract."""
+"""Public GAE op matching repro.marl.gae.gae's contract.
+
+``interpret`` is a concrete bool resolved by ``repro.kernels.dispatch``
+(default: interpret everywhere but TPU), not a jit static argument —
+each (gamma, lam, interpret) kernel is built once via the ``lru_cache``
+in ``kernel.py``.
+"""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.gae import kernel as k_mod
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("gamma", "lam", "interpret"))
 def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
         lam: float = 0.95, interpret: Optional[bool] = None):
-    """rewards/values/dones: (..., T); last_value: (...,)."""
+    """rewards/values/dones: (..., T); last_value: (...,). Differentiable
+    w.r.t. rewards/values/last_value through the adjoint Pallas kernel."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = dispatch.interpret_default()
     shape = rewards.shape
     t = shape[-1]
     flat = lambda x: jnp.moveaxis(
@@ -28,6 +29,6 @@ def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
     nv = jnp.concatenate(
         [vl[1:], last_value.reshape(1, -1).astype(jnp.float32)], axis=0)
     adv = k_mod.gae_reverse_scan(rw, vl, nv, dn, gamma=gamma, lam=lam,
-                                 interpret=interpret)
+                                 interpret=bool(interpret))
     adv = jnp.moveaxis(adv, 0, 1).reshape(shape)
     return adv, adv + values

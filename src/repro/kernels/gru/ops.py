@@ -1,25 +1,33 @@
-"""Public GRU sequence op matching repro.nn.gru.gru_sequence's contract."""
+"""Public GRU sequence op matching repro.nn.gru.gru_sequence's contract.
+
+Dtype contract: ``hs`` and ``h_last`` come back in the ORACLE's output
+dtype — ``h0.dtype`` when an initial state is given, else ``xs.dtype``
+(the oracle threads the hidden state through ``astype(h.dtype)``) — the
+kernel computes in fp32 internally but no longer silently upcasts the
+caller.
+
+``interpret`` is a concrete bool resolved by ``repro.kernels.dispatch``
+(default: interpret everywhere but TPU); it is NOT a jit static argument
+here — each (kernel, interpret) pair is built exactly once via the
+``lru_cache`` in ``kernel.py``, so there is no per-call static recompile.
+"""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.gru import kernel as k_mod
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def gru_sequence(params, xs, h0=None, *, reset_mask=None,
                  interpret: Optional[bool] = None):
-    """xs: (B, T, in) -> (hs (B, T, H), h_last (B, H))."""
+    """xs: (B, T, in) -> (hs (B, T, H), h_last (B, H)). Differentiable
+    w.r.t. params/xs/h0 through the Pallas backward-scan kernel."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = dispatch.interpret_default()
+    out_dtype = h0.dtype if h0 is not None else xs.dtype
     b, t, _ = xs.shape
     hdim = params["wh"].shape[0]
     if h0 is None:
@@ -36,6 +44,7 @@ def gru_sequence(params, xs, h0=None, *, reset_mask=None,
             .astype(jnp.float32)
     hs = k_mod.gru_scan(gi, params["wh"].astype(jnp.float32),
                         params["bh"].astype(jnp.float32),
-                        h0.astype(jnp.float32), resets, interpret=interpret)
-    hs = jnp.moveaxis(hs, 0, 1).astype(xs.dtype)          # (B, T, H)
-    return hs, hs[:, -1].astype(h0.dtype)
+                        h0.astype(jnp.float32), resets,
+                        interpret=bool(interpret))
+    hs = jnp.moveaxis(hs, 0, 1).astype(out_dtype)         # (B, T, H)
+    return hs, hs[:, -1]

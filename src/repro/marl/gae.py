@@ -10,12 +10,24 @@ import jax.numpy as jnp
 
 
 def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
-        lam: float = 0.95):
+        lam: float = 0.95, use_kernels="off"):
     """rewards/values/dones: (..., T); last_value: (...,).
 
     ``dones[t]`` marks that the episode ended AT step t (no bootstrap
     across it). Returns (advantages, returns) with returns = adv + values.
+
+    ``use_kernels`` (``"auto" | "on" | "off"`` or a pre-resolved
+    decision) routes to the fused Pallas reverse scan
+    (``repro.kernels.gae``, custom-VJP'd). Default ``"off"`` keeps this
+    the pure oracle; the IALS inner step threads ``PPOConfig.use_kernels``.
     """
+    from repro.kernels import dispatch
+    decision = dispatch.resolve(use_kernels)
+    if decision.use:
+        from repro.kernels.gae import ops as gae_ops
+        return gae_ops.gae(rewards, values, dones, last_value,
+                           gamma=gamma, lam=lam,
+                           interpret=decision.interpret)
     t_axis = rewards.ndim - 1
     rw = jnp.moveaxis(rewards, t_axis, 0)
     vl = jnp.moveaxis(values, t_axis, 0)

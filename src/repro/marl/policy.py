@@ -23,6 +23,8 @@ class PolicyConfig:
     kind: str = "fnn"             # fnn | gru
     hidden: Tuple[int, ...] = (256, 128)
     gru_hidden: int = 128
+    use_kernels: str = "auto"     # Pallas GRU scan in policy_sequence:
+    #                               auto (kernel on TPU) | on | off
 
 
 def _dense_init(key, din, dout, scale=None):
@@ -85,7 +87,8 @@ def policy_sequence(params, obs_seq, h0, reset_mask, cfg: PolicyConfig):
     x = _trunk(params, obs_seq)
     if cfg.kind == "gru":
         hs, _ = gru_mod.gru_sequence(params["gru"], x, h0,
-                                     reset_mask=reset_mask)
+                                     reset_mask=reset_mask,
+                                     use_kernels=cfg.use_kernels)
         x = hs
     logits = _dense(params["pi"], x)
     values = _dense(params["v"], x)[..., 0]

@@ -25,6 +25,8 @@ class PPOConfig:
     epochs: int = 3
     minibatches: int = 4
     max_grad_norm: float = 0.5
+    use_kernels: str = "auto"     # Pallas GAE reverse scan in the inner
+    #                               step: auto (kernel on TPU) | on | off
 
 
 def ppo_loss(params, batch, policy_cfg: policy_mod.PolicyConfig,

@@ -103,7 +103,8 @@ def make_gs_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
                                            traj["value"], traj["done"]))
         adv, ret = gae_mod.gae(rewards, values, dones,
                                jnp.moveaxis(last_value, 0, 0),
-                               gamma=ppo_cfg.gamma, lam=ppo_cfg.lam)
+                               gamma=ppo_cfg.gamma, lam=ppo_cfg.lam,
+                               use_kernels=ppo_cfg.use_kernels)
 
         # PPO per agent. batch leaves (N, E, T, ...)
         def net(x):                           # (T,E,N,...) -> (N,E,T,...)

@@ -40,7 +40,6 @@ def gru_logical_specs(cfg: GRUConfig):
 
 def gru_cell(params, h, x):
     """One step. h: (B, H); x: (B, in_dim). Returns new h."""
-    hidden = h.shape[-1]
     gi = layers.dot(x, params["wi"]) + params["bi"].astype(x.dtype)
     gh = layers.dot(h, params["wh"]) + params["bh"].astype(h.dtype)
     i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)
@@ -49,16 +48,30 @@ def gru_cell(params, h, x):
     z = jax.nn.sigmoid((i_z + h_z).astype(jnp.float32))
     n = jnp.tanh((i_n + r * h_n).astype(jnp.float32))
     new_h = (1.0 - z) * n + z * h.astype(jnp.float32)
-    del hidden
     return new_h.astype(h.dtype)
 
 
-def gru_sequence(params, xs, h0=None, *, reset_mask=None):
+def gru_sequence(params, xs, h0=None, *, reset_mask=None,
+                 use_kernels="off"):
     """xs: (B, T, in_dim) -> hs: (B, T, H).
 
     ``reset_mask`` (B, T) of {0,1}: 1 resets the hidden state *before*
     consuming that step's input (episode boundaries in rollouts).
+
+    ``use_kernels`` (``"auto" | "on" | "off"`` or a pre-resolved
+    ``repro.kernels.dispatch.KernelDecision``) routes the whole sequence
+    to the fused Pallas scan (``repro.kernels.gru``) instead of the
+    ``lax.scan`` below. Default ``"off"`` keeps this function the pure
+    oracle the kernel is validated against; config-driven call sites
+    (AIP, policy) thread their own knob through.
     """
+    from repro.kernels import dispatch
+    decision = dispatch.resolve(use_kernels)
+    if decision.use:
+        from repro.kernels.gru import ops as gru_ops
+        return gru_ops.gru_sequence(params, xs, h0, reset_mask=reset_mask,
+                                    interpret=decision.interpret)
+
     b, t, _ = xs.shape
     hidden = params["wh"].shape[0]
     if h0 is None:
@@ -66,16 +79,13 @@ def gru_sequence(params, xs, h0=None, *, reset_mask=None):
 
     def step(h, inp):
         x, m = inp
-        if m is not None:
-            h = h * (1.0 - m[:, None].astype(h.dtype))
+        h = h * (1.0 - m[:, None].astype(h.dtype))
         h = gru_cell(params, h, x)
         return h, h
 
     xs_t = jnp.swapaxes(xs, 0, 1)                     # (T, B, in)
-    ms_t = (jnp.swapaxes(reset_mask, 0, 1)
-            if reset_mask is not None else [None] * 0)
-    if reset_mask is None:
-        h_last, hs = jax.lax.scan(lambda h, x: step(h, (x, None)), h0, xs_t)
-    else:
-        h_last, hs = jax.lax.scan(step, h0, (xs_t, ms_t))
+    ms_t = (jnp.swapaxes(reset_mask, 0, 1).astype(xs.dtype)
+            if reset_mask is not None
+            else jnp.zeros((t, b), xs.dtype))         # 1-m == 1: identity
+    h_last, hs = jax.lax.scan(step, h0, (xs_t, ms_t))
     return jnp.swapaxes(hs, 0, 1), h_last

@@ -1,10 +1,15 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs the pure-jnp
-ref.py oracle, swept over shapes and dtypes."""
+ref.py oracle, swept over shapes and dtypes — forward AND backward (the
+gru/gae kernels carry custom_vjp Pallas reverse passes), plus the
+dispatch layer that routes the MARL hot spots onto them."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.gae import ops as gae_ops
@@ -14,6 +19,11 @@ from repro.kernels.gru import ref as gru_ref
 from repro.kernels.ssd import ops as ssd_ops
 from repro.kernels.ssd import ref as ssd_ref
 from repro.nn import gru as gru_mod
+
+
+def tree_maxdiff(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
 # ---------------------------------------------------------------------------
@@ -107,6 +117,83 @@ def test_gru_kernel_reset_mask():
     np.testing.assert_allclose(out_k, out_r, atol=1e-5, rtol=1e-5)
 
 
+@pytest.mark.parametrize("with_resets", [False, True])
+@pytest.mark.parametrize("b,t,din,h", [(2, 16, 8, 16), (4, 33, 12, 32)])
+def test_gru_kernel_grad_matches_ref(b, t, din, h, with_resets):
+    """custom_vjp through the Pallas backward-scan kernel vs jax.grad of
+    the jnp oracle — w.r.t. params (incl. wh/bh accumulation), xs, h0."""
+    k1, k2, k3, k4, k5 = jax.random.split(jax.random.PRNGKey(11), 5)
+    params = gru_mod.gru_init(k1, gru_mod.GRUConfig(in_dim=din, hidden=h))
+    xs = jax.random.normal(k2, (b, t, din), jnp.float32)
+    h0 = jax.random.normal(k3, (b, h), jnp.float32)
+    resets = (jax.random.bernoulli(k4, 0.2, (b, t)).astype(jnp.float32)
+              if with_resets else None)
+    g = jax.random.normal(k5, (b, t, h), jnp.float32)
+
+    def loss(seq_fn):
+        def f(p, x, h0_):
+            hs, h_last = seq_fn(p, x, h0_)
+            return (hs * g).sum() + (h_last ** 2).sum()
+        return jax.grad(f, argnums=(0, 1, 2))
+
+    grads_k = loss(lambda p, x, h0_: gru_ops.gru_sequence(
+        p, x, h0_, reset_mask=resets, interpret=True))(params, xs, h0)
+    grads_r = loss(lambda p, x, h0_: gru_ref.gru_sequence(
+        p, x, h0_, reset_mask=resets))(params, xs, h0)
+    assert tree_maxdiff(grads_k, grads_r) < 1e-5
+
+
+def test_gru_kernel_grad_under_vmap():
+    """The sharded runtime vmaps the kernelized sequence over the agent
+    axis (stacked params) — grads must survive jit(vmap(grad(...)))."""
+    n, b, t, din, h = 3, 2, 9, 6, 8
+    params = jax.vmap(lambda k: gru_mod.gru_init(
+        k, gru_mod.GRUConfig(in_dim=din, hidden=h)))(
+        jax.random.split(jax.random.PRNGKey(0), n))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (n, b, t, din))
+    h0 = jnp.zeros((n, b, h))
+    resets = jax.random.bernoulli(
+        jax.random.PRNGKey(2), 0.2, (n, b, t)).astype(jnp.float32)
+
+    def one(seq_fn):
+        def f(p, x, h0_, r):
+            hs, _ = seq_fn(p, x, h0_, r)
+            return (hs ** 2).mean()
+        return jax.jit(jax.vmap(jax.grad(f)))
+
+    gk = one(lambda p, x, h0_, r: gru_ops.gru_sequence(
+        p, x, h0_, reset_mask=r, interpret=True))(params, xs, h0, resets)
+    gr = one(lambda p, x, h0_, r: gru_ref.gru_sequence(
+        p, x, h0_, reset_mask=r))(params, xs, h0, resets)
+    assert tree_maxdiff(gk, gr) < 1e-6
+
+
+@pytest.mark.parametrize("xs_dtype,h0_dtype,want", [
+    (jnp.float32, jnp.float32, jnp.float32),
+    (jnp.bfloat16, None, jnp.bfloat16),       # oracle: h0 inherits xs dtype
+    (jnp.bfloat16, jnp.float32, jnp.float32),  # oracle: hs threads h0 dtype
+])
+def test_gru_kernel_dtype_contract(xs_dtype, h0_dtype, want):
+    """No silent upcasting: hs/h_last come back in the oracle's output
+    dtype (h0.dtype when given, else xs.dtype)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(12), 3)
+    b, t, din, h = 2, 8, 4, 8
+    params = gru_mod.gru_init(k1, gru_mod.GRUConfig(in_dim=din, hidden=h))
+    xs = jax.random.normal(k2, (b, t, din), xs_dtype)
+    h0 = (jax.random.normal(k3, (b, h), h0_dtype)
+          if h0_dtype is not None else None)
+    hs_k, last_k = gru_ops.gru_sequence(params, xs, h0, interpret=True)
+    hs_r, last_r = gru_ref.gru_sequence(params, xs, h0)
+    assert hs_k.dtype == hs_r.dtype == want
+    assert last_k.dtype == last_r.dtype == want
+    # bf16 anywhere on the path (inputs or outputs) loosens the tolerance:
+    # the oracle rounds the input-gate matmul through bf16, the kernel
+    # computes it in fp32
+    tol = 3e-2 if jnp.bfloat16 in (xs_dtype, want) else 1e-5
+    np.testing.assert_allclose(hs_k.astype(jnp.float32),
+                               hs_r.astype(jnp.float32), atol=tol, rtol=tol)
+
+
 # ---------------------------------------------------------------------------
 # SSD (Mamba2 state-space duality)
 # ---------------------------------------------------------------------------
@@ -157,5 +244,147 @@ def test_gae_kernel_matches_ref(shape):
     adv_k, ret_k = gae_ops.gae(rewards, values, dones, last_value,
                                interpret=True)
     adv_r, ret_r = gae_ref.gae(rewards, values, dones, last_value)
-    np.testing.assert_allclose(adv_k, adv_r, atol=1e-5, rtol=1e-5)
-    np.testing.assert_allclose(ret_k, ret_r, atol=1e-5, rtol=1e-5)
+    # fp32 in, same op sequence: the interpret-mode kernel is bitwise
+    np.testing.assert_array_equal(np.asarray(adv_k), np.asarray(adv_r))
+    np.testing.assert_array_equal(np.asarray(ret_k), np.asarray(ret_r))
+
+
+@pytest.mark.parametrize("shape", [(4, 16), (2, 3, 32)])
+def test_gae_kernel_grad_matches_ref(shape):
+    """Linear-adjoint Pallas reverse pass vs jax.grad of the oracle —
+    w.r.t. rewards, values (incl. the next_values shift), last_value."""
+    ks = jax.random.split(jax.random.PRNGKey(10), 5)
+    rewards = jax.random.normal(ks[0], shape)
+    values = jax.random.normal(ks[1], shape)
+    dones = jax.random.bernoulli(ks[2], 0.15, shape).astype(jnp.float32)
+    last_value = jax.random.normal(ks[3], shape[:-1])
+    g = jax.random.normal(ks[4], shape)
+
+    def loss(gae_fn):
+        def f(r, v, lv):
+            adv, ret = gae_fn(r, v, lv)
+            return (adv * g).sum() + (ret ** 2).sum()
+        return jax.grad(f, argnums=(0, 1, 2))
+
+    gk = loss(lambda r, v, lv: gae_ops.gae(r, v, dones, lv,
+                                           interpret=True))(
+        rewards, values, last_value)
+    gr = loss(lambda r, v, lv: gae_ref.gae(r, v, dones, lv))(
+        rewards, values, last_value)
+    assert tree_maxdiff(gk, gr) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer
+# ---------------------------------------------------------------------------
+def test_dispatch_resolve_modes():
+    on_cpu = dispatch.resolve("on", backend="cpu")
+    assert on_cpu.use and on_cpu.interpret
+    off_cpu = dispatch.resolve("off", backend="cpu")
+    assert not off_cpu.use and off_cpu.interpret
+    auto_cpu = dispatch.resolve("auto", backend="cpu")
+    assert not auto_cpu.use          # auto on CPU: oracle, no interp cost
+    auto_tpu = dispatch.resolve("auto", backend="tpu")
+    assert auto_tpu.use and not auto_tpu.interpret
+    assert dispatch.resolve("on", backend="tpu") == auto_tpu
+    # pre-resolved decisions pass through unchanged
+    assert dispatch.resolve(on_cpu) is on_cpu
+    with pytest.raises(ValueError, match="use_kernels"):
+        dispatch.resolve("yes")
+
+
+def test_dispatch_override_mode():
+    from repro.core import influence
+    cfg = influence.AIPConfig(in_dim=4, n_sources=2)
+    assert cfg.use_kernels == "auto"
+    assert dispatch.override_mode(cfg, "auto") is cfg       # driver defers
+    on = dispatch.override_mode(cfg, "on")
+    assert on.use_kernels == "on" and on.in_dim == cfg.in_dim
+    assert dispatch.override_mode(on, "on") is on           # idempotent
+    with pytest.raises(ValueError, match="use_kernels"):
+        dispatch.override_mode(cfg, "maybe")
+
+
+def test_nn_gru_sequence_routes_to_kernel():
+    """use_kernels='on' through the nn-level entry point returns the
+    kernel's numbers (and 'off' the oracle's) — the route the AIP and
+    policy configs thread."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+    params = gru_mod.gru_init(k1, gru_mod.GRUConfig(in_dim=4, hidden=8))
+    xs = jax.random.normal(k2, (2, 6, 4), jnp.float32)
+    hs_on, _ = gru_mod.gru_sequence(params, xs, use_kernels="on")
+    hs_off, _ = gru_mod.gru_sequence(params, xs, use_kernels="off")
+    hs_k, _ = gru_ops.gru_sequence(params, xs, interpret=True)
+    np.testing.assert_array_equal(np.asarray(hs_on), np.asarray(hs_k))
+    np.testing.assert_allclose(hs_on, hs_off, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the kernelized hot paths match the oracle training paths
+# ---------------------------------------------------------------------------
+def _aip_setup(use_kernels):
+    from repro.core import influence
+    cfg = influence.AIPConfig(in_dim=6, n_sources=3, kind="gru",
+                              hidden=(12,), gru_hidden=8, epochs=20,
+                              batch=8, lr=1e-3, use_kernels=use_kernels)
+    ks = jax.random.split(jax.random.PRNGKey(20), 4)
+    data = {"feats": jax.random.normal(ks[0], (12, 16, 6)),
+            "u": jax.random.bernoulli(
+                ks[1], 0.4, (12, 16, 3)).astype(jnp.float32),
+            "resets": jax.random.bernoulli(
+                ks[2], 0.1, (12, 16)).astype(jnp.float32)}
+    params = influence.aip_init(ks[3], cfg)
+    return cfg, params, data
+
+
+def test_train_aip_kernel_path_matches_oracle():
+    """Full train_aip (minibatch Adam over epochs, grads through the
+    custom_vjp) with use_kernels='on' lands on the oracle path's params
+    and loss to 1e-5."""
+    from repro.core import influence
+    (cfg_on, p0, data), (cfg_off, _, _) = _aip_setup("on"), _aip_setup("off")
+    key = jax.random.PRNGKey(21)
+    p_on, loss_on = influence.train_aip(p0, data, key, cfg_on)
+    p_off, loss_off = influence.train_aip(p0, data, key, cfg_off)
+    assert tree_maxdiff(p_on, p_off) < 1e-5
+    assert abs(float(loss_on) - float(loss_off)) < 1e-5
+    # the loss curves agree too: held-out CE from either param set matches
+    ce_on = influence.eval_ce(p_on, data, cfg_on)
+    ce_off = influence.eval_ce(p_off, data, cfg_off)
+    assert abs(float(ce_on) - float(ce_off)) < 1e-5
+
+
+def test_ppo_update_kernel_path_matches_oracle():
+    """One PPO update on a synthetic GRU-policy trajectory: the Pallas
+    policy-GRU recompute (custom_vjp inside ppo_loss grads) matches the
+    oracle to 1e-5."""
+    from repro.marl import policy as policy_mod
+    from repro.marl import ppo as ppo_mod
+    from repro.optim import adamw
+    e, t, obs_dim, n_act = 8, 10, 5, 3
+    ks = jax.random.split(jax.random.PRNGKey(30), 8)
+    traj = {
+        "obs": jax.random.normal(ks[0], (e, t, obs_dim)),
+        "actions": jax.random.randint(ks[1], (e, t), 0, n_act),
+        "logp_old": -jnp.abs(jax.random.normal(ks[2], (e, t))),
+        "adv": jax.random.normal(ks[3], (e, t)),
+        "ret": jax.random.normal(ks[4], (e, t)),
+        "values_old": jax.random.normal(ks[5], (e, t)),
+        "resets": jax.random.bernoulli(
+            ks[6], 0.15, (e, t)).astype(jnp.float32),
+    }
+    outs = {}
+    for mode in ("on", "off"):
+        pc = policy_mod.PolicyConfig(obs_dim=obs_dim, n_actions=n_act,
+                                     kind="gru", hidden=(8,), gru_hidden=8,
+                                     use_kernels=mode)
+        params = policy_mod.policy_init(ks[7], pc)
+        batch = {**traj, "h0": jnp.zeros((e, pc.gru_hidden))}
+        cfg = ppo_mod.PPOConfig(epochs=2, minibatches=2, use_kernels=mode)
+        new_params, _, metrics = ppo_mod.ppo_update(
+            params, adamw.init(params), batch,
+            jax.random.PRNGKey(31), pc, cfg)
+        outs[mode] = (new_params, metrics)
+    assert tree_maxdiff(outs["on"][0], outs["off"][0]) < 1e-5
+    assert abs(float(outs["on"][1]["loss"])
+               - float(outs["off"][1]["loss"])) < 1e-5

@@ -172,6 +172,38 @@ def test_split_shard_train_program_is_collective_free():
     runtime.assert_no_collectives(collect_jx, what="collect program")
 
 
+def test_kernelized_inner_body_is_collective_free():
+    """With the Pallas fast paths forced ON (use_kernels='on': AIP GRU,
+    policy GRU, GAE all route through pallas_call + custom_vjp), the
+    per-shard body of BOTH round programs must still audit clean — the
+    kernels are per-agent compute, not communication — and the vmapped
+    agent-axis layout must trace."""
+    from repro.core import dials, dials_sharded, influence
+    from repro.envs import registry
+    from repro.marl import policy as policy_mod, ppo as ppo_mod
+    env_mod, env_cfg = registry.make("warehouse", side=2, horizon=16)
+    info = env_cfg.info()
+    pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                 n_actions=info.n_actions, kind="gru",
+                                 hidden=(16,), gru_hidden=8)
+    ac = influence.AIPConfig(in_dim=info.alsh_dim,
+                             n_sources=info.n_influence, kind="gru",
+                             hidden=(16,), gru_hidden=8, epochs=2, batch=8)
+    runner = dials_sharded.ShardedDIALSRunner(
+        env_mod, env_cfg, pc, ac, ppo_mod.PPOConfig(epochs=1, minibatches=2),
+        dials.DIALSConfig(outer_rounds=1, aip_refresh=2, collect_envs=2,
+                          collect_steps=8, n_envs=2, rollout_steps=8,
+                          use_kernels="on"),
+        n_shards=1)
+    for jx, what in ((runner.inner_jaxpr(), "kernelized round body"),
+                     (runner.split_inner_jaxpr(),
+                      "kernelized shard-train program")):
+        runtime.assert_no_collectives(jx, what=what)
+        prims = runtime.jaxpr_primitives(jx)
+        assert "pallas_call" in prims, \
+            f"{what} traced without the Pallas kernels: {sorted(prims)[:8]}"
+
+
 def test_spare_device_helper():
     n_dev = len(jax.devices())
     assert runtime.spare_device(n_dev) is None
