@@ -67,7 +67,7 @@ def _setup(env_name, n_side, *, horizon=32):
 
 
 def fig3_learning(fast: bool = False, shards=None, async_collect=False,
-                  use_kernels="auto"):
+                  use_kernels="auto", sharded_gs="auto"):
     """GS vs DIALS vs untrained-DIALS mean return (4-agent envs)."""
     from repro.core import dials
     from repro.launch import variants
@@ -84,7 +84,8 @@ def fig3_learning(fast: bool = False, shards=None, async_collect=False,
                 collect_steps=64, n_envs=8, rollout_steps=16,
                 untrained=untrained, eval_episodes=8,
                 use_kernels=use_kernels,
-                **variants.dials_variant_for(shards, async_collect))
+                **variants.dials_variant_for(shards, async_collect,
+                                             sharded_gs))
             tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
             t0 = time.time()
             _, hist = tr.run(jax.random.PRNGKey(0))
@@ -161,7 +162,7 @@ def fig3_scalability(fast: bool = False):
 
 
 def fig4_f_sweep(fast: bool = False, shards=None, async_collect=False,
-                 use_kernels="auto"):
+                 use_kernels="auto", sharded_gs="auto"):
     """AIP training frequency F: returns + influence CE (paper Fig. 4)."""
     from repro.core import dials
     from repro.launch import variants
@@ -175,7 +176,8 @@ def fig4_f_sweep(fast: bool = False, shards=None, async_collect=False,
             outer_rounds=rounds, aip_refresh=refresh, collect_envs=8,
             collect_steps=64, n_envs=8, rollout_steps=16, eval_episodes=8,
             use_kernels=use_kernels,
-            **variants.dials_variant_for(shards, async_collect))
+            **variants.dials_variant_for(shards, async_collect,
+                                             sharded_gs))
         tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
         t0 = time.time()
         _, hist = tr.run(jax.random.PRNGKey(0))
@@ -274,6 +276,11 @@ def main() -> None:
                     help="Pallas fast paths for the AIP/policy GRU and "
                          "GAE (auto = kernel on TPU, oracle elsewhere; "
                          "on = interpret-mode kernels off-TPU)")
+    ap.add_argument("--sharded-gs", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="region-decomposed GS collect/eval on the mesh "
+                         "(auto = whenever the env partition supports "
+                         "the shard count)")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,metric,value")
@@ -286,6 +293,8 @@ def main() -> None:
             kw["async_collect"] = args.async_collect
         if "use_kernels" in inspect.signature(fn).parameters:
             kw["use_kernels"] = args.use_kernels
+        if "sharded_gs" in inspect.signature(fn).parameters:
+            kw["sharded_gs"] = args.sharded_gs
         fn(**kw)
 
 

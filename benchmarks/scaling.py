@@ -9,7 +9,19 @@ Measures, for every (registered scenario, shard count) cell:
   their ratio ``overlap_speedup``,
 * inner agent-env steps/s (F · n_envs · rollout_steps · N per round),
 * speedup of the fused sharded runtime over the unfused python-loop
-  path (``shards=1`` — the F+3-syncs-per-round baseline).
+  path (``shards=1`` — the F+3-syncs-per-round baseline),
+* the GS decomposition A/B: one replicated Algorithm-2 collect
+  (``collect_s``) vs the region-decomposed ``shard_map``'d collect of
+  ``repro.core.gs_sharded`` on the same mesh
+  (``collect_s_sharded_gs`` / ``gs_speedup``; null where the env's
+  ``region_partition`` cannot tile the shard count, e.g. a 2×2 grid on
+  8 shards).
+
+The default grid includes the side-4 (16-agent) cells at shards 8/16
+(powergrid-ring16 / supplychain-line16 — contiguous-ring topologies that
+decompose at every divisor). On forced host devices the shard-scaling
+numbers are overhead-dominated (one physical CPU); the fused-vs-unfused
+and sharded-GS columns are still meaningful A/Bs of program structure.
 
 Writes ``experiments/bench/BENCH_dials_scaling.json`` — the perf
 trajectory artifact CI uploads — plus ``name,metric,value`` CSV lines on
@@ -20,7 +32,7 @@ Shard counts > 1 need multiple XLA devices; this script forces
 jax, so it must run as its own process:
 
     PYTHONPATH=src python -m benchmarks.scaling [--fast]
-        [--shards 1,2,4] [--scenarios traffic-2x2,supplychain-line4]
+        [--shards 1,2,4,8,16] [--scenarios traffic-2x2,powergrid-ring16]
 """
 from __future__ import annotations
 
@@ -30,6 +42,51 @@ import os
 import time
 
 OUT_PATH = os.path.join("experiments", "bench", "BENCH_dials_scaling.json")
+
+
+def _timed(fn, *args):
+    import jax
+    jax.block_until_ready(fn(*args))               # compile
+    t0 = time.time()
+    jax.block_until_ready(fn(*args))
+    return time.time() - t0
+
+
+def _make_collect_ab(env_mod, env_cfg, pc, *, n_envs, steps):
+    """Per-scenario sharded-GS A/B: build + time the (shard-independent)
+    replicated Algorithm-2 collect ONCE, return ``ab(shards)`` producing
+    the per-cell columns — the region-decomposed collect re-times per
+    mesh; the sharded columns are None where the env topology cannot
+    tile that block count."""
+    import jax
+    from repro.core import gs as gs_mod, gs_sharded
+    from repro.distributed import runtime
+    from repro.marl import policy as policy_mod
+
+    info = env_cfg.info()
+    key = jax.random.PRNGKey(0)
+    params = jax.vmap(lambda k: policy_mod.policy_init(k, pc))(
+        jax.random.split(key, info.n_agents))
+    rep = gs_mod.make_collector(env_mod, env_cfg, pc,
+                                n_envs=n_envs, steps=steps)
+    rep_s = _timed(rep, params, key)
+
+    def ab(shards):
+        out = {"collect_s": rep_s,
+               "collect_s_sharded_gs": None, "gs_speedup": None}
+        ok, _why = gs_sharded.partition_supported(env_mod, env_cfg,
+                                                  shards)
+        if shards > 1 and ok:
+            mesh = runtime.shard_mesh(shards)
+            shc = gs_sharded.make_sharded_collector(
+                env_mod, env_cfg, pc, n_envs=n_envs, steps=steps,
+                mesh=mesh)
+            sp = runtime.shard_agent_tree(params, mesh)
+            out["collect_s_sharded_gs"] = _timed(shc, sp, key)
+            out["gs_speedup"] = rep_s / out["collect_s_sharded_gs"]
+        return out
+
+    return ab
 
 
 def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
@@ -44,6 +101,8 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
         env_name, side = variants.MARL_SCENARIOS[scenario]
         env_mod, env_cfg, info, pc, ac, ppo_cfg = _setup(env_name, side)
         n = info.n_agents
+        collect_ab = _make_collect_ab(env_mod, env_cfg, pc, n_envs=4,
+                                      steps=collect_steps)
         unfused_round_s = None
         for shards in shard_counts:
             if n % shards:
@@ -85,7 +144,8 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
                    "inner_steps_per_s_async":
                        inner_steps / steady_by_mode[True],
                    "total_wall_s": total_by_mode[False],
-                   "total_wall_s_async": total_by_mode[True]}
+                   "total_wall_s_async": total_by_mode[True],
+                   **collect_ab(shards)}
             if shards == 1:
                 unfused_round_s = steady
             if unfused_round_s is not None:
@@ -98,13 +158,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="CI smoke: fewer rounds/steps")
-    ap.add_argument("--shards", default="1,2,4",
+    ap.add_argument("--shards", default="1,2,4,8,16",
                     help="comma-separated shard counts (1 = unfused "
-                         "python-loop baseline)")
+                         "python-loop baseline); counts that do not "
+                         "divide a scenario's agent count are skipped")
     ap.add_argument("--scenarios",
-                    default="traffic-2x2,supplychain-line4",
+                    default="traffic-2x2,supplychain-line4,"
+                            "powergrid-ring16,supplychain-line16",
                     help="comma-separated names from "
-                         "launch.variants.MARL_SCENARIOS")
+                         "launch.variants.MARL_SCENARIOS (the ring16/"
+                         "line16 defaults are the side-4 16-agent cells "
+                         "exercising shards 8/16)")
     ap.add_argument("--rounds", type=int, default=None)
     args = ap.parse_args()
 

@@ -82,6 +82,15 @@ class DIALSConfig:
     # (sharded whenever >1 device is visible), <=1 = force the
     # single-device path, N = force an N-shard ("shards",) mesh.
     shards: Optional[int] = None
+    # Region-decomposed GS (repro.core.gs_sharded): run Algorithm 2 and
+    # the periodic GS eval as shard_map'd block programs with halo
+    # exchange instead of replicated joint rollouts. "auto" uses it
+    # whenever the env's region_partition supports the mesh's block
+    # count (and falls back to the replicated GS otherwise, e.g. a 2x2
+    # grid on 4 shards); "on" requires it (raises when the topology
+    # cannot tile); "off" keeps the replicated GS. Loop-path runs
+    # (shards<=1 without a mesh) always use the replicated GS.
+    sharded_gs: str = "auto"
     # Pallas fast paths for the inner-loop hot spots (AIP GRU, policy
     # GRU, GAE). "auto" defers to the sub-configs (which themselves
     # default to auto = kernel on TPU, oracle elsewhere); an explicit
@@ -112,6 +121,9 @@ class DIALSTrainer:
                  aip_cfg: influence.AIPConfig, ppo_cfg: ppo_mod.PPOConfig,
                  cfg: DIALSConfig):
         self.env_mod, self.env_cfg = env_mod, env_cfg
+        if cfg.sharded_gs not in ("auto", "on", "off"):
+            raise ValueError(
+                f"sharded_gs must be auto|on|off, got {cfg.sharded_gs!r}")
         policy_cfg, aip_cfg, ppo_cfg = apply_kernel_mode(
             policy_cfg, aip_cfg, ppo_cfg, cfg.use_kernels)
         self.policy_cfg, self.aip_cfg = policy_cfg, aip_cfg
@@ -220,6 +232,13 @@ class DIALSTrainer:
         if n_shards:
             return self._run_sharded(state, n_shards, log=log,
                                      straggler_mask=straggler_mask)
+        if cfg.sharded_gs == "on":
+            # honor the forced mode instead of silently benchmarking the
+            # replicated GS: the region-decomposed GS is a mesh program
+            raise ValueError(
+                "sharded_gs='on' requires the sharded runtime (more than "
+                "one device, or DIALSConfig.shards > 1); the "
+                "single-device loop path always uses the replicated GS")
         n = self.info.n_agents
         collector = (self._make_collector_executor()
                      if cfg.async_collect else None)
@@ -334,10 +353,15 @@ class DIALSTrainer:
              "reports": jnp.full((n,), state["round"] - 1, jnp.int32)})
         collector = None
         if cfg.async_collect:
-            # dispatch mode only: a host thread could race the donation
+            # dispatch mode only: a host thread could race the donation.
+            # The region-decomposed collect is a mesh program — it runs
+            # on the shard devices themselves, so it is dispatched
+            # directly, without the spare-device input copy (JAX async
+            # dispatch still enqueues it ahead of the train program).
             collector = async_mod.AsyncCollector(
                 runner.collect, mode="dispatch",
-                spare_device=runtime_lib.spare_device(runner.n_shards))
+                spare_device=(None if runner.use_sharded_gs else
+                              runtime_lib.spare_device(runner.n_shards)))
         history = []
         t_start = time.time()
         for rnd in range(state["round"], cfg.outer_rounds):
@@ -359,8 +383,10 @@ class DIALSTrainer:
                     collector.submit(
                         carry["ials"]["params"],
                         self._collect_key(base_key, rnd + 1), rnd)
-                # agent-shard the dataset onto the mesh (it arrives on the
-                # spare device when one exists); an async transfer
+                # agent-shard the dataset onto the mesh (it arrives on
+                # the spare device when one exists); an async transfer.
+                # Identity for the region-decomposed collect — its
+                # output is born mesh-sharded.
                 data = runner.place_dataset(tagged.data)
                 carry, rec = runner.train_round(
                     carry, data, base_key, rnd, tagged.round, mask)

@@ -13,9 +13,16 @@ program** with the agent axis of params/opt/AIPs/locals sharded over a
   :meth:`split_inner_jaxpr` expose its jaxpr so tests assert no
   cross-shard communication exists between AIP refreshes (the paper's
   runtime-stays-constant claim, made checkable);
-* GS collect and the periodic GS eval need the full joint policy and
-  happen at the refresh boundary, where the partitioner inserts the one
-  gather per round that DIALS fundamentally requires;
+* GS collect and the periodic GS eval run **region-decomposed on the
+  same mesh** (``repro.core.gs_sharded``) whenever the env's
+  ``region_partition`` supports the block count
+  (``DIALSConfig.sharded_gs``: auto/on/off): block-local dynamics plus
+  one halo exchange per step, the dataset emitted already agent-sharded.
+  The audit extends accordingly — :meth:`audit_collectives` asserts the
+  train body stays collective-free while every GS body contains ONLY
+  halo-exchange collectives (``runtime.HALO_PRIMS``). With the
+  replicated fallback the GS programs are the joint-policy gather points
+  the partitioner inserts at the refresh boundary, as before;
 * per-agent randomness comes from ``repro.core.ials``'s shard-equivariant
   keying, so the sharded round is numerically the single-device round —
   the driver can switch paths freely.
@@ -41,6 +48,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import dials as dials_mod
 from repro.core import gs as gs_mod
+from repro.core import gs_sharded
 from repro.core import ials as ials_mod
 from repro.core import influence
 from repro.distributed import fault
@@ -77,18 +85,28 @@ class ShardedDIALSRunner:
             raise ValueError(
                 f"{n_agents} agents cannot tile {self.n_shards} shards")
 
-        self.collect = gs_mod.make_collector(
-            env_mod, env_cfg, policy_cfg,
-            n_envs=cfg.collect_envs, steps=cfg.collect_steps)
+        self.use_sharded_gs = self._resolve_sharded_gs()
+        if self.use_sharded_gs:
+            # region-decomposed GS on the mesh: block-local dynamics +
+            # halo exchange; dataset lands agent-sharded, no re-placement
+            self.collect = gs_sharded.make_sharded_collector(
+                env_mod, env_cfg, policy_cfg, n_envs=cfg.collect_envs,
+                steps=cfg.collect_steps, mesh=self.mesh)
+            self.gs_eval = gs_sharded.make_sharded_evaluator(
+                env_mod, env_cfg, policy_cfg, mesh=self.mesh)
+        else:
+            self.collect = gs_mod.make_collector(
+                env_mod, env_cfg, policy_cfg,
+                n_envs=cfg.collect_envs, steps=cfg.collect_steps)
+            _, _, self.gs_eval = runner_mod.make_gs_trainer(
+                env_mod, env_cfg, policy_cfg, ppo_cfg,
+                runner_mod.RunConfig(n_envs=cfg.n_envs,
+                                     rollout_steps=cfg.rollout_steps))
         self.ials_init = ials_mod.make_ials_init(
             env_mod, env_cfg, policy_cfg, aip_cfg, n_envs=cfg.n_envs)
         self._agent_train = ials_mod.make_agent_trainer(
             env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg,
             n_envs=cfg.n_envs, rollout_steps=cfg.rollout_steps)
-        _, _, self.gs_eval = runner_mod.make_gs_trainer(
-            env_mod, env_cfg, policy_cfg, ppo_cfg,
-            runner_mod.RunConfig(n_envs=cfg.n_envs,
-                                 rollout_steps=cfg.rollout_steps))
         self._shard_body = self._make_shard_body()
         self._train_fn = self._make_train()
         self._round_fn = self._make_round()
@@ -96,6 +114,22 @@ class ShardedDIALSRunner:
         # self.collect and train_round separately so they can overlap.
         self.round = jax.jit(self._round_fn, donate_argnums=0)
         self.train_round = jax.jit(self._train_fn, donate_argnums=0)
+
+    # -- GS decomposition selection ------------------------------------------
+    def _resolve_sharded_gs(self) -> bool:
+        mode = self.cfg.sharded_gs
+        if mode not in ("auto", "on", "off"):
+            raise ValueError(
+                f"sharded_gs must be auto|on|off, got {mode!r}")
+        if mode == "off":
+            return False
+        ok, why = gs_sharded.partition_supported(
+            self.env_mod, self.env_cfg, self.n_shards)
+        if mode == "on" and not ok:
+            raise ValueError(
+                f"sharded_gs='on' but the GS cannot decompose into "
+                f"{self.n_shards} blocks: {why}")
+        return ok
 
     # -- per-shard program ---------------------------------------------------
     def _make_shard_body(self):
@@ -168,25 +202,61 @@ class ShardedDIALSRunner:
         return jax.make_jaxpr(self._train_fn)(
             carry, data, key, scalar, scalar, mask)
 
-    def _one_shard_map_body(self, jaxpr, what):
+    def _classify_bodies(self, jaxpr, what):
+        """Split a traced program's shard_map bodies into (train body,
+        GS bodies). The train body is the unique collective-free one;
+        every other shard_map is a region-decomposed GS program, which
+        always carries its halo ppermutes. With the replicated-GS
+        fallback the program contains exactly the one train shard_map."""
         bodies = runtime_lib.find_shard_map_jaxprs(jaxpr)
-        assert len(bodies) == 1, \
-            f"expected exactly one shard_map in the {what}, " \
-            f"found {len(bodies)}"
-        return bodies[0]
+        train = [b for b in bodies
+                 if not runtime_lib.collectives_in_jaxpr(b)]
+        gs_bodies = [b for b in bodies
+                     if runtime_lib.collectives_in_jaxpr(b)]
+        assert len(train) == 1, \
+            f"expected exactly one collective-free shard_map (the " \
+            f"train body) in the {what}, found {len(train)} among " \
+            f"{len(bodies)} shard_maps"
+        n_gs = (2 if self.use_sharded_gs and what == "round" else
+                1 if self.use_sharded_gs else 0)
+        assert len(gs_bodies) == n_gs, \
+            f"expected {n_gs} GS shard_maps in the {what}, " \
+            f"found {len(gs_bodies)}"
+        return train[0], gs_bodies
 
     def inner_jaxpr(self):
-        """The per-shard body of the round, EXTRACTED from the traced
-        fused round program (not re-traced separately) — the artifact the
-        no-collectives assertion runs against. Everything between AIP
-        refreshes lives inside this one shard_map."""
-        return self._one_shard_map_body(self.round_jaxpr(), "round")
+        """The per-shard train body of the round, EXTRACTED from the
+        traced fused round program (not re-traced separately) — the
+        artifact the no-collectives assertion runs against. Everything
+        between AIP refreshes lives inside this one shard_map."""
+        return self._classify_bodies(self.round_jaxpr(), "round")[0]
 
     def split_inner_jaxpr(self):
         """Same audit artifact, extracted from the split shard-train
         program the async-collect driver actually runs."""
-        return self._one_shard_map_body(
-            self.train_round_jaxpr(), "shard-train program")
+        return self._classify_bodies(
+            self.train_round_jaxpr(), "shard-train program")[0]
+
+    def gs_jaxprs(self):
+        """The region-decomposed GS bodies of the fused round (collect +
+        eval; empty with the replicated fallback) — the artifacts the
+        halo-only assertion runs against."""
+        return self._classify_bodies(self.round_jaxpr(), "round")[1]
+
+    def audit_collectives(self):
+        """The full communication contract of both round programs, as
+        one executable check: the train body is collective-free, and
+        every GS body contains exactly the halo-exchange collectives and
+        nothing else."""
+        for what, jaxpr in (("round", self.round_jaxpr()),
+                            ("shard-train program",
+                             self.train_round_jaxpr())):
+            train, gs_bodies = self._classify_bodies(jaxpr, what)
+            runtime_lib.assert_no_collectives(
+                train, what=f"{what} per-shard train body")
+            for body in gs_bodies:
+                runtime_lib.assert_only_halo_collectives(
+                    body, what=f"{what} GS body")
 
     # -- the shard-train program ---------------------------------------------
     def _make_train(self):
@@ -247,7 +317,12 @@ class ShardedDIALSRunner:
     def place_dataset(self, data):
         """Agent-shard a collected dataset onto the mesh (leaves are
         agent-major, (N, S, T, ...)). The async driver uses this to move
-        a spare-device collect result next to the shard-train program."""
+        a spare-device collect result next to the shard-train program;
+        the region-decomposed collector already emits mesh-sharded
+        leaves, so this is the identity there (no post-collect
+        re-placement — the contract of the sharded GS)."""
+        if self.use_sharded_gs:
+            return data
         return runtime_lib.shard_agent_tree(data, self.mesh)
 
     def shard_carry(self, carry):

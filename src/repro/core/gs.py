@@ -4,6 +4,11 @@ Rolls the global simulator under the current joint policy and records, for
 every agent i and step t, the ALSH feature (local obs x_i^t ++ one-hot of
 a_i^{t-1}) and the realized influence sources u_i^t. One jitted scan; the
 output is already shaped (N, S, T, ...) for the vmapped AIP trainer.
+
+This is the replicated implementation; its region-decomposed twin
+(``repro.core.gs_sharded.make_sharded_collector``) runs the same
+Algorithm 2 as block programs over the shard mesh and emits a
+bitwise-identical dataset, already agent-sharded.
 """
 from __future__ import annotations
 
@@ -67,12 +72,16 @@ def make_collector(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
             env2, obs2, _rew, u, done = v_gs_step(
                 env, action, jax.random.split(k_env, n_envs))
             fresh = v_gs_init(jax.random.split(k_reset, n_envs))
+            # broadcast the per-env done flag by RANK, not by a
+            # hard-coded [:, None, None]: obs/hidden leaves are (E, N, O)
+            # here, but the same reset logic must hold for envs whose
+            # per-agent obs is not a flat vector.
             sel = lambda f, c: jnp.where(
                 done.reshape((-1,) + (1,) * (c.ndim - 1)), f, c)
             env3 = jax.tree.map(sel, fresh, env2)
-            obs3 = jnp.where(done[:, None, None], v_gs_obs(env3), obs2)
-            h3 = jnp.where(done[:, None, None], jnp.zeros_like(h2), h2)
-            prev3 = jnp.where(done[:, None], jnp.zeros_like(action), action)
+            obs3 = sel(v_gs_obs(env3), obs2)
+            h3 = sel(jnp.zeros_like(h2), h2)
+            prev3 = sel(jnp.zeros_like(action), action)
             # reset flag marks "new episode starts HERE" (before this feat)
             rec = {"feats": feat, "u": u,
                    "resets": jnp.broadcast_to(prev_done[:, None],

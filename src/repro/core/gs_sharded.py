@@ -1,0 +1,320 @@
+"""Region-decomposed global simulator — the GS itself on the mesh.
+
+PR 2–4 sharded the inner loop; the GS collect (Algorithm 2) and the
+periodic GS eval still executed fully replicated — the joint rollout
+re-centralized exactly the computation the paper decomposes. This module
+removes that: the factored-randomness protocol (``repro.envs.base``)
+already proves every region's next state depends only on its local
+state, its realized influence sources, and its exo slice (Definition 3),
+which licenses running the GS as **region blocks that exchange only
+boundary influence** — the same locality DARL1N exploits with
+one-hop-neighbour training.
+
+One GS step, block-decomposed (``make_block_step``):
+
+1. **halo exchange** — each block sends its (local states, actions)
+   slice one hop around the block ring in both directions
+   (``repro.distributed.collectives.halo_exchange``, two ``ppermute``s —
+   the ONLY collectives a sharded-GS body may contain);
+2. **boundary influence** — the env's ``boundary_influence`` evaluates
+   on a zero-padded full-size view holding blocks {b-1, b, b+1}; by the
+   locality contract of ``region_partition`` the block's own rows of the
+   result are exactly the replicated ``u`` (zero rows are inert), so
+   equivalence is by construction, not by tolerance;
+3. **region transitions** — ``ls_step_given`` (the per-region transition
+   shared verbatim with the LS) advances the block's agents with the
+   realized ``u`` and their ``exo_locals`` slice. Definition-3 exactness
+   (property-tested per env) makes this bit-for-bit the GS restriction.
+
+Exogenous draws, action noise, and reset draws are *replicated*: every
+block evaluates the same cheap counter-based RNG from the same key and
+slices its rows, so the block-decomposed trajectory reproduces the
+replicated ``gs_step`` trajectory bitwise under a shared key stream —
+the simulator state, the policy forward, and the region dynamics (the
+heavy terms) decompose; the random bits are not worth a collective.
+
+Deliberate trade, worth knowing when scaling further: the boundary
+computation itself is evaluated on the zero-padded full-size view, so
+its cost per block is O(N)-row, not O(N/blocks)-row. That buys bitwise
+equivalence *by construction* (the env's one reference implementation
+of ``boundary_influence`` is the code that runs, on identical rows) and
+costs little here — influence extraction is elementwise/neighbour work,
+dwarfed by the per-region transitions and policy matmuls that do
+decompose. An O(B) variant needs offset-aware windowed influence
+functions per env (3-block inputs instead of N); do that when a profile
+on a real mesh shows the boundary term, not before.
+
+``make_sharded_collector`` / ``make_sharded_evaluator`` are the
+``shard_map``'d twins of ``repro.core.gs.make_collector`` and the GS
+evaluator of ``repro.marl.runner``: the collector emits the same
+``(N, S, T, ...)`` dataset already agent-sharded on the mesh (no
+post-collect re-placement), the evaluator reduces per-block returns and
+means them outside the mesh body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import collectives
+from repro.distributed import runtime as runtime_lib
+from repro.marl import policy as policy_mod
+
+
+# ---------------------------------------------------------------------------
+# partition validation
+# ---------------------------------------------------------------------------
+def partition(env_mod, env_cfg, n_blocks: int) -> np.ndarray:
+    """The env's validated agent→block assignment. The halo ring logic
+    below assumes the canonical contiguous equal-size layout (block b
+    owns agents [b·B, (b+1)·B)), so anything else is rejected."""
+    from repro.envs import base
+    n_agents = env_cfg.info().n_agents
+    part = np.asarray(env_mod.region_partition(env_cfg, n_blocks))
+    canonical = base.contiguous_partition(n_agents, n_blocks)
+    if part.shape != (n_agents,) or not np.array_equal(part, canonical):
+        raise ValueError(
+            f"{env_cfg.info().name}.region_partition({n_blocks}) is not "
+            f"the contiguous equal-size layout the sharded GS requires")
+    return part
+
+
+def partition_supported(env_mod, env_cfg, n_blocks: int):
+    """(ok, reason): can this env's GS decompose into ``n_blocks``?
+    ``False`` for topologies that cannot tile (grid side not divisible)
+    and for env modules predating the spatial-decomposition protocol
+    (either hook missing — partial implementations must fall back to
+    the replicated GS cleanly, not crash at trace time)."""
+    if not hasattr(env_mod, "boundary_influence"):
+        return False, f"{env_cfg.info().name} has no boundary_influence"
+    try:
+        partition(env_mod, env_cfg, n_blocks)
+        return True, ""
+    except (AttributeError, ValueError) as e:
+        return False, str(e)
+
+
+# ---------------------------------------------------------------------------
+# the block-decomposed GS step
+# ---------------------------------------------------------------------------
+def _place_window(own, prev, nxt, blk, n_blocks: int, n_agents: int):
+    """Zero-padded full-size view with blocks {b-1, b, b+1} placed at
+    their absolute agent rows (mod-ring). Overlapping writes (1- or
+    2-block rings) carry identical data, so order is irrelevant."""
+    bsz = n_agents // n_blocks
+
+    def one(o, p, x):
+        full = jnp.zeros((n_agents,) + o.shape[1:], o.dtype)
+        for delta, leaf in ((-1, p), (0, o), (1, x)):
+            c = jnp.mod(blk + delta, n_blocks)
+            full = jax.lax.dynamic_update_slice_in_dim(
+                full, leaf, c * bsz, axis=0)
+        return full
+
+    return jax.tree.map(one, own, prev, nxt)
+
+
+def make_block_step(env_mod, env_cfg, *, n_blocks: int,
+                    axis_name: str = runtime_lib.SHARD_AXIS):
+    """One GS step for one block of one env stream, to run under a
+    ``shard_map`` (or ``vmap`` with ``axis_name`` — how the in-process
+    equivalence tests drive it) over the block axis.
+
+    ``block_step(loc, t, actions, exo) ->
+        (loc', obs (B, O), rew (B,), u (B, M), done (), t')``
+
+    ``loc``: this block's ``gs_locals``-schema slice (leaves (B, ...));
+    ``t``: () int32 step counter (identical on every block);
+    ``actions``: (B,) the block's joint-action slice;
+    ``exo``: the FULL exogenous draw (replicated — every block holds it).
+    """
+    info = env_cfg.info()
+    n_agents = info.n_agents
+    partition(env_mod, env_cfg, n_blocks)
+    bsz = n_agents // n_blocks
+
+    def block_step(loc, t, actions, exo):
+        blk = jax.lax.axis_index(axis_name)
+        prev, nxt = collectives.halo_exchange((loc, actions), axis_name,
+                                              axis_size=n_blocks)
+        view_loc, view_act = _place_window(
+            (loc, actions), prev, nxt, blk, n_blocks, n_agents)
+        u_full = env_mod.boundary_influence(
+            view_loc, view_act, exo, env_cfg)                 # (N, M)
+        take = lambda x: jax.lax.dynamic_slice_in_dim(
+            x, blk * bsz, bsz, axis=0)
+        u = take(u_full)
+        exo_blk = jax.tree.map(take, env_mod.exo_locals(exo, env_cfg))
+        step = jax.vmap(lambda l, a, uu, e: env_mod.ls_step_given(
+            {**l, "t": t}, a, uu, e, env_cfg))
+        new, obs, rew, _done = step(loc, actions, u, exo_blk)
+        loc2 = {k: v for k, v in new.items() if k != "t"}
+        t2 = t + 1
+        return loc2, obs, rew, u, t2 >= env_cfg.horizon, t2
+
+    return block_step
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing for the collector / evaluator twins
+# ---------------------------------------------------------------------------
+def _block_plumbing(env_mod, env_cfg, policy_cfg, mesh):
+    info = env_cfg.info()
+    n_blocks = mesh.shape[runtime_lib.SHARD_AXIS]
+    n_agents = info.n_agents
+    if n_agents % n_blocks:
+        raise ValueError(
+            f"{n_agents} agents cannot tile {n_blocks} GS blocks")
+    bsz = n_agents // n_blocks
+    block_step = make_block_step(env_mod, env_cfg, n_blocks=n_blocks)
+
+    v_gs_init = jax.vmap(lambda k: env_mod.gs_init(k, env_cfg))
+    v_gs_locals = jax.vmap(lambda s: env_mod.gs_locals(s, env_cfg))
+    b_ls_obs = jax.vmap(jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg)))
+    apply_agents = jax.vmap(
+        lambda p, o, h: policy_mod.policy_apply(p, o, h, policy_cfg),
+        in_axes=(0, 1, 1), out_axes=(1, 1, 1))
+
+    def init_block_locals(keys, blk):
+        """Replicated ``gs_init`` (same keys on every block — cheap,
+        counter-based), restricted to this block's agents."""
+        states = v_gs_init(keys)
+        loc = jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(
+                x, blk * bsz, bsz, axis=1),
+            v_gs_locals(states))                              # (E, B, ...)
+        return loc, states["t"]                               # t: (E,)
+
+    return (info, n_blocks, bsz, jax.vmap(block_step), init_block_locals,
+            b_ls_obs, apply_agents)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 on the mesh
+# ---------------------------------------------------------------------------
+def make_sharded_collector(env_mod, env_cfg,
+                           policy_cfg: policy_mod.PolicyConfig, *,
+                           n_envs: int, steps: int, mesh):
+    """``shard_map``'d twin of :func:`repro.core.gs.make_collector`:
+    ``collect(policy_params (N, ...) agent-sharded, key) -> dataset``
+    with leaves (N, n_envs, steps, ...) already agent-sharded on the
+    mesh. Key plumbing mirrors the replicated collector exactly, so the
+    emitted dataset is the replicated one (bitwise, given bitwise policy
+    forwards)."""
+    (info, n_blocks, bsz, e_block_step, init_block_locals, b_ls_obs,
+     apply_agents) = _block_plumbing(env_mod, env_cfg, policy_cfg, mesh)
+    n_agents = info.n_agents
+    v_gs_exo = jax.vmap(lambda k: env_mod.gs_exo(k, env_cfg))
+
+    def categorical_block(key, logits, blk):
+        """The replicated collector draws one categorical over the full
+        (E, N, A) logits; argmax over A is elementwise in (env, agent),
+        so evaluating the same draw on a zero-padded view and reading
+        off this block's columns reproduces the sampled actions bitwise
+        (garbage columns produce garbage actions that nobody reads)."""
+        full = jnp.zeros((n_envs, n_agents) + logits.shape[2:],
+                         logits.dtype)
+        full = jax.lax.dynamic_update_slice_in_dim(
+            full, logits, blk * bsz, axis=1)
+        return jax.lax.dynamic_slice_in_dim(
+            jax.random.categorical(key, full), blk * bsz, bsz, axis=1)
+
+    def body(params, key):
+        blk = jax.lax.axis_index(runtime_lib.SHARD_AXIS)
+        ke, kr = jax.random.split(key)
+        loc, t = init_block_locals(jax.random.split(ke, n_envs), blk)
+        obs = b_ls_obs(loc)                                   # (E, B, O)
+        h = policy_mod.initial_hidden(policy_cfg, n_envs, bsz)
+        prev_a = jnp.zeros((n_envs, bsz), jnp.int32)
+        prev_done = jnp.ones((n_envs,), bool)
+
+        def step(carry, k):
+            loc, t, obs, h, prev_a, prev_done = carry
+            k_act, k_env, k_reset = jax.random.split(k, 3)
+            feat = jnp.concatenate(
+                [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
+            logits, _, h2 = apply_agents(params, obs, h)
+            action = categorical_block(k_act, logits, blk)
+            exo = v_gs_exo(jax.random.split(k_env, n_envs))
+            loc2, obs2, _rew, u, done, t2 = e_block_step(
+                loc, t, action, exo)
+            fresh_loc, fresh_t = init_block_locals(
+                jax.random.split(k_reset, n_envs), blk)
+            sel = lambda f, c: jnp.where(
+                done.reshape((-1,) + (1,) * (c.ndim - 1)), f, c)
+            loc3 = jax.tree.map(sel, fresh_loc, loc2)
+            t3 = jnp.where(done, fresh_t, t2)
+            obs3 = sel(b_ls_obs(loc3), obs2)
+            h3 = sel(jnp.zeros_like(h2), h2)
+            prev3 = jnp.where(done[:, None], jnp.zeros_like(action),
+                              action)
+            rec = {"feats": feat, "u": u,
+                   "resets": jnp.broadcast_to(
+                       prev_done[:, None], (n_envs, bsz))
+                   .astype(jnp.float32)}
+            return (loc3, t3, obs3, h3, prev3, done), rec
+
+        _, recs = jax.lax.scan(
+            step, (loc, t, obs, h, prev_a, prev_done),
+            jax.random.split(kr, steps))
+        # (T, E, B, ...) -> (B, E, T, ...); with out_specs sharding the
+        # leading axis this IS the (N, E, T, ...) dataset layout.
+        return jax.tree.map(
+            lambda x: jnp.moveaxis(x, (0, 1, 2), (2, 1, 0)), recs)
+
+    from jax.sharding import PartitionSpec as P
+    sharded = P(runtime_lib.SHARD_AXIS)
+    return jax.jit(runtime_lib.shard_map_nocheck(
+        body, mesh, in_specs=(sharded, P()), out_specs=sharded))
+
+
+# ---------------------------------------------------------------------------
+# GS eval on the mesh
+# ---------------------------------------------------------------------------
+def make_sharded_evaluator(env_mod, env_cfg,
+                           policy_cfg: policy_mod.PolicyConfig, *, mesh):
+    """``shard_map``'d twin of the GS evaluator in
+    ``repro.marl.runner.make_gs_trainer``: deterministic (argmax)
+    rollout of full episodes, block-decomposed, per-block mean returns
+    reduced outside the mesh body (equal block sizes make the mean of
+    block means the global mean)."""
+    (info, n_blocks, bsz, e_block_step, init_block_locals, b_ls_obs,
+     apply_agents) = _block_plumbing(env_mod, env_cfg, policy_cfg, mesh)
+    v_gs_exo = jax.vmap(lambda k: env_mod.gs_exo(k, env_cfg))
+    from jax.sharding import PartitionSpec as P
+    sharded = P(runtime_lib.SHARD_AXIS)
+
+    @functools.lru_cache(maxsize=None)
+    def build(episodes: int):
+        def body(params, key):
+            blk = jax.lax.axis_index(runtime_lib.SHARD_AXIS)
+            ke, kr = jax.random.split(key)
+            loc, t = init_block_locals(
+                jax.random.split(ke, episodes), blk)
+            obs = b_ls_obs(loc)
+            h = policy_mod.initial_hidden(policy_cfg, episodes, bsz)
+
+            def step(carry, k):
+                loc, t, obs, h = carry
+                logits, _, h2 = apply_agents(params, obs, h)
+                action = jnp.argmax(logits, axis=-1)
+                exo = v_gs_exo(jax.random.split(k, episodes))
+                loc2, obs2, rew, _u, _done, t2 = e_block_step(
+                    loc, t, action, exo)
+                return (loc2, t2, obs2, h2), rew
+
+            _, rews = jax.lax.scan(step, (loc, t, obs, h),
+                                   jax.random.split(kr, info.horizon))
+            return rews.mean()[None]                      # (1,) per shard
+
+        sm = runtime_lib.shard_map_nocheck(
+            body, mesh, in_specs=(sharded, P()), out_specs=sharded)
+        return jax.jit(lambda p, k: sm(p, k).mean())
+
+    def eval_fn(params, key, *, episodes: int = 4):
+        return build(int(episodes))(params, key)
+
+    return eval_fn

@@ -81,7 +81,8 @@ def aip_apply(params, feat, h, cfg: AIPConfig):
     x = _trunk(params, feat)
     if cfg.kind == "gru":
         flat = x.reshape(-1, x.shape[-1])
-        hf = gru_mod.gru_cell(params["gru"], h.reshape(-1, h.shape[-1]), flat)
+        hf = gru_mod.gru_cell(params["gru"], h.reshape(-1, h.shape[-1]),
+                              flat, use_kernels=cfg.use_kernels)
         h = hf.reshape(h.shape)
         x = h
     return _dense(params["heads"], x), h

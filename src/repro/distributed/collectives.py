@@ -33,11 +33,30 @@ def tree_psum_scatter(tree, axis_name: str, *, axis: int = 0):
                                        tiled=True), tree)
 
 
-def ppermute_ring(x, axis_name: str, *, shift: int = 1):
-    """Ring shift (used by the ring-attention long-context variant)."""
-    n = jax.lax.axis_size(axis_name)
-    perm = [(i, (i + shift) % n) for i in range(n)]
+def ppermute_ring(x, axis_name: str, *, shift: int = 1, axis_size: int):
+    """Ring shift (the sharded-GS halo primitive). The permutation is a
+    static list, so the caller must supply the axis size — the pinned
+    jax floor predates ``jax.lax.axis_size``, and every caller (the
+    shard_map builders) knows its mesh size statically anyway."""
+    perm = [(i, (i + shift) % axis_size) for i in range(axis_size)]
     return jax.lax.ppermute(x, axis_name, perm)
+
+
+def halo_exchange(tree, axis_name: str, *, axis_size: int):
+    """The one communication of the region-decomposed GS step: every
+    shard sends its whole payload (boundary states + actions) one hop
+    around the block ring in both directions and receives its two
+    neighbours'. Returns ``(prev, next)`` — the payloads of blocks b-1
+    and b+1 (mod n) — as two ring ``ppermute``s per leaf; nothing else
+    (no psum/all_gather) may appear in a sharded-GS body, which is what
+    ``repro.distributed.runtime.assert_only_halo_collectives`` audits."""
+    prev = jax.tree.map(
+        lambda x: ppermute_ring(x, axis_name, shift=1,
+                                axis_size=axis_size), tree)
+    nxt = jax.tree.map(
+        lambda x: ppermute_ring(x, axis_name, shift=-1,
+                                axis_size=axis_size), tree)
+    return prev, nxt
 
 
 def pbroadcast(x, axis_name: str, root: int = 0):

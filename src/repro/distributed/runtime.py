@@ -38,6 +38,16 @@ COLLECTIVE_PRIMS: frozenset = frozenset({
     "collective_permute", "pgather", "pdot",
 })
 
+# Neighbour-only communication — what a region-decomposed GS body is
+# allowed (repro.core.gs_sharded exchanges halos with ring ppermutes).
+# Deliberately NOT psum_scatter/reduce_scatter: those are full
+# cross-shard reductions, i.e. exactly the quiet re-centralization this
+# whitelist exists to reject. Anything outside this set in a GS body
+# means the "decomposed" rollout re-centralized.
+HALO_PRIMS: frozenset = frozenset({
+    "ppermute", "collective_permute",
+})
+
 
 # ---------------------------------------------------------------------------
 # Mesh construction
@@ -179,3 +189,19 @@ def assert_no_collectives(jaxpr, *, what: str = "program") -> None:
         raise AssertionError(
             f"{what} must be collective-free between AIP refreshes but "
             f"contains {sorted(found)}")
+
+
+def assert_only_halo_collectives(jaxpr, *, what: str = "GS body") -> None:
+    """Raise unless every collective in ``jaxpr`` is a halo exchange
+    (``HALO_PRIMS``) and at least one is present — a region-decomposed
+    GS body must talk to its ring neighbours and to nobody else."""
+    found = collectives_in_jaxpr(jaxpr)
+    extra = found - HALO_PRIMS
+    if extra:
+        raise AssertionError(
+            f"{what} may contain only halo-exchange collectives "
+            f"{sorted(HALO_PRIMS)} but also has {sorted(extra)}")
+    if not found:
+        raise AssertionError(
+            f"{what} contains no halo exchange at all — it is not the "
+            f"region-decomposed GS program")

@@ -35,10 +35,56 @@ step counter ``t``), so replaying region i through ``ls_step_given``
 with the realized ``u[i]`` and ``exo_locals(exo)[i]`` must reproduce the
 GS's region-i restriction bit-for-bit — Definition 3 as an executable
 property, for every registered env.
+
+Spatial-decomposition protocol (the sharded-GS contract, exercised by
+``tests/test_registry.py`` and consumed by ``repro.core.gs_sharded``) —
+every module also exposes the two hooks that let the *global* rollout
+itself run as region blocks over a device mesh:
+
+    ``region_partition(cfg, n_blocks) -> (N,) int``
+        Contiguous agent→block assignment (equal block sizes,
+        non-decreasing — use :func:`contiguous_partition`) respecting the
+        network topology: every agent's influence sources must be
+        computable from the states/actions/exo of agents in its OWN
+        block and the two ring-adjacent blocks (b±1 mod n_blocks).
+        Raises ``ValueError`` for block counts the topology cannot
+        support (e.g. a grid env needs ``n_blocks`` to divide the grid
+        side so blocks are whole row bands).
+
+    ``boundary_influence(states, actions, exo, cfg) -> u (N, M) f32``
+        The incoming-u computation restated over *agent-major* inputs:
+        ``states`` follows the ``gs_locals`` schema, ``actions`` is
+        (N,), ``exo`` the full exogenous draw. On full global data it
+        must reproduce ``gs_step_given``'s realized ``u`` bit-for-bit.
+        Locality guarantee (what ``region_partition`` promises): row i
+        of the result depends only on rows of one-hop topological
+        neighbours — so a block can evaluate it on a zero-padded view
+        holding only blocks {b-1, b, b+1} (the halo) and read off its
+        own rows exactly. Zero rows must therefore be inert: they may
+        never contribute influence to a real agent's sources.
+
+Together with Definition-3 exactness this factors one GS step into
+``u = boundary_influence(...)`` (one halo exchange) followed by N
+independent ``ls_step_given`` region transitions — the decomposition
+``repro.core.gs_sharded`` shard_maps over the mesh.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import numpy as np
+
+
+def contiguous_partition(n_agents: int, n_blocks: int) -> np.ndarray:
+    """Equal-size contiguous agent→block assignment, the shape every
+    env's ``region_partition`` returns after validating its own topology
+    constraint. Raises when the agent axis cannot tile the blocks."""
+    if n_blocks < 1:
+        raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+    if n_agents % n_blocks:
+        raise ValueError(
+            f"{n_agents} agents cannot tile {n_blocks} blocks")
+    return (np.arange(n_agents) // (n_agents // n_blocks)).astype(np.int32)
 
 
 @dataclasses.dataclass(frozen=True)

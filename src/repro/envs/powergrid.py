@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs import registry
-from repro.envs.base import EnvInfo
+from repro.envs.base import EnvInfo, contiguous_partition
 
 TAP_MAX = 2                       # tap positions in [-2, 2] -> 5 one-hot
 
@@ -140,6 +140,22 @@ def gs_step_given(state, actions, load, cfg: PowerGridConfig):
     new_state = {"volts": new_volts, "tap": new_taps, "t": state["t"] + 1}
     done = new_state["t"] >= cfg.horizon
     return new_state, obs, rewards, u.astype(jnp.float32), done
+
+
+def region_partition(cfg: PowerGridConfig, n_blocks: int):
+    """Contiguous arcs of the bus ring. Tie-line coupling is strictly
+    i±1 (mod N), so any equal split into contiguous arcs — including the
+    0↔N-1 wraparound between the first and last block — satisfies
+    one-hop block adjacency."""
+    return contiguous_partition(cfg.n_agents, n_blocks)
+
+
+def boundary_influence(states, actions, load, cfg: PowerGridConfig):
+    """Agent-major restatement of the tie-line influence: u (N, 4) from
+    the pre-step feeder voltages alone. Row i reads only rows i±1
+    (mod N); zero rows are inert for any real agent's sources."""
+    del actions, load
+    return gs_influence(states, cfg).astype(jnp.float32)
 
 
 def gs_step(state, actions, key, cfg: PowerGridConfig):

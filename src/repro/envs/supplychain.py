@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs import registry
-from repro.envs.base import EnvInfo
+from repro.envs.base import EnvInfo, contiguous_partition
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,6 +140,23 @@ def gs_step_given(state, actions, exo, cfg: SupplyChainConfig):
                  "t": state["t"] + 1}
     done = new_state["t"] >= cfg.horizon
     return new_state, obs, rewards, u.astype(jnp.float32), done
+
+
+def region_partition(cfg: SupplyChainConfig, n_blocks: int):
+    """Contiguous segments of the production line. Part hand-offs couple
+    strictly i±1, so any equal split into contiguous segments satisfies
+    one-hop block adjacency (the 0↔N-1 wraparound halo is unused — the
+    head takes external arrivals, the tail ships to a sink)."""
+    return contiguous_partition(cfg.n_agents, n_blocks)
+
+
+def boundary_influence(states, actions, exo, cfg: SupplyChainConfig):
+    """Agent-major restatement of the hand-off/backpressure influence:
+    u (N, 2) from the pre-step store/buffer levels and the head-arrival
+    draw. Row i reads only rows i-1, i, i+1; zero rows are inert (an
+    empty buffer never hands off, an empty store never backpressures)."""
+    del actions
+    return gs_influence(states, exo, cfg).astype(jnp.float32)
 
 
 def gs_step(state, actions, key, cfg: SupplyChainConfig):

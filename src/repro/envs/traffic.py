@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.envs import registry
-from repro.envs.base import EnvInfo
+from repro.envs.base import EnvInfo, contiguous_partition
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +154,34 @@ def exo_locals(inject, cfg: TrafficConfig):
     takes no direct exogenous input."""
     del inject
     return jnp.zeros((cfg.n_agents, 0))
+
+
+def region_partition(cfg: TrafficConfig, n_blocks: int):
+    """Contiguous row bands of the n×n intersection grid. A band's only
+    inter-region couplings are the hand-offs to the rows directly above/
+    below (adjacent band) and east/west within the band, so one-hop
+    block adjacency holds iff bands are whole rows: ``n_blocks`` must
+    divide the grid side."""
+    if cfg.n % n_blocks:
+        raise ValueError(
+            f"traffic grid side {cfg.n} cannot split into {n_blocks} "
+            f"row bands")
+    return contiguous_partition(cfg.n_agents, n_blocks)
+
+
+def boundary_influence(states, actions, inject, cfg: TrafficConfig):
+    """Agent-major restatement of the realized inflow: u (N, 4) from the
+    pre-step lanes/phases, the joint actions, and the boundary-injection
+    draws. Row (i, j) reads only its grid neighbours' ``out`` bits (plus
+    its own injection), so zero rows are inert — an empty lane never
+    emits a crossing car."""
+    n = cfg.n
+    lanes = states["lanes"].reshape(n, n, 4, cfg.lane_len)
+    phase = (states["phase"].reshape(n, n) + actions.reshape(n, n)) % 2
+    green = _green(phase)                                      # (n, n, 4)
+    out = lanes[..., -1].astype(bool) & green
+    inflow = gs_inflow(out, inject, cfg)
+    return inflow.reshape(cfg.n_agents, 4).astype(jnp.float32)
 
 
 def gs_step(state, actions, key, cfg: TrafficConfig):

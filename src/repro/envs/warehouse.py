@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.envs import registry
-from repro.envs.base import EnvInfo
+from repro.envs.base import EnvInfo, contiguous_partition
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +184,30 @@ def exo_locals(spawn_grid, cfg: WarehouseConfig):
     """Per-region restriction: each region's 12 item-cell spawn bits."""
     cells = jnp.asarray(item_cells(cfg))
     return spawn_grid[cells[..., 0], cells[..., 1]]          # (N, 12)
+
+
+def region_partition(cfg: WarehouseConfig, n_blocks: int):
+    """Contiguous row bands of the k×k region grid. Robots are confined
+    to their own 5×5 region and shelves are shared only with 4-adjacent
+    regions (diagonals can never reach a neighbour's item cells), so
+    one-hop block adjacency holds iff bands are whole region rows:
+    ``n_blocks`` must divide k."""
+    if cfg.k % n_blocks:
+        raise ValueError(
+            f"warehouse region grid side {cfg.k} cannot split into "
+            f"{n_blocks} row bands")
+    return contiguous_partition(cfg.n_agents, n_blocks)
+
+
+def boundary_influence(states, actions, spawn_grid, cfg: WarehouseConfig):
+    """Agent-major restatement of the occupancy influence: u (N, 12)
+    from post-move absolute positions. Zero rows are inert — a zeroed
+    robot sits on its own region's corner, and corners (both coords ≡ 0
+    mod 4) are never item cells (exactly one coord ≡ 0 mod 4)."""
+    del spawn_grid
+    move = jnp.asarray(_MOVES)[actions]
+    new_pos = jnp.clip(states["pos"] + move, 0, 4)
+    return gs_influence(new_pos, cfg).astype(jnp.float32)
 
 
 def gs_step(state, actions, key, cfg: WarehouseConfig):

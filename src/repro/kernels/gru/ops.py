@@ -21,6 +21,24 @@ from repro.kernels import dispatch
 from repro.kernels.gru import kernel as k_mod
 
 
+def gru_cell(params, h, x, *, interpret: Optional[bool] = None):
+    """One recurrent step matching ``repro.nn.gru.gru_cell``'s contract:
+    h (B, H), x (B, in) -> new h in ``h.dtype``. Runs the fused scan
+    kernel at T=1 (gate matmuls + nonlinearities + state update in one
+    pallas_call) — the GS/LS rollout policy step's fast path, so the
+    single-step call sites stop being the one oracle-only GRU path."""
+    if interpret is None:
+        interpret = dispatch.interpret_default()
+    gi = (x.astype(jnp.float32) @ params["wi"].astype(jnp.float32)
+          + params["bi"].astype(jnp.float32))[None]           # (1, B, 3H)
+    resets = jnp.zeros((1, x.shape[0], 1), jnp.float32)
+    hs = k_mod.gru_scan(gi, params["wh"].astype(jnp.float32),
+                        params["bh"].astype(jnp.float32),
+                        h.astype(jnp.float32), resets,
+                        interpret=bool(interpret))
+    return hs[0].astype(h.dtype)
+
+
 def gru_sequence(params, xs, h0=None, *, reset_mask=None,
                  interpret: Optional[bool] = None):
     """xs: (B, T, in) -> (hs (B, T, H), h_last (B, H)). Differentiable

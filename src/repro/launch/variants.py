@@ -159,8 +159,10 @@ def _train_no_seqpar(spec, shape):
 # ---------------------------------------------------------------------------
 MARL_SCENARIOS = {
     "traffic-2x2": ("traffic", 2),
+    "traffic-4x4": ("traffic", 4),
     "traffic-5x5": ("traffic", 5),
     "warehouse-2x2": ("warehouse", 2),
+    "warehouse-4x4": ("warehouse", 4),
     "warehouse-5x5": ("warehouse", 5),
     "powergrid-ring4": ("powergrid", 2),
     "powergrid-ring16": ("powergrid", 4),
@@ -179,17 +181,20 @@ def marl_scenario(name, **overrides):
     return registry.make(env_name, side=side, **overrides)
 
 
-def dials_variant_for(shards, async_collect=False):
+def dials_variant_for(shards, async_collect=False, sharded_gs="auto"):
     """§DIALS runtime knobs: ``DIALSConfig`` overrides — the resolver
-    behind every ``--shards N`` / ``--async-collect`` CLI flag
-    (benchmarks/run.py, benchmarks/scaling.py,
+    behind every ``--shards N`` / ``--async-collect`` / ``--sharded-gs``
+    CLI flag (benchmarks/run.py, benchmarks/scaling.py,
     examples/traffic_gs_vs_dials.py). ``shards``: ``None`` = auto path
     selection (sharded iff >1 device visible), ``1`` = force the unfused
     python-loop path (F+3 host syncs per round), ``N`` = force an
     N-shard ``("shards",)`` mesh. ``async_collect`` overlaps round k+1's
     GS collect with round k's inner steps (one-round dataset lag,
-    bounded by ``max_aip_staleness``)."""
-    return {"shards": shards, "async_collect": async_collect}
+    bounded by ``max_aip_staleness``). ``sharded_gs`` selects the
+    region-decomposed GS collect/eval (repro.core.gs_sharded):
+    auto = whenever the env's partition supports the mesh, on/off force."""
+    return {"shards": shards, "async_collect": async_collect,
+            "sharded_gs": sharded_gs}
 
 
 VARIANTS = {

@@ -73,7 +73,8 @@ def policy_apply(params, obs, h, cfg: PolicyConfig):
     if cfg.kind == "gru":
         flat = x.reshape(-1, x.shape[-1])
         hf = h.reshape(-1, h.shape[-1])
-        hf = gru_mod.gru_cell(params["gru"], hf, flat)
+        hf = gru_mod.gru_cell(params["gru"], hf, flat,
+                              use_kernels=cfg.use_kernels)
         h = hf.reshape(h.shape)
         x = h
     logits = _dense(params["pi"], x)

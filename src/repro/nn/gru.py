@@ -38,8 +38,22 @@ def gru_logical_specs(cfg: GRUConfig):
             "bi": ("mlp",), "bh": ("mlp",)}
 
 
-def gru_cell(params, h, x):
-    """One step. h: (B, H); x: (B, in_dim). Returns new h."""
+def gru_cell(params, h, x, use_kernels="off"):
+    """One step. h: (B, H); x: (B, in_dim). Returns new h.
+
+    ``use_kernels`` (mode string or pre-resolved ``KernelDecision``)
+    routes the step to the fused Pallas cell (``repro.kernels.gru`` at
+    T=1) — the GS/LS rollout policy step's fast path. Default ``"off"``
+    keeps this the pure oracle (and the body of the oracle scan in
+    :func:`gru_sequence` below); config-driven call sites (policy/AIP
+    ``*_apply``) thread their own knob through.
+    """
+    from repro.kernels import dispatch
+    decision = dispatch.resolve(use_kernels)
+    if decision.use:
+        from repro.kernels.gru import ops as gru_ops
+        return gru_ops.gru_cell(params, h, x,
+                                interpret=decision.interpret)
     gi = layers.dot(x, params["wi"]) + params["bi"].astype(x.dtype)
     gh = layers.dot(h, params["wh"]) + params["bh"].astype(h.dtype)
     i_r, i_z, i_n = jnp.split(gi, 3, axis=-1)

@@ -21,7 +21,17 @@ Asserts, on the smallest traffic config:
    primes like the serial round, the steady state carries the documented
    one-round dataset lag, ``max_aip_staleness=0`` force-syncs every
    round and reproduces the sync sharded run, and the async run is
-   deterministic per seed.
+   deterministic per seed;
+6. the Pallas fast paths (now including the single-step ``gru_cell``
+   rollout dispatch) match the oracle path on the mesh, still auditing
+   collective-free;
+7. the region-decomposed GS (``repro.core.gs_sharded``): the sharded
+   collect on the FULL 8-shard mesh emits the replicated collector's
+   dataset (supplychain, 8 cells — one block per device), its program
+   audits halo-only, a sharded_gs-on powergrid DIALS run matches the
+   replicated-GS run (incl. under async collect, dispatched without
+   the spare-device copy), and traffic 2x2 at 4 shards auto-falls back
+   to the replicated GS (4 blocks cannot tile a 2-row grid).
 
 Prints MULTIDEVICE-OK on success.
 """
@@ -101,8 +111,11 @@ def main():
     runtime.assert_no_collectives(sharded._sharded.split_inner_jaxpr(),
                                   what="shard-train program")
 
-    # the sharded state really lived on the 4-shard mesh
+    # the sharded state really lived on the 4-shard mesh; traffic 2x2
+    # cannot tile 4 GS blocks (2 grid rows), so sharded_gs=auto must
+    # have fallen back to the replicated GS
     assert sharded._sharded.n_shards == 4
+    assert not sharded._sharded.use_sharded_gs
 
     # (5) async-collect contract on the real mesh
     assert runtime.spare_device(4) == jax.devices()[4]
@@ -165,6 +178,73 @@ def main():
     np.testing.assert_allclose(h_on[0]["aip_ce_after"],
                                h_off[0]["aip_ce_after"], atol=1e-5,
                                err_msg="kernelized held-out CE")
+
+    # (7) region-decomposed GS on the mesh
+    from repro.core import gs as gs_mod, gs_sharded
+    from repro.marl import policy as policy_mod
+
+    # (7a) sharded collect ≡ replicated collect on the FULL 8-shard mesh
+    # (supplychain line of 8 cells — one block per device)
+    env_mod, env_cfg = registry.make("supplychain", horizon=16, n_cells=8)
+    info = env_cfg.info()
+    pc = policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                 n_actions=info.n_actions, kind="fnn",
+                                 hidden=(16,), gru_hidden=8)
+    mesh = runtime.shard_mesh(8)
+    params = jax.vmap(lambda k: policy_mod.policy_init(k, pc))(
+        jax.random.split(jax.random.PRNGKey(3), info.n_agents))
+    rep_collect = gs_mod.make_collector(env_mod, env_cfg, pc,
+                                        n_envs=2, steps=16)
+    sh_collect = gs_sharded.make_sharded_collector(
+        env_mod, env_cfg, pc, n_envs=2, steps=16, mesh=mesh)
+    kc = jax.random.PRNGKey(4)
+    d_rep = rep_collect(params, kc)
+    d_sh = sh_collect(runtime.shard_agent_tree(params, mesh), kc)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(jax.device_get(b)),
+            err_msg="sharded-GS collect vs replicated"), d_rep, d_sh)
+    collect_jx = jax.make_jaxpr(sh_collect)(
+        jax.eval_shape(lambda: params),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    bodies = runtime.find_shard_map_jaxprs(collect_jx)
+    assert len(bodies) == 1
+    runtime.assert_only_halo_collectives(
+        bodies[0], what="8-shard collect body")
+
+    # (7b) a sharded_gs-on DIALS run (powergrid ring: 4 buses over 4
+    # shards, one block each) matches the replicated-GS run, and its
+    # round programs audit: train body collective-free, GS bodies
+    # halo-only
+    gs_on = build_trainer(env="powergrid")
+    s_gs_on, h_gs_on = gs_on.run(jax.random.PRNGKey(0))
+    assert gs_on._sharded.n_shards == 4
+    assert gs_on._sharded.use_sharded_gs
+    gs_on._sharded.audit_collectives()
+    assert len(gs_on._sharded.gs_jaxprs()) == 2     # collect + eval
+    gs_off = build_trainer(env="powergrid", sharded_gs="off")
+    s_gs_off, h_gs_off = gs_off.run(jax.random.PRNGKey(0))
+    assert not gs_off._sharded.use_sharded_gs
+    tree_close(s_gs_on["aips"], s_gs_off["aips"], 1e-6,
+               "AIP params (sharded GS vs replicated GS)")
+    tree_close(s_gs_on["ials"]["params"], s_gs_off["ials"]["params"],
+               1e-4, "policy params (sharded GS vs replicated GS)")
+    for r1, r2 in zip(h_gs_on, h_gs_off):
+        np.testing.assert_allclose(r1["gs_return"], r2["gs_return"],
+                                   atol=1e-5, err_msg="sharded-GS return")
+        np.testing.assert_allclose(r1["aip_ce_after"], r2["aip_ce_after"],
+                                   atol=1e-6, err_msg="sharded-GS CE")
+
+    # (7c) async collect with the sharded GS: dispatched WITHOUT the
+    # spare-device copy (the collect is a mesh program), one-round lag,
+    # prime round agrees with the sync sharded-GS run
+    gs_asy = build_trainer(env="powergrid", async_collect=True)
+    _, h_gs_asy = gs_asy.run(jax.random.PRNGKey(0))
+    assert gs_asy._sharded.use_sharded_gs
+    assert [r["data_round"] for r in h_gs_asy] == [0, 0], h_gs_asy
+    np.testing.assert_allclose(h_gs_asy[0]["gs_return"],
+                               h_gs_on[0]["gs_return"], atol=1e-5,
+                               err_msg="async sharded-GS prime round")
 
     print("MULTIDEVICE-OK")
     return 0

@@ -319,6 +319,33 @@ def test_nn_gru_sequence_routes_to_kernel():
     np.testing.assert_allclose(hs_on, hs_off, atol=1e-5, rtol=1e-5)
 
 
+def test_nn_gru_cell_routes_to_kernel():
+    """The single-step rollout path (policy_apply / aip_apply inside the
+    GS and LS rollouts) dispatches to the T=1 Pallas cell: 'on' matches
+    the op-level kernel exactly and the oracle to fp32 tolerance, under
+    plain calls AND vmapped over an agent axis (how the rollouts run
+    it); dtype contract follows the hidden state."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(14), 3)
+    params = gru_mod.gru_init(k1, gru_mod.GRUConfig(in_dim=5, hidden=8))
+    h = jax.random.normal(k2, (4, 8), jnp.float32)
+    x = jax.random.normal(k3, (4, 5), jnp.float32)
+    on = gru_mod.gru_cell(params, h, x, use_kernels="on")
+    off = gru_mod.gru_cell(params, h, x)                  # oracle default
+    kern = gru_ops.gru_cell(params, h, x, interpret=True)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(kern))
+    np.testing.assert_allclose(on, off, atol=1e-5, rtol=1e-5)
+    assert on.dtype == h.dtype
+    # a kernel step equals one step of the kernel scan (shared kernel)
+    hs, _ = gru_ops.gru_sequence(params, x[:, None, :], h, interpret=True)
+    np.testing.assert_array_equal(np.asarray(on), np.asarray(hs[:, 0]))
+    # vmapped over agents, as the stacked-policy rollout step runs it
+    stack = lambda t: jax.tree.map(lambda a: jnp.stack([a] * 3), t)
+    v_on = jax.vmap(lambda p, hh, xx: gru_mod.gru_cell(
+        p, hh, xx, use_kernels="on"))(stack(params), stack(h), stack(x))
+    v_off = jax.vmap(gru_mod.gru_cell)(stack(params), stack(h), stack(x))
+    np.testing.assert_allclose(v_on, v_off, atol=1e-5, rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # end-to-end: the kernelized hot paths match the oracle training paths
 # ---------------------------------------------------------------------------

@@ -3,7 +3,11 @@
 Every env registered in ``repro.envs.registry`` must satisfy the fPOSG
 module protocol of ``repro.envs.base``: EnvInfo shape consistency,
 GS↔LS exactness on the shared per-region transition (the IBA property
-the paper rests on), and jit/vmap-ability of ``gs_step``/``ls_step``.
+the paper rests on), jit/vmap-ability of ``gs_step``/``ls_step``, and
+the spatial-decomposition contract behind the sharded GS
+(``region_partition`` tiles the agents, ``boundary_influence``
+reproduces the replicated ``u``, and the block-decomposed rollout of
+``repro.core.gs_sharded`` equals the replicated trajectory bit-for-bit).
 A new env added to the registry inherits this whole suite for free."""
 import dataclasses
 
@@ -19,6 +23,13 @@ ENVS = registry.names()
 
 def _take(tree, i):
     return jax.tree.map(lambda x: x[i], tree)
+
+
+def _valid_block_counts(mod, cfg, max_blocks=None):
+    from repro.core import gs_sharded
+    n = cfg.info().n_agents
+    return [b for b in range(1, (max_blocks or n) + 1)
+            if gs_sharded.partition_supported(mod, cfg, b)[0]]
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +174,111 @@ def test_gs_ls_jit_vmap(name):
     locals2, lobs, lrew, ldone = v_ls_step(locals_, la, lu, lkeys)
     assert lobs.shape == (n_envs, n, info.obs_dim)
     assert lrew.shape == (n_envs, n) and ldone.shape == (n_envs, n)
+
+
+# ---------------------------------------------------------------------------
+# spatial decomposition (the sharded-GS contract, for every env)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ENVS)
+def test_region_partition_tiles_agents(name):
+    """Every supported block count is a contiguous, equal-size,
+    exactly-once cover of the agent axis; unsupported counts raise."""
+    mod, cfg = registry.make(name, side=2, horizon=10)
+    n = cfg.info().n_agents
+    valid = _valid_block_counts(mod, cfg)
+    assert 1 in valid, f"{name} must always support the 1-block split"
+    for n_blocks in valid:
+        part = np.asarray(mod.region_partition(cfg, n_blocks))
+        assert part.shape == (n,)
+        counts = np.bincount(part, minlength=n_blocks)
+        assert (counts == n // n_blocks).all(), \
+            f"{name}: blocks not equal-sized at {n_blocks}"
+        assert (np.diff(part) >= 0).all(), f"{name}: not contiguous"
+    with pytest.raises(ValueError):
+        mod.region_partition(cfg, n + 1)     # can never tile
+    # grid envs reject block counts that would split a row band
+    if name in ("traffic", "warehouse"):
+        assert 4 not in valid, \
+            f"{name} side=2 must reject 4 blocks (half-row bands)"
+
+
+@pytest.mark.parametrize("side", [2, 3])
+@pytest.mark.parametrize("name", ENVS)
+def test_boundary_influence_matches_replicated_u(name, side):
+    """``boundary_influence`` on agent-major full data reproduces the
+    realized ``u`` of ``gs_step_given`` bit-for-bit, along a rolled-out
+    trajectory (so states are not just the init distribution)."""
+    mod, cfg = registry.make(name, side=side, horizon=50)
+    info = cfg.info()
+    key = jax.random.PRNGKey(3)
+    state = mod.gs_init(key, cfg)
+    for _t in range(10):
+        key, ka, kx = jax.random.split(key, 3)
+        actions = jax.random.randint(ka, (info.n_agents,), 0,
+                                     info.n_actions)
+        exo = mod.gs_exo(kx, cfg)
+        u2 = mod.boundary_influence(mod.gs_locals(state, cfg), actions,
+                                    exo, cfg)
+        state, _, _, u, _ = mod.gs_step_given(state, actions, exo, cfg)
+        assert u2.dtype == u.dtype
+        np.testing.assert_array_equal(np.asarray(u2), np.asarray(u),
+                                      err_msg=f"{name} side={side}")
+
+
+@pytest.mark.parametrize("side", [2, 4])
+@pytest.mark.parametrize("name", ENVS)
+def test_block_decomposed_trajectory_is_bitwise(name, side):
+    """The tentpole property: the region-decomposed GS step of
+    ``repro.core.gs_sharded`` (block-local ``ls_step_given`` + one halo
+    exchange), driven here by ``vmap`` over the block axis with the
+    shard axis name, reproduces the replicated ``gs_step_given``
+    trajectory bit-for-bit under a shared exo stream. side=2 covers
+    every supported block count; side=4 runs only the largest supported
+    count (4+ blocks), where the 3-block halo window no longer covers
+    the whole system — the case that exercises the zero-padded rows of
+    ``boundary_influence`` for the grid envs too."""
+    from repro.core import gs_sharded
+    from repro.distributed import runtime
+    mod, cfg = registry.make(name, side=side, horizon=12)
+    info = cfg.info()
+    n = info.n_agents
+    counts = _valid_block_counts(mod, cfg)
+    if side > 2:
+        counts = [max(counts)]
+        assert counts[0] >= 4      # absent blocks really get zero rows
+    for n_blocks in counts:
+        bsz = n // n_blocks
+        stack = lambda x: x.reshape((n_blocks, bsz) + x.shape[1:])
+        unstack = lambda x: x.reshape((n,) + x.shape[2:])
+        block_step = gs_sharded.make_block_step(mod, cfg,
+                                                n_blocks=n_blocks)
+        stepper = jax.jit(jax.vmap(
+            block_step, in_axes=(0, None, 0, None),
+            out_axes=(0, 0, 0, 0, None, None),
+            axis_name=runtime.SHARD_AXIS))
+        key = jax.random.PRNGKey(11)
+        state = mod.gs_init(key, cfg)
+        loc = jax.tree.map(stack, mod.gs_locals(state, cfg))
+        t = state["t"]
+        for step_i in range(12):
+            key, ka, kx = jax.random.split(key, 3)
+            actions = jax.random.randint(ka, (n,), 0, info.n_actions)
+            exo = mod.gs_exo(kx, cfg)
+            state, obs_r, rew_r, u_r, done_r = mod.gs_step_given(
+                state, actions, exo, cfg)
+            loc, obs_b, rew_b, u_b, done_b, t = stepper(
+                loc, t, stack(actions), exo)
+            ref = mod.gs_locals(state, cfg)
+            for k in ref:
+                np.testing.assert_array_equal(
+                    np.asarray(unstack(loc[k])), np.asarray(ref[k]),
+                    err_msg=f"{name} b={n_blocks} {k} t={step_i}")
+            for got, want, what in ((u_b, u_r, "u"), (obs_b, obs_r, "obs"),
+                                    (rew_b, rew_r, "rew")):
+                np.testing.assert_array_equal(
+                    np.asarray(unstack(got)), np.asarray(want),
+                    err_msg=f"{name} b={n_blocks} {what} t={step_i}")
+            assert bool(done_b) == bool(done_r)
 
 
 # ---------------------------------------------------------------------------

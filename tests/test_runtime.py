@@ -69,6 +69,39 @@ def test_audit_recurses_into_cond():
     assert runtime.collectives_in_jaxpr(jx) & {"pmax", "psum"}
 
 
+def test_audit_only_halo_collectives():
+    """The sharded-GS whitelist: a halo exchange passes, psum fails, and
+    a program with no communication at all fails too (a 'decomposed' GS
+    that never exchanges halos is not decomposed). Traced through
+    shard_map — the audit's real substrate; vmap batching rules may
+    rewrite ppermute away entirely."""
+    from jax.sharding import PartitionSpec as P
+    mesh = runtime.shard_mesh(1)
+    spec = P(runtime.SHARD_AXIS)
+
+    def trace(body):
+        jx = jax.make_jaxpr(runtime.shard_map_nocheck(
+            body, mesh, in_specs=(spec,), out_specs=spec))(
+            jnp.arange(4.0))
+        bodies = runtime.find_shard_map_jaxprs(jx)
+        assert len(bodies) == 1
+        return bodies[0]
+
+    ring = trace(lambda x: collectives.halo_exchange(
+        x, runtime.SHARD_AXIS, axis_size=1)[0])
+    assert runtime.collectives_in_jaxpr(ring) == {"ppermute"}
+    runtime.assert_only_halo_collectives(ring)
+
+    summed = trace(lambda x: collectives.tree_psum(
+        x, runtime.SHARD_AXIS)[None][0])
+    with pytest.raises(AssertionError, match="psum"):
+        runtime.assert_only_halo_collectives(summed)
+
+    silent = trace(lambda x: x * 2)
+    with pytest.raises(AssertionError, match="no halo exchange"):
+        runtime.assert_only_halo_collectives(silent)
+
+
 # ---------------------------------------------------------------------------
 # mesh / placement helpers
 # ---------------------------------------------------------------------------
@@ -129,9 +162,9 @@ def test_pbroadcast_pytree_and_dtypes():
 # ---------------------------------------------------------------------------
 # sharded round body: collective-free by construction
 # ---------------------------------------------------------------------------
-def _tiny_runner(n_shards=1):
+def _tiny_runner(n_shards=1, **kw):
     from repro.core import dials_sharded
-    tr = build_trainer()
+    tr = build_trainer(**kw)
     return dials_sharded.ShardedDIALSRunner(
         tr.env_mod, tr.env_cfg, tr.policy_cfg, tr.aip_cfg, tr.ppo_cfg,
         tr.cfg, n_shards=n_shards)
@@ -141,23 +174,44 @@ def test_inner_round_body_is_collective_free():
     """The paper's runtime-stays-constant claim: between AIP refreshes the
     per-shard program (AIP train + staleness gate + F inner IALS+PPO
     steps) communicates with nobody. The audited jaxpr is EXTRACTED from
-    the traced round program (the round's one shard_map eqn), not
-    re-traced separately."""
+    the traced round program, not re-traced separately. With the
+    region-decomposed GS active (traffic tiles the 1-block split) the
+    round holds three shard_maps — collect, train, eval — of which
+    exactly the train body is collective-free and the GS bodies carry
+    only halo ppermutes."""
     runner = _tiny_runner(n_shards=1)
+    assert runner.use_sharded_gs
     jx = runner.inner_jaxpr()
     runtime.assert_no_collectives(jx, what="per-shard round body")
-    # sanity: the audit actually saw a non-trivial program, and the round
-    # program really contains exactly one shard_map
+    # sanity: the audit actually saw a non-trivial program
     assert {"scan", "dot_general"} <= runtime.jaxpr_primitives(jx)
+    assert len(runtime.find_shard_map_jaxprs(runner.round_jaxpr())) == 3
+    gs_bodies = runner.gs_jaxprs()
+    assert len(gs_bodies) == 2                    # collect + eval
+    for body in gs_bodies:
+        runtime.assert_only_halo_collectives(body)
+    runner.audit_collectives()
+
+
+def test_replicated_gs_fallback_has_one_shard_map():
+    """sharded_gs='off' restores the pre-decomposition program shape:
+    exactly one shard_map (the train body), replicated GS around it."""
+    runner = _tiny_runner(n_shards=1, sharded_gs="off")
+    assert not runner.use_sharded_gs
     assert len(runtime.find_shard_map_jaxprs(runner.round_jaxpr())) == 1
+    runtime.assert_no_collectives(runner.inner_jaxpr())
+    assert runner.gs_jaxprs() == []
+    runner.audit_collectives()
 
 
 def test_split_shard_train_program_is_collective_free():
     """The async-collect driver runs the SPLIT round: a collect program
     plus a shard-train program. The shard-train half (the one whose
-    shard_map body carries the freshness gate) must stay collective-free,
-    and the collect half must not touch the mesh at all (no shard_map —
-    it can run on a spare device)."""
+    shard_map body carries the freshness gate) must stay collective-free.
+    The region-decomposed collect half is one shard_map whose only
+    collectives are its halo ppermutes; with sharded_gs='off' it must
+    not touch the mesh at all (no shard_map — it can run on a spare
+    device)."""
     runner = _tiny_runner(n_shards=1)
     jx = runner.split_inner_jaxpr()
     runtime.assert_no_collectives(jx, what="shard-train program")
@@ -166,10 +220,42 @@ def test_split_shard_train_program_is_collective_free():
     params = jax.eval_shape(
         lambda k: runner.ials_init(k)["params"],
         jax.ShapeDtypeStruct((2,), jnp.uint32))
-    collect_jx = jax.make_jaxpr(runner.collect)(
-        params, jax.ShapeDtypeStruct((2,), jnp.uint32))
-    assert runtime.find_shard_map_jaxprs(collect_jx) == []
-    runtime.assert_no_collectives(collect_jx, what="collect program")
+    key_struct = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    collect_jx = jax.make_jaxpr(runner.collect)(params, key_struct)
+    bodies = runtime.find_shard_map_jaxprs(collect_jx)
+    assert len(bodies) == 1
+    runtime.assert_only_halo_collectives(
+        bodies[0], what="region-decomposed collect body")
+
+    rep = _tiny_runner(n_shards=1, sharded_gs="off")
+    rep_jx = jax.make_jaxpr(rep.collect)(params, key_struct)
+    assert runtime.find_shard_map_jaxprs(rep_jx) == []
+    runtime.assert_no_collectives(rep_jx, what="replicated collect")
+
+
+def test_sharded_gs_collect_matches_replicated_on_one_mesh():
+    """In-process cross-check of the two Algorithm-2 implementations:
+    on a 1-device mesh the region-decomposed collector must emit the
+    replicated collector's dataset EXACTLY (same key plumbing, same
+    per-agent arithmetic, replicated random bits sliced per block)."""
+    from repro.core import gs as gs_mod, gs_sharded
+    from repro.marl import policy as policy_mod
+    tr = build_trainer()
+    info = tr.env_cfg.info()
+    mesh = runtime.shard_mesh(1)
+    params = jax.vmap(
+        lambda k: policy_mod.policy_init(k, tr.policy_cfg))(
+        jax.random.split(jax.random.PRNGKey(5), info.n_agents))
+    rep = gs_mod.make_collector(tr.env_mod, tr.env_cfg, tr.policy_cfg,
+                                n_envs=2, steps=12)
+    shc = gs_sharded.make_sharded_collector(
+        tr.env_mod, tr.env_cfg, tr.policy_cfg, n_envs=2, steps=12,
+        mesh=mesh)
+    key = jax.random.PRNGKey(6)
+    d_rep, d_sh = rep(params, key), shc(params, key)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(jax.device_get(b))), d_rep, d_sh)
 
 
 def test_kernelized_inner_body_is_collective_free():
