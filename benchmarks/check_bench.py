@@ -1,0 +1,158 @@
+"""Benchmark regression gate — freshly produced bench JSON vs committed
+baseline.
+
+CI produces ``BENCH_dials_scaling.json`` / ``BENCH_kernels.json`` with
+the smoke runs and then calls this script; it fails (exit 1) when
+
+* a row present in the baseline is missing from the fresh artifact
+  (unless ``--subset`` — the kernels ``--fast`` smoke legitimately runs
+  fewer shapes than the committed full run),
+* a column present in a baseline row is missing from the matching fresh
+  row, or a cell that is non-null in the baseline comes back null
+  (a silently vanished measurement — e.g. the sharded-GS column going
+  null because a partition stopped tiling),
+* throughput regresses by more than ``--max-regression`` (default 25%)
+  on any comparable cell. Time-valued cells are compared as 1/t.
+  Cells are comparable only when the rows agree on their shape/config
+  columns (``B/T/in/H`` for kernel micro rows; scaling rows and
+  end-to-end kernel rows embed sizes in the label) — a ``--fast`` row
+  that re-uses a label at a smaller shape is structure-checked, never
+  time-compared.
+
+Baselines default to ``git show HEAD:<path>`` so the gate always diffs
+against what the commit under test claims; ``--baseline FILE`` overrides
+for local experiments.
+
+    PYTHONPATH=src python -m benchmarks.check_bench --which scaling
+    PYTHONPATH=src python -m benchmarks.check_bench --which kernels --subset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+SPECS = {
+    "scaling": {
+        "path": os.path.join("experiments", "bench",
+                             "BENCH_dials_scaling.json"),
+        "key": lambda r: r["label"],
+        "rows": lambda doc: doc,
+        # higher-better cells gated on regression; everything else is
+        # structure-checked only (ratio columns bounce with machine
+        # load; a vanished cell is the real signal)
+        "throughput": ("inner_steps_per_s", "inner_steps_per_s_async"),
+        "times": (),
+        "shape_cols": ("n_agents", "shards", "processes"),
+    },
+    "kernels": {
+        "path": "BENCH_kernels.json",
+        "key": lambda r: (r.get("kernel") or r.get("program"), r["label"]),
+        "rows": lambda doc: doc["micro"] + doc["end_to_end"],
+        "throughput": (),
+        # lower-better: compared as 1/t
+        "times": ("fwd_kernel_s", "fwdbwd_kernel_s", "kernel_s"),
+        "shape_cols": ("B", "T", "in", "H"),
+    },
+}
+
+
+def _load_baseline(path: str, baseline: str):
+    if baseline != "git:HEAD":
+        with open(baseline) as f:
+            return json.load(f)
+    out = subprocess.run(["git", "show", f"HEAD:{path}"],
+                         capture_output=True, text=True)
+    if out.returncode != 0:
+        raise SystemExit(f"no committed baseline for {path}: "
+                         f"{out.stderr.strip()}")
+    return json.loads(out.stdout)
+
+
+def _shapes_match(spec, base_row, fresh_row) -> bool:
+    return all(base_row.get(c) == fresh_row.get(c)
+               for c in spec["shape_cols"])
+
+
+def check(which: str, fresh_path: str, baseline: str, *,
+          max_regression: float, subset: bool):
+    spec = SPECS[which]
+    with open(fresh_path) as f:
+        fresh_doc = json.load(f)
+    base_doc = _load_baseline(spec["path"], baseline)
+    fresh = {spec["key"](r): r for r in spec["rows"](fresh_doc)}
+    base = {spec["key"](r): r for r in spec["rows"](base_doc)}
+    if not fresh:
+        return [f"{fresh_path}: no rows produced"]
+
+    problems = []
+    compared = 0
+    for key, brow in sorted(base.items(), key=str):
+        frow = fresh.get(key)
+        if frow is None:
+            if not subset:
+                problems.append(f"{key}: row missing from fresh artifact")
+            continue
+        for col, bval in brow.items():
+            if col not in frow:
+                problems.append(f"{key}: column {col!r} missing")
+                continue
+            if bval is not None and frow[col] is None:
+                problems.append(f"{key}: cell {col!r} went null "
+                                f"(baseline {bval})")
+        if not _shapes_match(spec, brow, frow):
+            continue                      # different shape: structure only
+        for col, lower_better in (
+                [(c, False) for c in spec["throughput"]] +
+                [(c, True) for c in spec["times"]]):
+            bval, fval = brow.get(col), frow.get(col)
+            if not (isinstance(bval, (int, float)) and
+                    isinstance(fval, (int, float)) and bval > 0 and
+                    fval > 0):
+                continue
+            tp_base, tp_fresh = ((1.0 / bval, 1.0 / fval)
+                                 if lower_better else (bval, fval))
+            regression = 1.0 - tp_fresh / tp_base
+            compared += 1
+            if regression > max_regression:
+                problems.append(
+                    f"{key}: {col} regressed {regression:.0%} "
+                    f"(baseline {bval:.6g}, fresh {fval:.6g}, "
+                    f"allowed {max_regression:.0%})")
+    print(f"# check_bench {which}: {len(base)} baseline rows, "
+          f"{len(fresh)} fresh rows, {compared} timing cells compared")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", required=True, choices=sorted(SPECS))
+    ap.add_argument("--fresh", default=None,
+                    help="fresh artifact (default: the canonical output "
+                         "path of the producing benchmark)")
+    ap.add_argument("--baseline", default="git:HEAD",
+                    help="baseline file, or git:HEAD for the committed "
+                         "artifact (default)")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="maximum tolerated throughput regression "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--subset", action="store_true",
+                    help="tolerate baseline rows absent from the fresh "
+                         "artifact (smoke runs sweeping fewer shapes)")
+    args = ap.parse_args()
+    fresh_path = args.fresh or SPECS[args.which]["path"]
+    problems = check(args.which, fresh_path, args.baseline,
+                     max_regression=args.max_regression,
+                     subset=args.subset)
+    for p in problems:
+        print(f"REGRESSION {p}")
+    if problems:
+        return 1
+    print(f"# check_bench {args.which}: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

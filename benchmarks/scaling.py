@@ -33,12 +33,23 @@ jax, so it must run as its own process:
 
     PYTHONPATH=src python -m benchmarks.scaling [--fast]
         [--shards 1,2,4,8,16] [--scenarios traffic-2x2,powergrid-ring16]
+
+``--processes P1,P2,...`` additionally sweeps real multi-process
+execution: for each P > 1 the script re-launches itself as P coordinated
+``jax.distributed`` CPU processes (repro.launch.variants.launch_group /
+repro.distributed.bootstrap — each process forces max_shards/P host
+devices, so the global device count matches the single-process run) and
+merges the measured rows, labelled ``{scenario}-s{shards}-p{P}`` with a
+``processes`` column, into the same artifact. Shard counts that cannot
+be balanced over P processes are skipped; the shards=1 unfused baseline
+only exists at P=1.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import sys
 import time
 
 OUT_PATH = os.path.join("experiments", "bench", "BENCH_dials_scaling.json")
@@ -89,13 +100,15 @@ def _make_collect_ab(env_mod, env_cfg, pc, *, n_envs, steps):
     return ab
 
 
-def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
+def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps,
+           processes=1):
     # imported late: main() must set XLA_FLAGS first
     import jax
     from benchmarks.run import _setup
     from repro.core import dials
     from repro.launch import variants
 
+    suffix = f"-p{processes}" if processes > 1 else ""
     rows = []
     for scenario in scenarios:
         env_name, side = variants.MARL_SCENARIOS[scenario]
@@ -108,6 +121,10 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
             if n % shards:
                 print(f"# skip {scenario} shards={shards}: "
                       f"{n} agents not divisible")
+                continue
+            if shards % processes:
+                print(f"# skip {scenario} shards={shards}: cannot "
+                      f"balance over {processes} processes")
                 continue
             # every cell runs twice: collect on the critical path
             # (async_collect=False) vs overlapped (True)
@@ -134,8 +151,9 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
             steady = steady_by_mode[False]
             inner_steps = cfg.aip_refresh * cfg.n_envs * \
                 cfg.rollout_steps * n                  # F * E * T * N
-            row = {"label": f"{scenario}-s{shards}",
+            row = {"label": f"{scenario}-s{shards}{suffix}",
                    "scenario": scenario, "n_agents": n, "shards": shards,
+                   "processes": processes,
                    "fused": shards > 1,
                    "round_s": steady,
                    "round_s_async": steady_by_mode[True],
@@ -154,6 +172,30 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps):
     return rows
 
 
+def _spawn_group(args, processes, shard_counts, rows_path) -> None:
+    """Re-launch this script as ``processes`` coordinated jax.distributed
+    processes; rank 0 writes its rows to ``rows_path``."""
+    from repro.launch import variants
+
+    local = max(s for s in shard_counts if s % processes == 0) // processes
+    argv = [sys.executable, "-m", "benchmarks.scaling",
+            "--shards", args.shards, "--scenarios", args.scenarios,
+            "--rows-out", rows_path]
+    if args.rounds is not None:
+        argv += ["--rounds", str(args.rounds)]
+    if args.fast:
+        argv.append("--fast")
+    # children must not inherit a forced device count from the parent's
+    # own sweep: bootstrap sets their XLA_FLAGS from DIALS_LOCAL_DEVICES
+    env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
+    procs = variants.launch_group(argv, processes=processes,
+                                  local_devices=local, env=env)
+    rcs = [p.wait() for p in procs]
+    if any(rcs):
+        raise SystemExit(
+            f"--processes {processes} group failed, exit codes {rcs}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
@@ -170,6 +212,12 @@ def main() -> None:
                          "line16 defaults are the side-4 16-agent cells "
                          "exercising shards 8/16)")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--processes", default="1",
+                    help="comma-separated process counts; each P > 1 "
+                         "re-launches the sweep as P coordinated "
+                         "jax.distributed CPU processes and merges the "
+                         "rows (labelled -pP)")
+    ap.add_argument("--rows-out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
     shard_counts = sorted({int(s) for s in args.shards.split(",")})
@@ -181,16 +229,51 @@ def main() -> None:
     inner = 4 if args.fast else 20
     collect_steps = 32 if args.fast else 64
 
-    # multiple shards need multiple devices — force them before jax loads
-    n_dev = max(shard_counts)
-    if n_dev > 1:
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "") +
-            f" --xla_force_host_platform_device_count={n_dev}").strip()
+    from repro.distributed import bootstrap
+    group = bootstrap.config_from_env()
+    if group is not None:
+        # child mode: one rank of a --processes group. bootstrap (which
+        # applies the forced device count and joins the coordination
+        # service) must run before the sweep's jax import.
+        ctx = bootstrap.bootstrap(group)
+        rows = _sweep(scenarios, shard_counts, rounds=rounds, inner=inner,
+                      collect_steps=collect_steps,
+                      processes=ctx.num_processes)
+        if ctx.is_primary:
+            if not args.rows_out:
+                raise SystemExit("group child needs --rows-out")
+            with open(args.rows_out, "w") as f:
+                json.dump(rows, f, default=float)
+        return
 
-    rows = _sweep(scenarios, shard_counts, rounds=rounds, inner=inner,
-                  collect_steps=collect_steps)
+    process_counts = sorted({int(p) for p in args.processes.split(",")})
+    rows = []
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    for processes in process_counts:
+        if processes <= 1:
+            # in-process, exactly the historical single-process sweep;
+            # multiple shards need multiple devices — force them before
+            # jax loads
+            n_dev = max(shard_counts)
+            if n_dev > 1:
+                os.environ["XLA_FLAGS"] = (
+                    os.environ.get("XLA_FLAGS", "") +
+                    f" --xla_force_host_platform_device_count={n_dev}"
+                ).strip()
+            rows.extend(_sweep(scenarios, shard_counts, rounds=rounds,
+                               inner=inner, collect_steps=collect_steps))
+            continue
+        if all(s % processes for s in shard_counts):
+            print(f"# skip processes={processes}: no shard count "
+                  f"balances over it")
+            continue
+        rows_path = os.path.join(os.path.dirname(OUT_PATH),
+                                 f".rows-p{processes}.json")
+        _spawn_group(args, processes, shard_counts, rows_path)
+        with open(rows_path) as f:
+            rows.extend(json.load(f))
+        os.remove(rows_path)
+
     with open(OUT_PATH, "w") as f:
         json.dump(rows, f, indent=1, default=float)
     print("name,metric,value")

@@ -22,7 +22,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import registry
 from repro.data import pipeline
 from repro.models import api
-from repro.optim import adamw, clip, compress, outer, schedule
+from repro.optim import adamw, clip, outer, schedule
 
 
 def main():

@@ -215,11 +215,23 @@ class DIALSTrainer:
 
     # -- Algorithm 1 --------------------------------------------------------
     def run(self, key, *, log: Optional[Callable] = None,
-            straggler_mask: Optional[Callable] = None):
+            straggler_mask: Optional[Callable] = None,
+            heartbeats: Optional[Callable] = None):
         """Runs ``outer_rounds`` rounds of (collect → AIP train → F inner
         steps). Returns (state, history). ``straggler_mask(round) ->
         (N,) {0,1}`` simulates late shards (bounded-staleness refresh,
         force-refreshed past ``max_aip_staleness``).
+
+        ``heartbeats(round) -> iterable of dead host (process) ids``
+        turns host loss survivable: called at the top of every round
+        (typically ``fault.HostMonitor.gate``), and when it reports a
+        host dead, that host's agent blocks are reassigned to the
+        surviving shards on a shrunken mesh and training continues —
+        the round record carries ``n_shards``/``reassigned``/
+        ``dead_hosts``. Requires the sharded path. Detection is at
+        round granularity: a host that dies *inside* a round program
+        stalls that program's collectives — the monitor converts silence
+        *between* rounds into a plan.
 
         Dispatches to the agent-sharded fused runtime whenever more than
         one device is visible (or ``cfg.shards`` forces a mesh); both
@@ -231,7 +243,13 @@ class DIALSTrainer:
         n_shards = self._select_shards()
         if n_shards:
             return self._run_sharded(state, n_shards, log=log,
-                                     straggler_mask=straggler_mask)
+                                     straggler_mask=straggler_mask,
+                                     heartbeats=heartbeats)
+        if heartbeats is not None:
+            raise ValueError(
+                "heartbeats= (elastic host-loss handling) requires the "
+                "sharded runtime — the single-device loop path has no "
+                "mesh to shrink")
         if cfg.sharded_gs == "on":
             # honor the forced mode instead of silently benchmarking the
             # replicated GS: the region-decomposed GS is a mesh program
@@ -335,36 +353,92 @@ class DIALSTrainer:
                 self.ppo_cfg, self.cfg, n_shards=n_shards)
         return self._sharded
 
-    def _run_sharded(self, state, n_shards: int, *, log, straggler_mask):
+    def _make_sharded_collector(self, runner):
+        """Async double-buffer for the sharded path — dispatch mode only:
+        a host thread could race the donation. The region-decomposed
+        collect is a mesh program — it runs on the shard devices
+        themselves, so it is dispatched directly, without the
+        spare-device input copy (JAX async dispatch still enqueues it
+        ahead of the train program). ``spare_device`` is None on a
+        multi-process mesh (runtime.spare_device owns that guard)."""
+        from repro.distributed import runtime as runtime_lib
+        return async_mod.AsyncCollector(
+            runner.collect, mode="dispatch",
+            spare_device=(None if runner.use_sharded_gs else
+                          runtime_lib.spare_device(runner.n_shards)))
+
+    def _reassign(self, runner, carry, mirror, collector, dead_hosts):
+        """Elastic shard reassignment after host loss.
+
+        The dead hosts' shard slots are dropped, ``fault.elastic_plan``
+        re-tiles the agent axis over the survivors, a new runner is
+        built on the shrunken mesh, and the carry is re-placed from the
+        host ``mirror`` (the end-of-previous-round snapshot every host
+        holds — the on-mesh carry references the dead process's buffers
+        and is unusable). Any in-flight async collect belongs to the
+        dead mesh and is discarded; the next ``obtain`` force-syncs.
+        Returns ``(runner, carry, collector, n_reassigned_blocks)``."""
+        from repro.core import dials_sharded
+        from repro.distributed import runtime as runtime_lib
+        dead_shards = runtime_lib.shards_on_hosts(runner.mesh, dead_hosts)
+        if not dead_shards:
+            return runner, carry, collector, 0
+        plan = fault.elastic_plan(self.info.n_agents, runner.n_shards,
+                                  dead_shards)
+        survivors = runtime_lib.surviving_devices(runner.mesh, dead_hosts)
+        new_mesh = runtime_lib.shard_mesh(plan.new_shards,
+                                          devices=survivors)
+        runner = dials_sharded.ShardedDIALSRunner(
+            self.env_mod, self.env_cfg, self.policy_cfg, self.aip_cfg,
+            self.ppo_cfg, self.cfg, mesh=new_mesh)
+        self._sharded = runner
+        carry = fault.reshard_agents(mirror, new_mesh)
+        if collector is not None:
+            collector.close()
+            collector = self._make_sharded_collector(runner)
+        return runner, carry, collector, len(dead_shards)
+
+    def _run_sharded(self, state, n_shards: int, *, log, straggler_mask,
+                     heartbeats=None):
         """The same round loop over the mesh. Sync: one fused donated
         program per round. Async: the round is split into a collect
         program and a shard-train program — round k+1's collect is
         dispatched (onto a spare device when one exists) BEFORE round k's
         shard-train program, so it runs while the shard_map section does.
         Dispatch order also makes this donation-safe: the collect is
-        enqueued with the pre-donation parameter buffers."""
+        enqueued with the pre-donation parameter buffers.
+
+        With ``heartbeats`` set the run is *elastic*: every round ends
+        by refreshing a host-side mirror of the carry (an all-gather on
+        a multi-process mesh — the availability tax), and a lapsed
+        heartbeat at the top of a round triggers ``_reassign`` before
+        training continues on the shrunken mesh."""
         from repro.distributed import runtime as runtime_lib
         cfg = self.cfg
         runner = self._sharded_runner(n_shards)
         n = self.info.n_agents
         base_key = state["key"]
+        if (self.manager is not None
+                and runtime_lib.mesh_spans_processes(runner.mesh)):
+            raise ValueError(
+                "checkpointing on a mesh spanning processes is not "
+                "supported — run with ckpt_dir=None under multi-host")
         carry = runner.shard_carry(
             {"aips": state["aips"], "ials": state["ials"],
              "reports": jnp.full((n,), state["round"] - 1, jnp.int32)})
-        collector = None
-        if cfg.async_collect:
-            # dispatch mode only: a host thread could race the donation.
-            # The region-decomposed collect is a mesh program — it runs
-            # on the shard devices themselves, so it is dispatched
-            # directly, without the spare-device input copy (JAX async
-            # dispatch still enqueues it ahead of the train program).
-            collector = async_mod.AsyncCollector(
-                runner.collect, mode="dispatch",
-                spare_device=(None if runner.use_sharded_gs else
-                              runtime_lib.spare_device(runner.n_shards)))
+        collector = (self._make_sharded_collector(runner)
+                     if cfg.async_collect else None)
+        elastic = heartbeats is not None
+        mirror = runner.unshard_carry(carry) if elastic else None
         history = []
         t_start = time.time()
         for rnd in range(state["round"], cfg.outer_rounds):
+            dead_hosts, reassigned = (), 0
+            if elastic:
+                dead_hosts = tuple(heartbeats(rnd))
+                if dead_hosts:
+                    runner, carry, collector, reassigned = self._reassign(
+                        runner, carry, mirror, collector, dead_hosts)
             mask = (jnp.asarray(straggler_mask(rnd), jnp.float32)
                     if straggler_mask is not None and not cfg.untrained
                     else jnp.ones((n,), jnp.float32))
@@ -395,10 +469,15 @@ class DIALSTrainer:
                    "data_round": int(raw["data_round"]),
                    "stale_forced": int(raw["stale_forced"]),
                    "forced_sync": bool(forced_sync),
+                   "n_shards": runner.n_shards,
+                   "reassigned": reassigned,
+                   "dead_hosts": list(dead_hosts),
                    "wall_s": time.time() - t_start}
             history.append(rec)
             if log:
                 log(rec)
+            if elastic:
+                mirror = runner.unshard_carry(carry)
             if self.manager is not None:
                 # device_get inside save() copies out before the next
                 # round donates these buffers

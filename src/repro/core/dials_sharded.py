@@ -332,5 +332,8 @@ class ShardedDIALSRunner:
 
     def unshard_carry(self, carry):
         """Fetch a mesh-resident carry back to host-addressable arrays
-        (checkpointing, path switching)."""
-        return jax.tree.map(jax.device_get, carry)
+        (checkpointing, path switching, the elastic driver's host
+        mirror). On a mesh spanning processes this is an all-gather —
+        every process ends up holding every agent's block, which is
+        exactly what lets a surviving host adopt a dead host's agents."""
+        return runtime_lib.fetch_tree(carry)

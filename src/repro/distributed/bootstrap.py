@@ -1,0 +1,191 @@
+"""Multi-host bootstrap — ``jax.distributed`` initialization for DIALS.
+
+Everything above this layer (the sharded runner, the region-decomposed
+GS, the benchmarks) is written against a *global* device mesh; the only
+thing standing between the single-process ``("shards",)`` mesh and a
+real multi-host one is process coordination. This module owns it:
+
+* :func:`config_from_env` / :func:`add_arguments` — one process-group
+  contract (coordinator address, process count, process id, optional
+  forced host-device count) readable from env vars or CLI flags, so a
+  launcher (``benchmarks/scaling.py --processes N``,
+  ``launch.variants.launch_group``, SLURM wrappers) and the launched
+  process agree by construction.
+* :func:`bootstrap` — the one call a process makes before touching any
+  device: applies the forced host-device count to ``XLA_FLAGS`` (must
+  happen before the backend initializes), selects the gloo CPU
+  collectives implementation (cross-process ``ppermute``/``psum`` on
+  CPU hosts — the halo exchange of the sharded GS rides on it), and
+  calls ``jax.distributed.initialize``. A process with no group config
+  gets a valid single-process :class:`DistContext` back — every caller
+  can bootstrap unconditionally.
+
+Env vars (the ``DIALS_`` namespace, mirrored by the CLI flags):
+
+``DIALS_COORDINATOR``     host:port of process 0's coordination service
+``DIALS_NUM_PROCESSES``   total process count
+``DIALS_PROCESS_ID``      this process's id in [0, num_processes)
+``DIALS_LOCAL_DEVICES``   optional: force this many host CPU devices
+                          (``--xla_force_host_platform_device_count``)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Mapping, Optional
+
+ENV_COORDINATOR = "DIALS_COORDINATOR"
+ENV_NUM_PROCESSES = "DIALS_NUM_PROCESSES"
+ENV_PROCESS_ID = "DIALS_PROCESS_ID"
+ENV_LOCAL_DEVICES = "DIALS_LOCAL_DEVICES"
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+@dataclasses.dataclass(frozen=True)
+class BootstrapConfig:
+    """The process-group contract a coordinated process starts from."""
+    coordinator: str
+    num_processes: int
+    process_id: int
+    local_devices: Optional[int] = None
+
+    def __post_init__(self):
+        if self.num_processes < 1:
+            raise ValueError(f"num_processes must be >= 1, "
+                             f"got {self.num_processes}")
+        if not 0 <= self.process_id < self.num_processes:
+            raise ValueError(
+                f"process_id {self.process_id} outside "
+                f"[0, {self.num_processes})")
+
+    def env(self) -> dict:
+        """The env-var block that reproduces this config in a child
+        process (the launcher side of the contract)."""
+        out = {ENV_COORDINATOR: self.coordinator,
+               ENV_NUM_PROCESSES: str(self.num_processes),
+               ENV_PROCESS_ID: str(self.process_id)}
+        if self.local_devices is not None:
+            out[ENV_LOCAL_DEVICES] = str(self.local_devices)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """What :func:`bootstrap` hands back: where this process sits."""
+    process_id: int
+    num_processes: int
+    coordinator: Optional[str]
+    initialized: bool            # did jax.distributed.initialize run?
+
+    @property
+    def is_primary(self) -> bool:
+        return self.process_id == 0
+
+    @property
+    def distributed(self) -> bool:
+        return self.num_processes > 1
+
+
+def config_from_env(
+        environ: Mapping[str, str] = os.environ) -> Optional[BootstrapConfig]:
+    """The env-var side of the contract; None when no group is declared
+    (single-process run). Partial declarations are an error — a process
+    that was *meant* to join a group must never silently run solo."""
+    keys = (ENV_COORDINATOR, ENV_NUM_PROCESSES, ENV_PROCESS_ID)
+    present = [k for k in keys if environ.get(k)]
+    if not present:
+        return None
+    missing = [k for k in keys if not environ.get(k)]
+    if missing:
+        raise ValueError(
+            f"incomplete multi-host declaration: {present} set "
+            f"but {missing} missing")
+    local = environ.get(ENV_LOCAL_DEVICES)
+    return BootstrapConfig(
+        coordinator=environ[ENV_COORDINATOR],
+        num_processes=int(environ[ENV_NUM_PROCESSES]),
+        process_id=int(environ[ENV_PROCESS_ID]),
+        local_devices=int(local) if local else None)
+
+
+def add_arguments(parser) -> None:
+    """CLI flags mirroring the env vars (flags win where both are set)."""
+    parser.add_argument("--coordinator", default=None,
+                        help="host:port of process 0's jax.distributed "
+                             f"coordination service (or ${ENV_COORDINATOR})")
+    parser.add_argument("--num-processes", type=int, default=None,
+                        help=f"total process count (or ${ENV_NUM_PROCESSES})")
+    parser.add_argument("--process-id", type=int, default=None,
+                        help=f"this process's id (or ${ENV_PROCESS_ID})")
+    parser.add_argument("--local-devices", type=int, default=None,
+                        help="force this many host CPU devices "
+                             f"(or ${ENV_LOCAL_DEVICES})")
+
+
+def config_from_args(args, environ: Mapping[str, str] = os.environ
+                     ) -> Optional[BootstrapConfig]:
+    """Resolve :func:`add_arguments` flags over the env (CLI wins
+    field-wise)."""
+    base = config_from_env(environ)
+    fields = {"coordinator": args.coordinator,
+              "num_processes": args.num_processes,
+              "process_id": args.process_id,
+              "local_devices": args.local_devices}
+    if all(v is None for v in fields.values()):
+        return base
+    merged = dataclasses.asdict(base) if base is not None else {
+        "coordinator": None, "num_processes": 1, "process_id": 0,
+        "local_devices": None}
+    merged.update({k: v for k, v in fields.items() if v is not None})
+    if merged["coordinator"] is None and merged["num_processes"] > 1:
+        raise ValueError("--num-processes > 1 requires --coordinator")
+    if merged["coordinator"] is None:
+        # device forcing without a group: still useful (single-process
+        # mesh emulation), handled below without initialize()
+        return BootstrapConfig(coordinator="", num_processes=1,
+                               process_id=0,
+                               local_devices=merged["local_devices"])
+    return BootstrapConfig(**merged)
+
+
+def force_host_devices(n: int, environ=os.environ) -> None:
+    """Append the forced-host-device XLA flag. Must run before the jax
+    backend initializes (importing jax is fine; creating arrays is not)."""
+    flags = environ.get("XLA_FLAGS", "")
+    if _FORCE_FLAG in flags:
+        return
+    environ["XLA_FLAGS"] = f"{flags} {_FORCE_FLAG}={n}".strip()
+
+
+def bootstrap(cfg: Optional[BootstrapConfig] = None, *,
+              environ: Mapping[str, str] = os.environ) -> DistContext:
+    """Initialize this process's place in the (possibly 1-process) group.
+
+    Call once, before any jax device use. Idempotent for the
+    single-process case; a second distributed call raises (jax owns that
+    invariant). Order matters inside: XLA flags first (backend reads
+    them at first device query), the gloo CPU-collectives selection
+    second (cross-process collectives on CPU need a real transport —
+    without it the first halo exchange dies inside XLA), initialize
+    last.
+    """
+    if cfg is None:
+        cfg = config_from_env(environ)
+    if cfg is not None and cfg.local_devices is not None:
+        force_host_devices(cfg.local_devices, environ=os.environ)
+    if cfg is None or cfg.num_processes <= 1:
+        return DistContext(process_id=0, num_processes=1, coordinator=None,
+                           initialized=False)
+
+    import jax
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, ValueError):     # non-CPU build / renamed knob
+        pass
+    jax.distributed.initialize(coordinator_address=cfg.coordinator,
+                               num_processes=cfg.num_processes,
+                               process_id=cfg.process_id)
+    return DistContext(process_id=jax.process_index(),
+                       num_processes=jax.process_count(),
+                       coordinator=cfg.coordinator, initialized=True)

@@ -12,11 +12,20 @@ else on slightly-stale influence. These utilities implement that:
   fresh AIP/grad only for shards that reported in time.
 * :func:`reshard` — elastic scaling: move a checkpointed pytree onto a new
   mesh (different shape or device count) via resolved shardings.
+* :func:`elastic_plan` / :class:`ElasticPlan` — the host-loss extension of
+  the straggler plan: when a host's heartbeat lapses for good, its agent
+  blocks are reassigned to the surviving shards on a shrunken mesh and
+  training continues (DARL1N-style degradation instead of a crash).
+* :class:`HostMonitor` — the heartbeat itself: a shared-directory beat
+  file per host per round, with a timeout-gated wait that converts a
+  silent host into a ``dead`` verdict every surviving host agrees on.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+import os
+import time
+from typing import Dict, List, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +71,140 @@ def masked_tree_update(old_tree, new_tree, fresh_mask: jax.Array):
         return old * (1 - m) + new * m
 
     return jax.tree.map(sel, old_tree, new_tree)
+
+
+# ---------------------------------------------------------------------------
+# Elastic shard reassignment (host loss)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """Where every agent block lands after dead shards are removed.
+
+    The straggler plan reassigns a late shard's *work* for one round; an
+    elastic plan reassigns a dead host's *agents* permanently: the mesh
+    shrinks from ``old_shards`` to ``new_shards`` and the agent axis is
+    re-tiled over the survivors. Because the agent-sharded state is
+    resharded as a whole (``reshard_agents``), ownership after the move
+    is simply the new even tiling — the plan records it so drivers and
+    tests can assert the partition without touching devices."""
+    n_agents: int
+    old_shards: int
+    new_shards: int
+    dead: Tuple[int, ...]            # dead shard ids in the OLD mesh
+    survivors: Tuple[int, ...]       # surviving old shard ids, in order
+
+    def __post_init__(self):
+        if self.n_agents % self.old_shards or self.n_agents % self.new_shards:
+            raise ValueError(
+                f"{self.n_agents} agents must tile both the old "
+                f"({self.old_shards}) and new ({self.new_shards}) meshes")
+
+    def agent_owner(self, agent: int) -> int:
+        """New shard id owning ``agent`` after the move (even tiling)."""
+        if not 0 <= agent < self.n_agents:
+            raise ValueError(f"agent {agent} outside [0, {self.n_agents})")
+        return agent // (self.n_agents // self.new_shards)
+
+    def owner(self, block: int) -> int:
+        """New shard id owning OLD shard ``block``'s first agent — the
+        work-unit view, mirroring :meth:`StragglerPlan.owner`."""
+        if not 0 <= block < self.old_shards:
+            raise ValueError(f"block {block} outside [0, {self.old_shards})")
+        return self.agent_owner(block * (self.n_agents // self.old_shards))
+
+    @property
+    def reassigned_blocks(self) -> Tuple[int, ...]:
+        return self.dead
+
+
+def elastic_plan(n_agents: int, n_shards: int,
+                 dead: Sequence[int]) -> ElasticPlan:
+    """Plan the shrink after ``dead`` shards (hosts' shard slots) vanish.
+
+    The new shard count is the largest divisor of ``n_agents`` that fits
+    the surviving slots (``runtime.choose_shards``) — agents always tile
+    exactly, even when the survivor count doesn't divide them."""
+    from repro.distributed import runtime
+    dead_set = set(dead)
+    if not dead_set <= set(range(n_shards)):
+        raise ValueError(f"dead shards {sorted(dead_set)} outside "
+                         f"[0, {n_shards})")
+    survivors = tuple(i for i in range(n_shards) if i not in dead_set)
+    if not survivors:
+        raise RuntimeError("all shards dead — nothing to reassign to")
+    new_shards = runtime.choose_shards(n_agents, len(survivors))
+    return ElasticPlan(n_agents=n_agents, old_shards=n_shards,
+                       new_shards=new_shards, dead=tuple(sorted(dead_set)),
+                       survivors=survivors)
+
+
+# Logical rule for per-agent stacked state: leading axis "agents" maps to
+# the 1-D ("shards",) mesh axis.
+AGENT_RULES = (("agents", "shards"),)
+
+
+def reshard_agents(tree, new_mesh):
+    """Move an agent-stacked pytree (every leaf leading axis N) onto a
+    new/shrunken ``("shards",)`` mesh — the tensor half of an
+    :class:`ElasticPlan`.
+
+    When the shrunken mesh still spans several surviving processes,
+    plain ``device_put`` (what :func:`reshard` does) is not legal for
+    host data; the tree is first brought fully to host and re-placed
+    slice-by-slice via the runtime's per-host plumbing."""
+    from repro.distributed import runtime
+    if runtime.mesh_spans_processes(new_mesh):
+        return runtime.shard_agent_tree(runtime.fetch_tree(tree), new_mesh)
+    spec = jax.tree.map(lambda _: ("agents",), tree)
+    return reshard(tree, spec, new_mesh, rules=AGENT_RULES)
+
+
+class HostMonitor:
+    """File-based heartbeat over a shared directory.
+
+    Each host writes ``beat-{host}-{round}`` at the top of every round;
+    :meth:`gate` then waits (up to ``timeout_s``) for every peer's beat
+    for that round and returns the set of hosts that never produced one.
+    Death is sticky: a host declared dead is never waited on again, so
+    the surviving hosts keep full speed after a loss. A shared
+    filesystem is the one medium that survives the peer's process — the
+    in-band channel (collectives) is exactly what a dead host hangs.
+    """
+
+    def __init__(self, directory: str, *, host: int, n_hosts: int,
+                 timeout_s: float = 30.0, poll_s: float = 0.05):
+        self.directory = directory
+        self.host = int(host)
+        self.n_hosts = int(n_hosts)
+        self.timeout_s = float(timeout_s)
+        self.poll_s = float(poll_s)
+        self.dead: Set[int] = set()
+        os.makedirs(directory, exist_ok=True)
+
+    def _beat_path(self, host: int, rnd: int) -> str:
+        return os.path.join(self.directory, f"beat-{host}-{rnd}")
+
+    def beat(self, rnd: int) -> None:
+        path = self._beat_path(self.host, rnd)
+        with open(path + ".tmp", "w") as f:      # atomic publish
+            f.write(str(time.time()))
+        os.replace(path + ".tmp", path)
+
+    def gate(self, rnd: int) -> Tuple[int, ...]:
+        """Beat for ``rnd``, wait for live peers' beats, return newly
+        dead hosts (empty tuple = everyone alive)."""
+        self.beat(rnd)
+        waiting = {h for h in range(self.n_hosts)
+                   if h != self.host and h not in self.dead}
+        deadline = time.monotonic() + self.timeout_s
+        while waiting and time.monotonic() < deadline:
+            waiting = {h for h in waiting
+                       if not os.path.exists(self._beat_path(h, rnd))}
+            if waiting:
+                time.sleep(self.poll_s)
+        newly_dead = tuple(sorted(waiting))
+        self.dead |= waiting
+        return newly_dead
 
 
 # ---------------------------------------------------------------------------

@@ -64,23 +64,89 @@ def choose_shards(n_agents: int, n_devices: Optional[int] = None) -> int:
 
 def shard_mesh(n_shards: Optional[int] = None, *,
                devices: Optional[Iterable] = None) -> Mesh:
-    """1-D ``("shards",)`` mesh over the first ``n_shards`` devices."""
-    devices = list(devices) if devices is not None else jax.devices()
+    """1-D ``("shards",)`` mesh over ``n_shards`` devices.
+
+    Single process: the first ``n_shards`` of ``jax.devices()``, as
+    before. Multi-process (``jax.distributed`` initialized): the mesh
+    takes ``n_shards / process_count`` devices from EVERY process, in
+    process order — each host owns a contiguous block of shards, which
+    is both the layout the elastic reassignment reasons about
+    (:func:`shards_on_hosts`) and the one that keeps every process
+    addressable in every program (a process with no devices in a
+    sharding cannot even call the jit that uses it)."""
+    if devices is not None:
+        devices = list(devices)
+        if n_shards is None:
+            n_shards = len(devices)
+        if n_shards > len(devices):
+            raise ValueError(
+                f"asked for {n_shards} shards but only "
+                f"{len(devices)} devices")
+        return Mesh(np.array(devices[:n_shards]), (SHARD_AXIS,))
+
+    all_devices = jax.devices()
+    nproc = jax.process_count()
     if n_shards is None:
-        n_shards = len(devices)
-    if n_shards > len(devices):
+        n_shards = len(all_devices)
+    if n_shards > len(all_devices):
         raise ValueError(
-            f"asked for {n_shards} shards but only {len(devices)} devices")
-    return Mesh(np.array(devices[:n_shards]), (SHARD_AXIS,))
+            f"asked for {n_shards} shards but only "
+            f"{len(all_devices)} devices")
+    if nproc <= 1:
+        return Mesh(np.array(all_devices[:n_shards]), (SHARD_AXIS,))
+    if n_shards % nproc:
+        raise ValueError(
+            f"{n_shards} shards cannot be balanced over {nproc} "
+            f"processes (must divide evenly)")
+    per = n_shards // nproc
+    by_proc: dict = {}
+    for d in all_devices:
+        by_proc.setdefault(d.process_index, []).append(d)
+    if any(len(ds) < per for ds in by_proc.values()):
+        raise ValueError(
+            f"{n_shards} shards need {per} devices per process; some "
+            f"process has fewer")
+    chosen = [d for pid in sorted(by_proc) for d in by_proc[pid][:per]]
+    return Mesh(np.array(chosen), (SHARD_AXIS,))
+
+
+def mesh_hosts(mesh: Mesh) -> tuple:
+    """Sorted process ids whose devices participate in ``mesh``."""
+    return tuple(sorted({d.process_index for d in mesh.devices.flat}))
+
+
+def mesh_spans_processes(mesh: Mesh) -> bool:
+    return len(mesh_hosts(mesh)) > 1
+
+
+def shards_on_hosts(mesh: Mesh, hosts) -> tuple:
+    """Shard indices (positions along the ``shards`` axis) whose device
+    lives on one of ``hosts`` — the work units orphaned when those hosts
+    die."""
+    hosts = set(hosts)
+    return tuple(i for i, d in enumerate(mesh.devices.flat)
+                 if d.process_index in hosts)
+
+
+def surviving_devices(mesh: Mesh, dead_hosts) -> list:
+    """``mesh``'s devices minus the dead hosts', in shard order."""
+    dead = set(dead_hosts)
+    return [d for d in mesh.devices.flat if d.process_index not in dead]
 
 
 def spare_device(n_in_use: int):
-    """First device beyond the first ``n_in_use``, or None.
+    """First local device beyond the first ``n_in_use``, or None.
 
     The sharded runtime puts the ``("shards",)`` mesh on the first
     ``n_shards`` devices; when the machine has more, the overlapped GS
     collect (repro.distributed.async_collect) runs on the next one so it
-    never contends with the shard-train program's devices."""
+    never contends with the shard-train program's devices.
+
+    Multi-process: always None. The collect is a *global* program there
+    — its arrays span processes and cannot be device_put onto one spare
+    — so the async collector falls back to in-stream dispatch."""
+    if jax.process_count() > 1:
+        return None
     devices = jax.devices()
     return devices[n_in_use] if len(devices) > n_in_use else None
 
@@ -116,9 +182,49 @@ def replicated_sharding(mesh: Mesh) -> NamedSharding:
 
 def shard_agent_tree(tree, mesh: Mesh):
     """Place a pytree whose every leaf has leading agent axis N onto the
-    mesh, N/num_shards agents per device."""
+    mesh, N/num_shards agents per device.
+
+    On a single-process mesh this is a plain ``device_put``. On a mesh
+    spanning processes, ``device_put`` of a host array is not legal —
+    instead each process materializes ONLY the slices its local devices
+    own (``jax.make_array_from_callback``), which is also the point:
+    per-host data plumbing ships a host its own agents' block, never the
+    global state."""
     sh = agent_sharding(mesh)
-    return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+    if not mesh_spans_processes(mesh):
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    def place(x):
+        if isinstance(x, jax.Array) and not x.is_fully_addressable:
+            # already a global array (e.g. a replicated-GS collect
+            # output): reshard in-stream instead of round-tripping
+            # through the host
+            return jax.jit(lambda a: a, out_shardings=sh)(x)
+        x = np.asarray(x)
+        return jax.make_array_from_callback(x.shape, sh,
+                                            lambda idx: x[idx])
+    return jax.tree.map(place, tree)
+
+
+def fetch_tree(tree):
+    """Bring a (possibly cross-process-sharded) pytree to host numpy.
+
+    Single-process arrays are just ``device_get``. Arrays with
+    non-addressable shards are first made fully replicated via a jit'd
+    identity (an all-gather under the hood — every process ends up
+    holding every agent's block), after which each process can read them
+    locally. This is the mirror the elastic driver keeps so that
+    surviving hosts can re-materialize a dead host's agents."""
+    def fetch(x):
+        if not hasattr(x, "sharding"):
+            return np.asarray(x)
+        if getattr(x, "is_fully_addressable", True):
+            return np.asarray(jax.device_get(x))
+        mesh = x.sharding.mesh
+        rep = jax.jit(lambda a: a,
+                      out_shardings=NamedSharding(mesh, P()))(x)
+        return np.asarray(jax.device_get(rep))
+    return jax.tree.map(fetch, tree)
 
 
 def local_slice_struct(tree, n_shards: int):

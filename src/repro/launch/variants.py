@@ -181,6 +181,37 @@ def marl_scenario(name, **overrides):
     return registry.make(env_name, side=side, **overrides)
 
 
+def launch_group(argv, *, processes, local_devices=None, env=None,
+                 cwd=None, stdout=None, stderr=None):
+    """Fork ``processes`` coordinated ``jax.distributed`` CPU processes
+    running ``argv``, wired through the ``DIALS_*`` bootstrap contract
+    (repro.distributed.bootstrap): a free coordinator port is picked,
+    every child gets its rank/count/coordinator env vars (plus the
+    forced host-device count when ``local_devices`` is set), and each
+    child's own ``bootstrap.bootstrap()`` call joins the group. Returns
+    the list of ``subprocess.Popen`` handles in rank order — the caller
+    owns waiting and exit-code policy."""
+    import os
+    import socket
+    import subprocess
+
+    from repro.distributed import bootstrap
+
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    procs = []
+    for rank in range(processes):
+        cfg = bootstrap.BootstrapConfig(
+            coordinator=f"127.0.0.1:{port}", num_processes=processes,
+            process_id=rank, local_devices=local_devices)
+        procs.append(subprocess.Popen(
+            argv, env={**(env if env is not None else os.environ),
+                       **cfg.env()},
+            cwd=cwd, stdout=stdout, stderr=stderr))
+    return procs
+
+
 def dials_variant_for(shards, async_collect=False, sharded_gs="auto"):
     """§DIALS runtime knobs: ``DIALSConfig`` overrides — the resolver
     behind every ``--shards N`` / ``--async-collect`` / ``--sharded-gs``

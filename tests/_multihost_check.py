@@ -1,0 +1,130 @@
+"""Multi-host contract check for the sharded DIALS runtime.
+
+Run by ``tests/test_multihost.py`` as coordinated ``jax.distributed``
+subprocesses (2 processes × 4 forced host devices = 8 global devices).
+Three modes, selected by ``--mode``:
+
+* ``reference`` — single process, 4 forced devices, 4-shard powergrid
+  run (the sharded numbers PR 2/5 pinned to the single-device path).
+  Writes params/AIPs/history to ``--out``.
+* ``sharded``   — the same run on a 4-shard mesh spanning BOTH
+  processes (2 devices each): the region-decomposed GS's halo
+  exchange and the replicated fallback's gathers both cross the
+  process boundary for real. Process 0 writes the same dump; the test
+  asserts it matches ``reference`` to the PR-2 tolerances.
+* ``hostdrop``  — elastic reassignment end-to-end: a 4-round traffic
+  run on the cross-process mesh in which process 1 SIGKILLs itself at
+  the top of round 2. Process 0's ``fault.HostMonitor`` times out,
+  the driver reassigns the dead host's agent blocks onto a shrunken
+  2-shard local mesh, training completes, and the round records carry
+  the reassignment. Process 0 writes the history and exits via
+  ``os._exit(0)`` (the normal interpreter exit would hang in the
+  distributed-shutdown barrier against a dead peer).
+
+Prints MULTIHOST-OK on success (process 0).
+"""
+import argparse
+import json
+import os
+import signal
+import sys
+
+# bootstrap BEFORE any jax device use (repro imports are fine — they
+# don't touch the backend at import time)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.distributed import bootstrap  # noqa: E402
+
+ctx = bootstrap.bootstrap()
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from _multidevice_check import build_trainer  # noqa: E402
+from repro.distributed import fault, runtime  # noqa: E402
+
+
+def dump(path, state, history):
+    """JSON dump of the run's observables: every param leaf (flattened,
+    deterministic order) plus the round records."""
+    leaves = {
+        "aips": [np.asarray(x).tolist()
+                 for x in jax.tree.leaves(state["aips"])],
+        "params": [np.asarray(x).tolist()
+                   for x in jax.tree.leaves(state["ials"]["params"])],
+    }
+    with open(path, "w") as f:
+        json.dump({"history": history, **leaves}, f)
+
+
+def run_reference(out):
+    assert ctx.num_processes == 1 and len(jax.devices()) == 4, \
+        (ctx, jax.devices())
+    trainer = build_trainer(env="powergrid", shards=4)
+    state, history = trainer.run(jax.random.PRNGKey(0))
+    assert trainer._sharded.use_sharded_gs
+    dump(out, state, history)
+    print("MULTIHOST-OK")
+
+
+def run_sharded(out):
+    assert ctx.num_processes == 2, ctx
+    assert len(jax.devices()) == 8 and len(jax.local_devices()) == 4, \
+        jax.devices()
+    trainer = build_trainer(env="powergrid", shards=4)
+    # the 4-shard mesh must take 2 devices from EACH process
+    state, history = trainer.run(jax.random.PRNGKey(0))
+    mesh = trainer._sharded.mesh
+    assert runtime.mesh_hosts(mesh) == (0, 1), mesh
+    assert runtime.mesh_spans_processes(mesh)
+    assert trainer._sharded.use_sharded_gs     # halo exchange crosses hosts
+    if ctx.is_primary:
+        dump(out, state, history)
+        print("MULTIHOST-OK")
+
+
+def run_hostdrop(out, beat_dir):
+    assert ctx.num_processes == 2, ctx
+    monitor = fault.HostMonitor(beat_dir, host=ctx.process_id, n_hosts=2,
+                                timeout_s=10.0)
+
+    def heartbeats(rnd):
+        if ctx.process_id == 1 and rnd >= 2:
+            # round 1's program and mirror all-gather have completed
+            # globally (this process's round-1 sync blocked on them), so
+            # the survivor's state is whole — die without a trace
+            os.kill(os.getpid(), signal.SIGKILL)
+        return monitor.gate(rnd)
+
+    trainer = build_trainer(env="traffic", shards=4, outer_rounds=4)
+    state, history = trainer.run(jax.random.PRNGKey(0),
+                                 heartbeats=heartbeats)
+    # only the survivor reaches this point
+    assert ctx.process_id == 0
+    assert [r["n_shards"] for r in history] == [4, 4, 2, 2], history
+    assert history[2]["dead_hosts"] == [1] and \
+        history[2]["reassigned"] == 2, history[2]
+    assert all(np.isfinite(r["gs_return"]) for r in history), history
+    dump(out, state, history)
+    print("MULTIHOST-OK", flush=True)
+    # skip the distributed-shutdown barrier: the peer is dead
+    os._exit(0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", required=True,
+                    choices=["reference", "sharded", "hostdrop"])
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--beat-dir", default=None)
+    args = ap.parse_args()
+    if args.mode == "reference":
+        run_reference(args.out)
+    elif args.mode == "sharded":
+        run_sharded(args.out)
+    else:
+        run_hostdrop(args.out, args.beat_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,6 +19,10 @@ def pytest_addoption(parser):
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test, needs --run-slow")
+    # registered even when pytest-timeout is absent locally, so the
+    # per-test @pytest.mark.timeout overrides never warn
+    config.addinivalue_line(
+        "markers", "timeout(seconds): per-test timeout (pytest-timeout)")
 
 
 def pytest_collection_modifyitems(config, items):

@@ -45,6 +45,122 @@ def test_straggler_plan_deterministic_and_total(n, data):
 
 
 # ---------------------------------------------------------------------------
+# elastic shard reassignment (host loss)
+# ---------------------------------------------------------------------------
+def test_elastic_plan_ownership_is_a_partition():
+    plan = fault.elastic_plan(8, 4, dead=[1, 3])
+    assert plan.survivors == (0, 2)
+    assert plan.new_shards == 2            # choose_shards(8, 2)
+    owners = [plan.agent_owner(a) for a in range(8)]
+    # every agent has exactly one owner and blocks stay contiguous
+    assert owners == [0, 0, 0, 0, 1, 1, 1, 1]
+    for s in range(plan.new_shards):
+        assert owners.count(s) == plan.n_agents // plan.new_shards
+
+
+def test_elastic_plan_dead_blocks_land_on_survivors():
+    plan = fault.elastic_plan(8, 4, dead=[2, 3])
+    assert plan.reassigned_blocks == (2, 3)
+    for block in plan.dead:
+        assert 0 <= plan.owner(block) < plan.new_shards
+    # the old healthy blocks also map into the shrunken mesh
+    for block in range(plan.old_shards):
+        assert 0 <= plan.owner(block) < plan.new_shards
+
+
+def test_elastic_plan_non_divisible_survivors_pick_divisor():
+    # 3 survivors do not divide 8 agents: the plan shrinks to 2 shards
+    # (largest divisor that fits) rather than leaving a ragged tile
+    plan = fault.elastic_plan(8, 4, dead=[1])
+    assert plan.survivors == (0, 2, 3)
+    assert plan.new_shards == 2
+
+
+def test_elastic_plan_all_dead_raises():
+    with pytest.raises(RuntimeError):
+        fault.elastic_plan(4, 2, dead=[0, 1])
+    with pytest.raises(ValueError):
+        fault.elastic_plan(4, 2, dead=[5])
+
+
+@given(st.integers(1, 6), st.integers(1, 5), st.data())
+@settings(max_examples=40, deadline=None)
+def test_elastic_plan_partition_property(blocks_per_shard, n_shards, data):
+    n_agents = n_shards * blocks_per_shard
+    dead = data.draw(st.lists(st.integers(0, n_shards - 1), max_size=n_shards - 1,
+                              unique=True)) if n_shards > 1 else []
+    plan = fault.elastic_plan(n_agents, n_shards, dead)
+    per = n_agents // plan.new_shards
+    counts = [0] * plan.new_shards
+    for a in range(n_agents):
+        counts[plan.agent_owner(a)] += 1
+    assert counts == [per] * plan.new_shards
+
+
+def test_host_monitor_detects_silent_host(tmp_path):
+    m0 = fault.HostMonitor(str(tmp_path), host=0, n_hosts=2,
+                           timeout_s=0.5, poll_s=0.01)
+    m1 = fault.HostMonitor(str(tmp_path), host=1, n_hosts=2,
+                           timeout_s=0.5, poll_s=0.01)
+    # both alive: beat each other for round 0
+    m1.beat(0)
+    assert m0.gate(0) == ()
+    # host 1 goes silent for round 1: timeout -> declared dead
+    assert m0.gate(1) == (1,)
+    assert m0.dead == {1}
+    # sticky: a dead host is never waited on (or re-reported) again
+    assert m0.gate(2) == ()
+
+
+def test_reshard_agents_roundtrips_through_fault_reshard():
+    """Shrinking an agent-stacked tree from a 4-shard to a 2-shard mesh
+    (the elastic move) preserves values and places each old block on the
+    shard the plan assigns. Subprocess with 8 forced devices so the main
+    process keeps its single CPU device."""
+    import os
+    import subprocess
+    import sys
+    code = """
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed import fault, runtime
+
+n_agents = 8
+tree = {'w': jnp.arange(n_agents * 3, dtype=jnp.float32).reshape(n_agents, 3),
+        'r': jnp.arange(n_agents, dtype=jnp.int32)}
+old_mesh = runtime.shard_mesh(4)
+placed = runtime.shard_agent_tree(tree, old_mesh)
+
+plan = fault.elastic_plan(n_agents, 4, dead=[2, 3])
+survivors = [d for i, d in enumerate(old_mesh.devices.flat)
+             if i not in plan.dead]
+new_mesh = runtime.shard_mesh(plan.new_shards, devices=survivors)
+out = fault.reshard_agents(placed, new_mesh)
+
+np.testing.assert_array_equal(np.asarray(out['w']), np.asarray(tree['w']))
+np.testing.assert_array_equal(np.asarray(out['r']), np.asarray(tree['r']))
+assert out['w'].sharding.mesh.shape == {'shards': 2}
+
+# per-device slices match the plan's even tiling: new shard s owns
+# agents [s*per, (s+1)*per)
+per = n_agents // plan.new_shards
+for db in out['w'].addressable_shards:
+    lo = db.index[0].start or 0
+    np.testing.assert_array_equal(
+        np.asarray(db.data), np.asarray(tree['w'][lo:lo + per]))
+for a in range(n_agents):
+    assert plan.agent_owner(a) == a // per
+print('reshard-agents ok')
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd="/root/repo", timeout=900,
+                         env={**os.environ, "PYTHONPATH": "src"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "reshard-agents ok" in out.stdout
+
+
+# ---------------------------------------------------------------------------
 # bounded-staleness updates + heartbeat
 # ---------------------------------------------------------------------------
 def test_masked_tree_update_mixes_per_agent():
