@@ -11,13 +11,20 @@ the smoke runs and then calls this script; it fails (exit 1) when
   row, or a cell that is non-null in the baseline comes back null
   (a silently vanished measurement — e.g. the sharded-GS column going
   null because a partition stopped tiling),
+* a fresh row violates its typed schema from ``repro.obs.metrics``
+  (``SCALING_ROW_SCHEMA`` / ``KERNELS_MICRO_SCHEMA`` /
+  ``KERNELS_E2E_SCHEMA``) — unknown columns, missing required columns,
+  nulls or wrong types where the schema forbids them; the gate and
+  live runtime telemetry validate against the same module,
 * throughput regresses by more than ``--max-regression`` (default 25%)
   on any comparable cell. Time-valued cells are compared as 1/t.
   Cells are comparable only when the rows agree on their shape/config
   columns (``B/T/in/H`` for kernel micro rows; scaling rows and
   end-to-end kernel rows embed sizes in the label) — a ``--fast`` row
   that re-uses a label at a smaller shape is structure-checked, never
-  time-compared.
+  time-compared. Every regression message carries the row's phase
+  breakdown (``metrics.phase_breakdown``) so the report says *where*
+  the regressed cell's time goes, not just that it regressed.
 
 Baselines default to ``git show HEAD:<path>`` so the gate always diffs
 against what the commit under test claims; ``--baseline FILE`` overrides
@@ -34,6 +41,11 @@ import os
 import subprocess
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.obs import metrics  # noqa: E402
+
 SPECS = {
     "scaling": {
         "path": os.path.join("experiments", "bench",
@@ -46,6 +58,7 @@ SPECS = {
         "throughput": ("inner_steps_per_s", "inner_steps_per_s_async"),
         "times": (),
         "shape_cols": ("n_agents", "shards", "processes"),
+        "schema": lambda r: metrics.SCALING_ROW_SCHEMA,
     },
     "kernels": {
         "path": "BENCH_kernels.json",
@@ -55,6 +68,10 @@ SPECS = {
         # lower-better: compared as 1/t
         "times": ("fwd_kernel_s", "fwdbwd_kernel_s", "kernel_s"),
         "shape_cols": ("B", "T", "in", "H"),
+        # micro rows carry "kernel", end-to-end rows carry "program"
+        "schema": lambda r: (metrics.KERNELS_MICRO_SCHEMA
+                             if "kernel" in r else
+                             metrics.KERNELS_E2E_SCHEMA),
     },
 }
 
@@ -88,6 +105,13 @@ def check(which: str, fresh_path: str, baseline: str, *,
         return [f"{fresh_path}: no rows produced"]
 
     problems = []
+    # schema gate: every fresh row must be a valid typed record — an
+    # unknown or missing column fails fast before any timing comparison
+    for key, frow in sorted(fresh.items(), key=str):
+        for p in metrics.validate_bench_row(frow, spec["schema"](frow)):
+            problems.append(f"{key}: {p}")
+    if problems:
+        return problems
     compared = 0
     for key, brow in sorted(base.items(), key=str):
         frow = fresh.get(key)
@@ -120,7 +144,8 @@ def check(which: str, fresh_path: str, baseline: str, *,
                 problems.append(
                     f"{key}: {col} regressed {regression:.0%} "
                     f"(baseline {bval:.6g}, fresh {fval:.6g}, "
-                    f"allowed {max_regression:.0%})")
+                    f"allowed {max_regression:.0%}; phases: "
+                    f"{metrics.phase_breakdown(frow, spec['schema'](frow))})")
     print(f"# check_bench {which}: {len(base)} baseline rows, "
           f"{len(fresh)} fresh rows, {compared} timing cells compared")
     return problems

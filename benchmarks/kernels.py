@@ -276,6 +276,20 @@ def main() -> None:
         "micro": bench_gru(args.fast) + bench_gae(args.fast),
         "end_to_end": bench_end_to_end(args.fast),
     }
+    # schema gate before the artifact is written (same typed vocabulary
+    # check_bench.py validates against)
+    from repro.obs import metrics as obs_metrics
+    problems = [p for r in record["micro"]
+                for p in obs_metrics.validate_bench_row(
+                    r, obs_metrics.KERNELS_MICRO_SCHEMA)]
+    problems += [p for r in record["end_to_end"]
+                 for p in obs_metrics.validate_bench_row(
+                     r, obs_metrics.KERNELS_E2E_SCHEMA)]
+    if problems:
+        for p in problems:
+            print(f"SCHEMA-INVALID {p}")
+        raise SystemExit(f"{len(problems)} kernel bench rows violate "
+                         f"the KERNELS_* schemas")
     with open(OUT_PATH, "w") as f:
         json.dump(record, f, indent=1, default=float)
     print("name,metric,value")

@@ -281,21 +281,31 @@ def main() -> None:
                     help="region-decomposed GS collect/eval on the mesh "
                          "(auto = whenever the env partition supports "
                          "the shard count)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture an XLA profiler trace of the whole "
+                         "sweep into this directory "
+                         "(jax.profiler.start_trace; inspect with "
+                         "TensorBoard/xprof — repro.obs.trace spans "
+                         "appear as TraceAnnotations)")
     args = ap.parse_args()
     names = [args.only] if args.only else list(BENCHES)
     print("name,metric,value")
-    for n in names:
-        fn = BENCHES[n]
-        kw = {"fast": args.fast}
-        if "shards" in inspect.signature(fn).parameters:
-            kw["shards"] = args.shards
-        if "async_collect" in inspect.signature(fn).parameters:
-            kw["async_collect"] = args.async_collect
-        if "use_kernels" in inspect.signature(fn).parameters:
-            kw["use_kernels"] = args.use_kernels
-        if "sharded_gs" in inspect.signature(fn).parameters:
-            kw["sharded_gs"] = args.sharded_gs
-        fn(**kw)
+    from repro.obs import trace as obs_trace
+    with obs_trace.profile(args.profile_dir):
+        for n in names:
+            fn = BENCHES[n]
+            kw = {"fast": args.fast}
+            if "shards" in inspect.signature(fn).parameters:
+                kw["shards"] = args.shards
+            if "async_collect" in inspect.signature(fn).parameters:
+                kw["async_collect"] = args.async_collect
+            if "use_kernels" in inspect.signature(fn).parameters:
+                kw["use_kernels"] = args.use_kernels
+            if "sharded_gs" in inspect.signature(fn).parameters:
+                kw["sharded_gs"] = args.sharded_gs
+            fn(**kw)
+    if args.profile_dir:
+        print(f"# profiler trace written to {args.profile_dir}")
 
 
 if __name__ == "__main__":

@@ -101,7 +101,7 @@ def _make_collect_ab(env_mod, env_cfg, pc, *, n_envs, steps):
 
 
 def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps,
-           processes=1):
+           processes=1, telemetry_dir=None):
     # imported late: main() must set XLA_FLAGS first
     import jax
     from benchmarks.run import _setup
@@ -130,10 +130,19 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps,
             # (async_collect=False) vs overlapped (True)
             steady_by_mode, total_by_mode = {}, {}
             for overlap in (False, True):
+                # per-cell telemetry subdir: each (cell, mode) run gets
+                # its own event log, so round indices stay monotone per
+                # file and tools.telemetry_report --check passes per dir
+                cell_tel = None
+                if telemetry_dir:
+                    cell_tel = os.path.join(
+                        telemetry_dir,
+                        f"{scenario}-s{shards}{suffix}-"
+                        f"{'async' if overlap else 'sync'}")
                 cfg = dials.DIALSConfig(
                     outer_rounds=rounds, aip_refresh=inner, collect_envs=4,
                     collect_steps=collect_steps, n_envs=8, rollout_steps=16,
-                    eval_episodes=4,
+                    eval_episodes=4, telemetry_dir=cell_tel,
                     **variants.dials_variant_for(shards, overlap))
                 tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac,
                                         ppo_cfg, cfg)
@@ -185,6 +194,9 @@ def _spawn_group(args, processes, shard_counts, rows_path) -> None:
         argv += ["--rounds", str(args.rounds)]
     if args.fast:
         argv.append("--fast")
+    if args.telemetry_dir:
+        # shared dir: every rank writes its own telemetry-p{rank}.jsonl
+        argv += ["--telemetry-dir", args.telemetry_dir]
     # children must not inherit a forced device count from the parent's
     # own sweep: bootstrap sets their XLA_FLAGS from DIALS_LOCAL_DEVICES
     env = {k: v for k, v in os.environ.items() if k != "XLA_FLAGS"}
@@ -217,6 +229,16 @@ def main() -> None:
                          "re-launches the sweep as P coordinated "
                          "jax.distributed CPU processes and merges the "
                          "rows (labelled -pP)")
+    ap.add_argument("--telemetry-dir", default=None,
+                    help="emit per-round typed telemetry (repro.obs) — "
+                         "one subdirectory of JSONL event logs per "
+                         "(cell, sync/async) run, merged to "
+                         "telemetry.jsonl at the end; render/validate "
+                         "with tools.telemetry_report")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture an XLA profiler trace of the "
+                         "single-process sweep into this directory "
+                         "(ignored for --processes > 1 groups)")
     ap.add_argument("--rows-out", default=None, help=argparse.SUPPRESS)
     args = ap.parse_args()
 
@@ -238,7 +260,8 @@ def main() -> None:
         ctx = bootstrap.bootstrap(group)
         rows = _sweep(scenarios, shard_counts, rounds=rounds, inner=inner,
                       collect_steps=collect_steps,
-                      processes=ctx.num_processes)
+                      processes=ctx.num_processes,
+                      telemetry_dir=args.telemetry_dir)
         if ctx.is_primary:
             if not args.rows_out:
                 raise SystemExit("group child needs --rows-out")
@@ -260,8 +283,12 @@ def main() -> None:
                     os.environ.get("XLA_FLAGS", "") +
                     f" --xla_force_host_platform_device_count={n_dev}"
                 ).strip()
-            rows.extend(_sweep(scenarios, shard_counts, rounds=rounds,
-                               inner=inner, collect_steps=collect_steps))
+            from repro.obs import trace as obs_trace
+            with obs_trace.profile(args.profile_dir):
+                rows.extend(_sweep(scenarios, shard_counts, rounds=rounds,
+                                   inner=inner,
+                                   collect_steps=collect_steps,
+                                   telemetry_dir=args.telemetry_dir))
             continue
         if all(s % processes for s in shard_counts):
             print(f"# skip processes={processes}: no shard count "
@@ -274,6 +301,19 @@ def main() -> None:
             rows.extend(json.load(f))
         os.remove(rows_path)
 
+    # schema gate before the artifact is written: every row must be a
+    # valid typed scaling record (repro.obs.metrics.SCALING_ROW_SCHEMA) —
+    # check_bench and live telemetry then share one vocabulary
+    from repro.obs import metrics as obs_metrics
+    problems = [p for r in rows
+                for p in obs_metrics.validate_bench_row(
+                    r, obs_metrics.SCALING_ROW_SCHEMA)]
+    if problems:
+        for p in problems:
+            print(f"SCHEMA-INVALID {p}", file=sys.stderr)
+        raise SystemExit(f"{len(problems)} scaling rows violate "
+                         f"SCALING_ROW_SCHEMA")
+
     with open(OUT_PATH, "w") as f:
         json.dump(rows, f, indent=1, default=float)
     print("name,metric,value")
@@ -282,6 +322,19 @@ def main() -> None:
             if k not in ("label", "scenario"):
                 print(f"dials_scaling.{r['label']},{k},{v}")
     print(f"# wrote {OUT_PATH}")
+
+    if args.telemetry_dir:
+        # merge every cell's per-process logs into a telemetry.jsonl so
+        # the uploaded artifact is readable without this package
+        from repro.obs import sinks as obs_sinks
+        merged = 0
+        for root, _dirs, files in sorted(os.walk(args.telemetry_dir)):
+            if any(f.startswith("telemetry-p") and f.endswith(".jsonl")
+                   for f in files):
+                obs_sinks.merge_dir(root)
+                merged += 1
+        print(f"# merged telemetry in {merged} cell dir(s) under "
+              f"{args.telemetry_dir}")
 
 
 if __name__ == "__main__":

@@ -46,6 +46,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import gs as gs_mod
 from repro.core import ials as ials_mod
@@ -55,6 +56,7 @@ from repro.distributed import fault
 from repro.marl import policy as policy_mod
 from repro.marl import ppo as ppo_mod
 from repro.marl import runner as runner_mod
+from repro.obs import metrics as obs_metrics
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +98,15 @@ class DIALSConfig:
     # default to auto = kernel on TPU, oracle elsewhere); an explicit
     # "on"/"off" here overrides all three (repro.kernels.dispatch).
     use_kernels: str = "auto"
+    # Runtime observability (repro.obs): a shared directory for
+    # per-process JSONL event logs (typed round records, collect/fault
+    # events). None = disabled — no files, no overhead, and (on the
+    # sharded path) provably no change to the traced round program.
+    telemetry_dir: Optional[str] = None
+    # Fence host spans with block_until_ready for honest device timings
+    # (loop path only — the sharded round is one fused program). Off by
+    # default: fencing adds host syncs the drivers otherwise avoid.
+    telemetry_fence: bool = False
 
 
 def apply_kernel_mode(policy_cfg, aip_cfg, ppo_cfg, mode: str):
@@ -203,7 +214,7 @@ class DIALSTrainer:
         collect randomness for any given round."""
         return jax.random.split(jax.random.fold_in(base_key, rnd), 3)[0]
 
-    def _make_collector_executor(self):
+    def _make_collector_executor(self, telemetry=obs.DISABLED):
         """Loop-path executor: a host worker thread driving the same
         jitted collector (safe here — this path never donates buffers).
         Placement is deliberately left untouched: committing the dataset
@@ -211,7 +222,8 @@ class DIALSTrainer:
         inner steps) into recompiles and cross-device transfers. The
         sharded driver is the one that collects on a spare device — it
         re-places the dataset onto the mesh explicitly."""
-        return async_mod.AsyncCollector(self.collect, mode="thread")
+        return async_mod.AsyncCollector(self.collect, mode="thread",
+                                        telemetry=telemetry)
 
     # -- Algorithm 1 --------------------------------------------------------
     def run(self, key, *, log: Optional[Callable] = None,
@@ -258,15 +270,24 @@ class DIALSTrainer:
                 "one device, or DIALSConfig.shards > 1); the "
                 "single-device loop path always uses the replicated GS")
         n = self.info.n_agents
-        collector = (self._make_collector_executor()
+        tel = obs.maybe(cfg.telemetry_dir, fence=cfg.telemetry_fence)
+        kernels = obs_metrics.kernel_summary(self.policy_cfg, self.aip_cfg,
+                                             self.ppo_cfg)
+        collector = (self._make_collector_executor(tel)
                      if cfg.async_collect else None)
         # collection round of each agent's newest trained-on dataset;
         # resume treats the checkpointed AIPs as fresh at their round
         reports = jnp.full((n,), state["round"] - 1, jnp.int32)
         history = []
         t_start = time.time()
+        tel.emit("run_start", path="loop", env=self.info.name,
+                 n_shards=1, start_round=state["round"],
+                 outer_rounds=cfg.outer_rounds,
+                 async_collect=cfg.async_collect, kernels=kernels)
         try:
             for rnd in range(state["round"], cfg.outer_rounds):
+                tel.reset_spans()
+                t_round = time.perf_counter()
                 key = jax.random.fold_in(state["key"], rnd)
                 kc, kt, ke = jax.random.split(key, 3)
 
@@ -275,62 +296,90 @@ class DIALSTrainer:
                 # a blocking collect) and launch the NEXT round's collect
                 # under THIS round's entry policy — it overlaps the F
                 # inner steps below and is consumed one round later.
-                if collector is not None:
-                    tagged, forced_sync = collector.obtain(
-                        rnd, state["ials"]["params"], kc,
-                        max_staleness=cfg.max_aip_staleness)
-                    # pipeline the next round's collect — unless the
-                    # bound forbids any lag (a tag-rnd dataset could
-                    # never be consumed at rnd+1, so don't collect it)
-                    if (rnd + 1 < cfg.outer_rounds and collector.idle()
-                            and cfg.max_aip_staleness > 0):
-                        collector.submit(
-                            state["ials"]["params"],
-                            self._collect_key(state["key"], rnd + 1), rnd)
-                    data, data_round = tagged.data, tagged.round
-                else:
-                    data = self.collect(state["ials"]["params"], kc)
-                    data_round, forced_sync = rnd, False
+                with tel.span("collect") as sp:
+                    if collector is not None:
+                        tagged, forced_sync = collector.obtain(
+                            rnd, state["ials"]["params"], kc,
+                            max_staleness=cfg.max_aip_staleness)
+                        # pipeline the next round's collect — unless the
+                        # bound forbids any lag (a tag-rnd dataset could
+                        # never be consumed at rnd+1, so don't collect it)
+                        if (rnd + 1 < cfg.outer_rounds and collector.idle()
+                                and cfg.max_aip_staleness > 0):
+                            collector.submit(
+                                state["ials"]["params"],
+                                self._collect_key(state["key"], rnd + 1),
+                                rnd)
+                        data, data_round = tagged.data, tagged.round
+                    else:
+                        data = self.collect(state["ials"]["params"], kc)
+                        data_round, forced_sync = rnd, False
+                    sp.fence(data)
                 train_data, eval_data = gs_mod.split_dataset(
                     data, self.n_eval_seqs)
 
                 # (2) parallel AIP training (skipped for untrained-DIALS)
-                ce_before = self.eval_aips(state["aips"], eval_data)
-                stale_forced = 0
-                if not cfg.untrained:
-                    new_aips, _ = self.train_aips(
-                        state["aips"], train_data,
-                        jax.random.split(kt, n))
-                    if straggler_mask is not None:
-                        mask = jnp.asarray(straggler_mask(rnd), jnp.float32)
-                        eff, reports, forced = fault.freshness_gate(
-                            mask, reports, data_round, rnd,
-                            cfg.max_aip_staleness)
-                        new_aips = fault.masked_tree_update(
-                            state["aips"], new_aips, eff)
-                        stale_forced = int(forced.sum())
-                    else:
-                        reports = jnp.full_like(reports, data_round)
-                    state["aips"] = new_aips
-                ce_after = self.eval_aips(state["aips"], eval_data)
+                with tel.span("aip_train") as sp:
+                    ce_before = self.eval_aips(state["aips"], eval_data)
+                    stale_forced = 0
+                    if not cfg.untrained:
+                        new_aips, _ = self.train_aips(
+                            state["aips"], train_data,
+                            jax.random.split(kt, n))
+                        if straggler_mask is not None:
+                            mask = jnp.asarray(straggler_mask(rnd),
+                                               jnp.float32)
+                            eff, reports, forced = fault.freshness_gate(
+                                mask, reports, data_round, rnd,
+                                cfg.max_aip_staleness)
+                            new_aips = fault.masked_tree_update(
+                                state["aips"], new_aips, eff)
+                            stale_forced = int(forced.sum())
+                        else:
+                            reports = jnp.full_like(reports, data_round)
+                        state["aips"] = new_aips
+                    ce_after = self.eval_aips(state["aips"], eval_data)
+                    sp.fence((ce_before, ce_after))
 
                 # (3) F inner IALS+PPO steps, AIPs frozen
-                metrics = None
-                for _ in range(cfg.aip_refresh):
-                    state["ials"], metrics = self.ials_train(
-                        state["ials"], state["aips"])
+                with tel.span("inner_steps") as sp:
+                    metrics = None
+                    for _ in range(cfg.aip_refresh):
+                        state["ials"], metrics = self.ials_train(
+                            state["ials"], state["aips"])
+                    sp.fence(state["ials"])
 
-                ret = self.gs_eval(state["ials"]["params"], ke,
-                                   episodes=cfg.eval_episodes)
-                rec = {"round": rnd,
-                       "gs_return": float(ret),
-                       "ials_reward": float(metrics["reward"]),
-                       "aip_ce_before": float(ce_before.mean()),
-                       "aip_ce_after": float(ce_after.mean()),
-                       "data_round": int(data_round),
-                       "forced_sync": bool(forced_sync),
-                       "stale_forced": stale_forced,
-                       "wall_s": time.time() - t_start}
+                with tel.span("gs_eval") as sp:
+                    ret = sp.fence(self.gs_eval(
+                        state["ials"]["params"], ke,
+                        episodes=cfg.eval_episodes))
+                phases = tel.phase_seconds()
+                stats = obs_metrics.staleness_stats(reports, rnd)
+                rec = obs_metrics.round_record(
+                    round=rnd,
+                    gs_return=ret,
+                    ials_reward=(None if metrics is None
+                                 else metrics["reward"]),
+                    aip_ce_before=ce_before.mean(),
+                    aip_ce_after=ce_after.mean(),
+                    data_round=data_round,
+                    forced_sync=forced_sync,
+                    stale_forced=stale_forced,
+                    staleness_min=stats["staleness_min"],
+                    staleness_mean=stats["staleness_mean"],
+                    staleness_max=stats["staleness_max"],
+                    n_shards=1,
+                    reassigned=0,
+                    dead_hosts=[],
+                    kernels=kernels,
+                    collect_s=phases.get("collect"),
+                    aip_s=phases.get("aip_train"),
+                    inner_s=phases.get("inner_steps"),
+                    eval_s=phases.get("gs_eval"),
+                    mirror_s=None,
+                    round_s=time.perf_counter() - t_round,
+                    wall_s=time.time() - t_start)
+                tel.emit_round(rec)
                 history.append(rec)
                 if log:
                     log(rec)
@@ -340,6 +389,8 @@ class DIALSTrainer:
         finally:
             if collector is not None:
                 collector.close()
+            tel.emit("run_end", rounds=len(history))
+            tel.close()
         if self.manager is not None:
             self.manager.wait()
         return state, history
@@ -353,7 +404,7 @@ class DIALSTrainer:
                 self.ppo_cfg, self.cfg, n_shards=n_shards)
         return self._sharded
 
-    def _make_sharded_collector(self, runner):
+    def _make_sharded_collector(self, runner, telemetry=obs.DISABLED):
         """Async double-buffer for the sharded path — dispatch mode only:
         a host thread could race the donation. The region-decomposed
         collect is a mesh program — it runs on the shard devices
@@ -365,9 +416,11 @@ class DIALSTrainer:
         return async_mod.AsyncCollector(
             runner.collect, mode="dispatch",
             spare_device=(None if runner.use_sharded_gs else
-                          runtime_lib.spare_device(runner.n_shards)))
+                          runtime_lib.spare_device(runner.n_shards)),
+            telemetry=telemetry)
 
-    def _reassign(self, runner, carry, mirror, collector, dead_hosts):
+    def _reassign(self, runner, carry, mirror, collector, dead_hosts,
+                  telemetry=obs.DISABLED):
         """Elastic shard reassignment after host loss.
 
         The dead hosts' shard slots are dropped, ``fault.elastic_plan``
@@ -383,8 +436,9 @@ class DIALSTrainer:
         dead_shards = runtime_lib.shards_on_hosts(runner.mesh, dead_hosts)
         if not dead_shards:
             return runner, carry, collector, 0
-        plan = fault.elastic_plan(self.info.n_agents, runner.n_shards,
-                                  dead_shards)
+        plan = fault.elastic_plan(
+            self.info.n_agents, runner.n_shards, dead_shards,
+            telemetry=telemetry if telemetry.enabled else None)
         survivors = runtime_lib.surviving_devices(runner.mesh, dead_hosts)
         new_mesh = runtime_lib.shard_mesh(plan.new_shards,
                                           devices=survivors)
@@ -395,7 +449,7 @@ class DIALSTrainer:
         carry = fault.reshard_agents(mirror, new_mesh)
         if collector is not None:
             collector.close()
-            collector = self._make_sharded_collector(runner)
+            collector = self._make_sharded_collector(runner, telemetry)
         return runner, carry, collector, len(dead_shards)
 
     def _run_sharded(self, state, n_shards: int, *, log, straggler_mask,
@@ -426,64 +480,105 @@ class DIALSTrainer:
         carry = runner.shard_carry(
             {"aips": state["aips"], "ials": state["ials"],
              "reports": jnp.full((n,), state["round"] - 1, jnp.int32)})
-        collector = (self._make_sharded_collector(runner)
+        tel = obs.maybe(cfg.telemetry_dir, fence=cfg.telemetry_fence)
+        kernels = obs_metrics.kernel_summary(self.policy_cfg, self.aip_cfg,
+                                             self.ppo_cfg)
+        collector = (self._make_sharded_collector(runner, tel)
                      if cfg.async_collect else None)
         elastic = heartbeats is not None
         mirror = runner.unshard_carry(carry) if elastic else None
         history = []
         t_start = time.time()
-        for rnd in range(state["round"], cfg.outer_rounds):
-            dead_hosts, reassigned = (), 0
-            if elastic:
-                dead_hosts = tuple(heartbeats(rnd))
-                if dead_hosts:
-                    runner, carry, collector, reassigned = self._reassign(
-                        runner, carry, mirror, collector, dead_hosts)
-            mask = (jnp.asarray(straggler_mask(rnd), jnp.float32)
-                    if straggler_mask is not None and not cfg.untrained
-                    else jnp.ones((n,), jnp.float32))
-            if collector is None:
-                carry, rec = runner.round(carry, base_key, rnd, mask)
-                forced_sync = False
-            else:
-                tagged, forced_sync = collector.obtain(
-                    rnd, carry["ials"]["params"],
-                    self._collect_key(base_key, rnd),
-                    max_staleness=cfg.max_aip_staleness)
-                # a tag-rnd dataset can only be consumed if the bound
-                # tolerates one round of lag
-                if (rnd + 1 < cfg.outer_rounds and collector.idle()
-                        and cfg.max_aip_staleness > 0):
-                    collector.submit(
-                        carry["ials"]["params"],
-                        self._collect_key(base_key, rnd + 1), rnd)
-                # agent-shard the dataset onto the mesh (it arrives on
-                # the spare device when one exists); an async transfer.
-                # Identity for the region-decomposed collect — its
-                # output is born mesh-sharded.
-                data = runner.place_dataset(tagged.data)
-                carry, rec = runner.train_round(
-                    carry, data, base_key, rnd, tagged.round, mask)
-            raw = {k: float(v) for k, v in rec.items()}
-            rec = {"round": rnd, **raw,
-                   "data_round": int(raw["data_round"]),
-                   "stale_forced": int(raw["stale_forced"]),
-                   "forced_sync": bool(forced_sync),
-                   "n_shards": runner.n_shards,
-                   "reassigned": reassigned,
-                   "dead_hosts": list(dead_hosts),
-                   "wall_s": time.time() - t_start}
-            history.append(rec)
-            if log:
-                log(rec)
-            if elastic:
-                mirror = runner.unshard_carry(carry)
-            if self.manager is not None:
-                # device_get inside save() copies out before the next
-                # round donates these buffers
-                self.manager.save(rnd + 1, {
-                    "ials": carry["ials"], "aips": carry["aips"],
-                    "round": rnd + 1, "key": base_key})
+        tel.emit("run_start", path="sharded", env=self.info.name,
+                 n_shards=runner.n_shards, start_round=state["round"],
+                 outer_rounds=cfg.outer_rounds,
+                 async_collect=cfg.async_collect, elastic=elastic,
+                 sharded_gs=runner.use_sharded_gs, kernels=kernels)
+        try:
+            for rnd in range(state["round"], cfg.outer_rounds):
+                t_round = time.perf_counter()
+                dead_hosts, reassigned = (), 0
+                if elastic:
+                    dead_hosts = tuple(heartbeats(rnd))
+                    if dead_hosts:
+                        runner, carry, collector, reassigned = \
+                            self._reassign(runner, carry, mirror,
+                                           collector, dead_hosts, tel)
+                mask = (jnp.asarray(straggler_mask(rnd), jnp.float32)
+                        if straggler_mask is not None and not cfg.untrained
+                        else jnp.ones((n,), jnp.float32))
+                if collector is None:
+                    carry, rec = runner.round(carry, base_key, rnd, mask)
+                    forced_sync, collect_s = False, None
+                else:
+                    tagged, forced_sync = collector.obtain(
+                        rnd, carry["ials"]["params"],
+                        self._collect_key(base_key, rnd),
+                        max_staleness=cfg.max_aip_staleness)
+                    # a tag-rnd dataset can only be consumed if the bound
+                    # tolerates one round of lag
+                    if (rnd + 1 < cfg.outer_rounds and collector.idle()
+                            and cfg.max_aip_staleness > 0):
+                        collector.submit(
+                            carry["ials"]["params"],
+                            self._collect_key(base_key, rnd + 1), rnd)
+                    # agent-shard the dataset onto the mesh (it arrives on
+                    # the spare device when one exists); an async transfer.
+                    # Identity for the region-decomposed collect — its
+                    # output is born mesh-sharded.
+                    data = runner.place_dataset(tagged.data)
+                    carry, rec = runner.train_round(
+                        carry, data, base_key, rnd, tagged.round, mask)
+                    collect_s = collector.last_obtain_wait_s
+                # the ONE deliberate host sync of the round: fetching the
+                # on-mesh record (telemetry scalars included — they were
+                # computed inside the round program, not by extra fetches)
+                raw = {k: float(v) for k, v in rec.items()}
+                mirror_s = None
+                if elastic:
+                    # the availability tax: refresh the host mirror the
+                    # NEXT round's reassignment would restore from (an
+                    # all-gather on a multi-process mesh)
+                    t_mirror = time.perf_counter()
+                    mirror = runner.unshard_carry(carry)
+                    if tel.tracer.fenced:
+                        jax.block_until_ready(mirror)
+                    mirror_s = time.perf_counter() - t_mirror
+                rec = obs_metrics.round_record(
+                    round=rnd,
+                    gs_return=raw["gs_return"],
+                    ials_reward=(None if cfg.aip_refresh == 0
+                                 else raw["ials_reward"]),
+                    aip_ce_before=raw["aip_ce_before"],
+                    aip_ce_after=raw["aip_ce_after"],
+                    data_round=raw["data_round"],
+                    forced_sync=forced_sync,
+                    stale_forced=raw["stale_forced"],
+                    staleness_min=raw["staleness_min"],
+                    staleness_mean=raw["staleness_mean"],
+                    staleness_max=raw["staleness_max"],
+                    n_shards=runner.n_shards,
+                    reassigned=reassigned,
+                    dead_hosts=list(dead_hosts),
+                    kernels=kernels,
+                    collect_s=collect_s,
+                    aip_s=None, inner_s=None, eval_s=None,
+                    mirror_s=mirror_s,
+                    round_s=time.perf_counter() - t_round,
+                    wall_s=time.time() - t_start)
+                tel.emit_round(rec)
+                history.append(rec)
+                if log:
+                    log(rec)
+                if self.manager is not None:
+                    # device_get inside save() copies out before the next
+                    # round donates these buffers
+                    self.manager.save(rnd + 1, {
+                        "ials": carry["ials"], "aips": carry["aips"],
+                        "round": rnd + 1, "key": base_key})
+        finally:
+            tel.emit("run_end", rounds=len(history))
+            tel.close()
         unshard = runner.unshard_carry(carry)
         unshard.pop("reports", None)     # keep both paths' state schema
         state = {**unshard, "round": cfg.outer_rounds, "key": base_key}

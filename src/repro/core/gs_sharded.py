@@ -62,6 +62,7 @@ import numpy as np
 from repro.distributed import collectives
 from repro.distributed import runtime as runtime_lib
 from repro.marl import policy as policy_mod
+from repro.obs import trace as obs_trace
 
 
 # ---------------------------------------------------------------------------
@@ -138,12 +139,16 @@ def make_block_step(env_mod, env_cfg, *, n_blocks: int,
 
     def block_step(loc, t, actions, exo):
         blk = jax.lax.axis_index(axis_name)
-        prev, nxt = collectives.halo_exchange((loc, actions), axis_name,
-                                              axis_size=n_blocks)
+        # named scopes land in HLO metadata so an XLA profile attributes
+        # the ring collectives / boundary term; no primitives are added
+        with obs_trace.annotate("halo_exchange"):
+            prev, nxt = collectives.halo_exchange(
+                (loc, actions), axis_name, axis_size=n_blocks)
         view_loc, view_act = _place_window(
             (loc, actions), prev, nxt, blk, n_blocks, n_agents)
-        u_full = env_mod.boundary_influence(
-            view_loc, view_act, exo, env_cfg)                 # (N, M)
+        with obs_trace.annotate("boundary_influence"):
+            u_full = env_mod.boundary_influence(
+                view_loc, view_act, exo, env_cfg)             # (N, M)
         take = lambda x: jax.lax.dynamic_slice_in_dim(
             x, blk * bsz, bsz, axis=0)
         u = take(u_full)

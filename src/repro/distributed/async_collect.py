@@ -50,9 +50,12 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import time
 from typing import Any, Optional, Tuple
 
 import jax
+
+from repro import obs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,7 +90,7 @@ class AsyncCollector:
     """
 
     def __init__(self, collect_fn, *, mode: str = "auto",
-                 spare_device=None):
+                 spare_device=None, telemetry=obs.DISABLED):
         if mode == "auto":
             mode = "dispatch" if spare_device is not None else "thread"
         if mode not in ("dispatch", "thread"):
@@ -95,6 +98,10 @@ class AsyncCollector:
         self._collect = collect_fn
         self.mode = mode
         self.spare_device = spare_device
+        self.telemetry = telemetry
+        # host seconds obtain() spent blocked (harvest barrier +
+        # force-sync) on its last call — the drivers' collect_s phase
+        self.last_obtain_wait_s: Optional[float] = None
         self._executor = (
             concurrent.futures.ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="gs-collect")
@@ -157,6 +164,7 @@ class AsyncCollector:
         policy (tag = ``current_round``). The first call always primes
         the pipeline this way.
         """
+        t0 = time.perf_counter()
         if self._pending is not None and (
                 self._current is None or
                 self._current.round < current_round):
@@ -167,6 +175,11 @@ class AsyncCollector:
                   current_round - self._current.round > max_staleness)
         if forced:
             self._current = self.collect_now(params, key, current_round)
+        self.last_obtain_wait_s = time.perf_counter() - t0
+        self.telemetry.emit(
+            "collect_obtain", round=int(current_round),
+            data_round=self._current.round, forced=bool(forced),
+            mode=self.mode, wait_s=self.last_obtain_wait_s)
         return self._current, forced
 
     def close(self) -> None:

@@ -117,13 +117,18 @@ class ElasticPlan:
         return self.dead
 
 
-def elastic_plan(n_agents: int, n_shards: int,
-                 dead: Sequence[int]) -> ElasticPlan:
+def elastic_plan(n_agents: int, n_shards: int, dead: Sequence[int],
+                 *, telemetry=None) -> ElasticPlan:
     """Plan the shrink after ``dead`` shards (hosts' shard slots) vanish.
 
     The new shard count is the largest divisor of ``n_agents`` that fits
     the surviving slots (``runtime.choose_shards``) — agents always tile
-    exactly, even when the survivor count doesn't divide them."""
+    exactly, even when the survivor count doesn't divide them.
+
+    With ``telemetry`` set (a ``repro.obs.Telemetry``), the plan is
+    emitted as an ``elastic_reassign`` event — dead blocks, the shrink,
+    and the block → new-owner mapping — so the incident is
+    reconstructable from the event log alone."""
     from repro.distributed import runtime
     dead_set = set(dead)
     if not dead_set <= set(range(n_shards)):
@@ -133,9 +138,17 @@ def elastic_plan(n_agents: int, n_shards: int,
     if not survivors:
         raise RuntimeError("all shards dead — nothing to reassign to")
     new_shards = runtime.choose_shards(n_agents, len(survivors))
-    return ElasticPlan(n_agents=n_agents, old_shards=n_shards,
+    plan = ElasticPlan(n_agents=n_agents, old_shards=n_shards,
                        new_shards=new_shards, dead=tuple(sorted(dead_set)),
                        survivors=survivors)
+    if telemetry is not None:
+        telemetry.emit(
+            "elastic_reassign", n_agents=n_agents,
+            old_shards=plan.old_shards, new_shards=plan.new_shards,
+            dead_blocks=list(plan.dead), survivors=list(plan.survivors),
+            # str keys: JSON objects cannot carry int keys
+            moved={str(b): plan.owner(b) for b in plan.dead})
+    return plan
 
 
 # Logical rule for per-agent stacked state: leading axis "agents" maps to
@@ -172,12 +185,14 @@ class HostMonitor:
     """
 
     def __init__(self, directory: str, *, host: int, n_hosts: int,
-                 timeout_s: float = 30.0, poll_s: float = 0.05):
+                 timeout_s: float = 30.0, poll_s: float = 0.05,
+                 telemetry=None):
         self.directory = directory
         self.host = int(host)
         self.n_hosts = int(n_hosts)
         self.timeout_s = float(timeout_s)
         self.poll_s = float(poll_s)
+        self.telemetry = telemetry      # optional repro.obs.Telemetry
         self.dead: Set[int] = set()
         os.makedirs(directory, exist_ok=True)
 
@@ -204,6 +219,12 @@ class HostMonitor:
                 time.sleep(self.poll_s)
         newly_dead = tuple(sorted(waiting))
         self.dead |= waiting
+        if newly_dead and self.telemetry is not None:
+            self.telemetry.emit(
+                "host_death", round=int(rnd),
+                dead_hosts=list(newly_dead),
+                all_dead=sorted(self.dead),
+                timeout_s=self.timeout_s)
         return newly_dead
 
 

@@ -21,6 +21,14 @@ Three modes, selected by ``--mode``:
   ``os._exit(0)`` (the normal interpreter exit would hang in the
   distributed-shutdown barrier against a dead peer).
 
+With ``--telemetry-dir`` every process additionally writes its typed
+event log (``repro.obs``) there — the trainer's round records plus, in
+hostdrop mode, the HostMonitor's ``host_death`` and the planner's
+``elastic_reassign`` events. The primary merges the per-process files
+into ``telemetry.jsonl`` and asserts cross-process coverage (hostdrop:
+the dead peer's truncated log must still merge, and the incident events
+must be present).
+
 Prints MULTIHOST-OK on success (process 0).
 """
 import argparse
@@ -40,7 +48,10 @@ import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
 from _multidevice_check import build_trainer  # noqa: E402
+from repro import obs  # noqa: E402
 from repro.distributed import fault, runtime  # noqa: E402
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.obs import sinks as obs_sinks  # noqa: E402
 
 
 def dump(path, state, history):
@@ -56,21 +67,48 @@ def dump(path, state, history):
         json.dump({"history": history, **leaves}, f)
 
 
-def run_reference(out):
+def check_merged_telemetry(telemetry_dir, *, procs, require=()):
+    """Primary-only: merge the per-process JSONL logs and assert the
+    merged stream covers every process's round records, validates
+    against the round schema, and contains the ``require``d events."""
+    merged = obs_sinks.merge_dir(telemetry_dir)
+    events = obs_sinks.read_jsonl(merged)
+    assert events, f"empty merged telemetry at {merged}"
+    rounds = [e for e in events if e.get("event") == "round"]
+    for e in rounds:
+        problems = obs_metrics.validate_round(e)
+        assert not problems, (problems, e)
+    got_procs = {e["proc"] for e in rounds}
+    assert got_procs == set(procs), \
+        f"round records cover procs {got_procs}, want {set(procs)}"
+    kinds = {e.get("event") for e in events}
+    for kind in require:
+        assert kind in kinds, f"missing {kind!r} event in {sorted(kinds)}"
+    # global order: the merge key is (t, proc, seq)
+    keys = [(e.get("t", 0.0), e.get("proc", 0), e.get("seq", 0))
+            for e in events]
+    assert keys == sorted(keys), "merged stream out of order"
+
+
+def run_reference(out, telemetry_dir):
     assert ctx.num_processes == 1 and len(jax.devices()) == 4, \
         (ctx, jax.devices())
-    trainer = build_trainer(env="powergrid", shards=4)
+    trainer = build_trainer(env="powergrid", shards=4,
+                            telemetry_dir=telemetry_dir)
     state, history = trainer.run(jax.random.PRNGKey(0))
     assert trainer._sharded.use_sharded_gs
+    if telemetry_dir:
+        check_merged_telemetry(telemetry_dir, procs=(0,))
     dump(out, state, history)
     print("MULTIHOST-OK")
 
 
-def run_sharded(out):
+def run_sharded(out, telemetry_dir):
     assert ctx.num_processes == 2, ctx
     assert len(jax.devices()) == 8 and len(jax.local_devices()) == 4, \
         jax.devices()
-    trainer = build_trainer(env="powergrid", shards=4)
+    trainer = build_trainer(env="powergrid", shards=4,
+                            telemetry_dir=telemetry_dir)
     # the 4-shard mesh must take 2 devices from EACH process
     state, history = trainer.run(jax.random.PRNGKey(0))
     mesh = trainer._sharded.mesh
@@ -78,14 +116,21 @@ def run_sharded(out):
     assert runtime.mesh_spans_processes(mesh)
     assert trainer._sharded.use_sharded_gs     # halo exchange crosses hosts
     if ctx.is_primary:
+        if telemetry_dir:
+            check_merged_telemetry(telemetry_dir, procs=(0, 1))
         dump(out, state, history)
         print("MULTIHOST-OK")
 
 
-def run_hostdrop(out, beat_dir):
+def run_hostdrop(out, beat_dir, telemetry_dir):
     assert ctx.num_processes == 2, ctx
+    # the monitor shares the trainer's telemetry directory: its
+    # host_death events land in the same per-process JSONL stream the
+    # round records do (the sink appends, so two emitters coexist)
+    tel = obs.maybe(telemetry_dir)
     monitor = fault.HostMonitor(beat_dir, host=ctx.process_id, n_hosts=2,
-                                timeout_s=10.0)
+                                timeout_s=10.0,
+                                telemetry=tel if tel.enabled else None)
 
     def heartbeats(rnd):
         if ctx.process_id == 1 and rnd >= 2:
@@ -95,7 +140,8 @@ def run_hostdrop(out, beat_dir):
             os.kill(os.getpid(), signal.SIGKILL)
         return monitor.gate(rnd)
 
-    trainer = build_trainer(env="traffic", shards=4, outer_rounds=4)
+    trainer = build_trainer(env="traffic", shards=4, outer_rounds=4,
+                            telemetry_dir=telemetry_dir)
     state, history = trainer.run(jax.random.PRNGKey(0),
                                  heartbeats=heartbeats)
     # only the survivor reaches this point
@@ -104,6 +150,21 @@ def run_hostdrop(out, beat_dir):
     assert history[2]["dead_hosts"] == [1] and \
         history[2]["reassigned"] == 2, history[2]
     assert all(np.isfinite(r["gs_return"]) for r in history), history
+    if telemetry_dir:
+        # the whole incident must be reconstructable from the merged
+        # event log: the dead peer's (possibly truncated) file still
+        # merges, and death + replan events are present
+        check_merged_telemetry(telemetry_dir, procs=(0, 1),
+                               require=("host_death", "elastic_reassign"))
+        events = obs_sinks.read_jsonl(
+            os.path.join(telemetry_dir, obs_sinks.MERGED_NAME))
+        death = [e for e in events if e.get("event") == "host_death"]
+        assert death and death[0]["dead_hosts"] == [1], death
+        replan = [e for e in events
+                  if e.get("event") == "elastic_reassign"]
+        assert replan and replan[0]["old_shards"] == 4 and \
+            replan[0]["new_shards"] == 2, replan
+        tel.close()
     dump(out, state, history)
     print("MULTIHOST-OK", flush=True)
     # skip the distributed-shutdown barrier: the peer is dead
@@ -116,13 +177,14 @@ def main():
                     choices=["reference", "sharded", "hostdrop"])
     ap.add_argument("--out", required=True)
     ap.add_argument("--beat-dir", default=None)
+    ap.add_argument("--telemetry-dir", default=None)
     args = ap.parse_args()
     if args.mode == "reference":
-        run_reference(args.out)
+        run_reference(args.out, args.telemetry_dir)
     elif args.mode == "sharded":
-        run_sharded(args.out)
+        run_sharded(args.out, args.telemetry_dir)
     else:
-        run_hostdrop(args.out, args.beat_dir)
+        run_hostdrop(args.out, args.beat_dir, args.telemetry_dir)
     return 0
 
 

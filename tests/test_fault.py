@@ -97,6 +97,49 @@ def test_elastic_plan_partition_property(blocks_per_shard, n_shards, data):
     assert counts == [per] * plan.new_shards
 
 
+def test_elastic_plan_emits_reassign_telemetry(tmp_path):
+    """The replan is reconstructable from the event log alone: dead
+    blocks, the shrink, and the block -> new-owner mapping."""
+    from repro import obs
+    from repro.obs import sinks
+    tel = obs.Telemetry.create(str(tmp_path), process_id=0)
+    plan = fault.elastic_plan(8, 4, dead=[2, 3], telemetry=tel)
+    tel.close()
+    events = sinks.read_jsonl(sinks.proc_path(str(tmp_path), 0))
+    assert [e["event"] for e in events] == ["elastic_reassign"]
+    e = events[0]
+    assert e["old_shards"] == 4 and e["new_shards"] == plan.new_shards
+    assert e["dead_blocks"] == [2, 3] and e["survivors"] == [0, 1]
+    # JSON keys are strings; values are the plan's owner() per dead block
+    assert e["moved"] == {str(b): plan.owner(b) for b in plan.dead}
+    # telemetry=None (the default) emits nothing and still plans
+    assert fault.elastic_plan(8, 4, dead=[2, 3]) == plan
+
+
+def test_host_monitor_death_emits_telemetry(tmp_path):
+    """Death detection shows up in the event log exactly once per host
+    (sticky deadness means no re-reporting)."""
+    from repro import obs
+    from repro.obs import sinks
+    beat_dir = tmp_path / "beats"
+    tel = obs.Telemetry.create(str(tmp_path / "tel"), process_id=0)
+    m0 = fault.HostMonitor(str(beat_dir), host=0, n_hosts=2,
+                           timeout_s=0.5, poll_s=0.01, telemetry=tel)
+    m1 = fault.HostMonitor(str(beat_dir), host=1, n_hosts=2,
+                           timeout_s=0.5, poll_s=0.01)
+    m1.beat(0)
+    assert m0.gate(0) == ()                 # everyone alive: no event
+    assert m0.gate(1) == (1,)               # silent host 1 -> death event
+    assert m0.gate(2) == ()                 # sticky: no second event
+    tel.close()
+    events = sinks.read_jsonl(sinks.proc_path(str(tmp_path / "tel"), 0))
+    deaths = [e for e in events if e["event"] == "host_death"]
+    assert len(deaths) == 1
+    assert deaths[0]["round"] == 1 and deaths[0]["dead_hosts"] == [1]
+    assert deaths[0]["all_dead"] == [1]
+    assert deaths[0]["timeout_s"] == 0.5
+
+
 def test_host_monitor_detects_silent_host(tmp_path):
     m0 = fault.HostMonitor(str(tmp_path), host=0, n_hosts=2,
                            timeout_s=0.5, poll_s=0.01)

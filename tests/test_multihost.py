@@ -10,7 +10,14 @@ conftest.py) running ``tests/_multihost_check.py``:
   process boundary;
 * killing one host mid-run (SIGKILL, no cleanup) must trigger elastic
   shard reassignment: the survivor times out the heartbeat, adopts the
-  dead host's agent blocks on a shrunken mesh, and finishes training.
+  dead host's agent blocks on a shrunken mesh, and finishes training;
+* both runs emit per-process typed telemetry (``repro.obs``) into a
+  shared directory; the primary merges it into ``telemetry.jsonl`` and
+  the test re-validates the merged log here — schema-clean round
+  records from every process, and for the host drop the
+  ``host_death``/``elastic_reassign`` incident events (the dead peer's
+  possibly-truncated JSONL must still merge). ``DIALS_TELEMETRY_DIR``
+  (set by CI) redirects the logs to an uploadable artifact directory.
 """
 import json
 import os
@@ -22,6 +29,30 @@ import numpy as np
 import pytest
 
 CHECK = os.path.join(os.path.dirname(__file__), "_multihost_check.py")
+
+
+def _telemetry_dir(tmp_path, name):
+    """Shared telemetry directory for one run: CI points
+    DIALS_TELEMETRY_DIR at an uploadable artifact root; locally the
+    logs land under tmp_path."""
+    base = os.environ.get("DIALS_TELEMETRY_DIR") or str(tmp_path)
+    path = os.path.join(base, name)
+    os.makedirs(path, exist_ok=True)
+    return path
+
+
+def _check_telemetry(tel_dir, *, procs):
+    """Validate the primary-merged telemetry.jsonl with the same code CI
+    runs (tools.telemetry_report --check)."""
+    from tools import telemetry_report
+    merged = os.path.join(tel_dir, "telemetry.jsonl")
+    assert os.path.exists(merged), os.listdir(tel_dir)
+    events = telemetry_report.load_events(merged)
+    assert telemetry_report.check(events) == [], \
+        telemetry_report.check(events)
+    got = {e.get("proc") for e in events if e.get("event") == "round"}
+    assert got == set(procs), (got, procs)
+    return events
 
 
 def _free_port() -> int:
@@ -70,11 +101,16 @@ def test_two_process_sharded_matches_single_process(tmp_path):
         stderr=subprocess.STDOUT, text=True), "reference")
     assert rc == 0 and "MULTIHOST-OK" in log, log[-3000:]
 
-    procs = _launch_pair(tmp_path, "sharded", sh_out)
+    tel_dir = _telemetry_dir(tmp_path, "sharded")
+    procs = _launch_pair(tmp_path, "sharded", sh_out,
+                         extra=("--telemetry-dir", tel_dir))
     results = [_wait(p, f"rank{i}") for i, p in enumerate(procs)]
     for i, (rc, log) in enumerate(results):
         assert rc == 0, f"rank {i} failed:\n{log[-3000:]}"
     assert "MULTIHOST-OK" in results[0][1], results[0][1][-3000:]
+
+    # both ranks' per-process logs merged rank-0-side; schema-clean
+    _check_telemetry(tel_dir, procs=(0, 1))
 
     with open(ref_out) as f:
         ref = json.load(f)
@@ -100,8 +136,10 @@ def test_two_process_sharded_matches_single_process(tmp_path):
 def test_host_drop_triggers_elastic_reassignment(tmp_path):
     out = str(tmp_path / "hostdrop.json")
     beat_dir = str(tmp_path / "beats")
+    tel_dir = _telemetry_dir(tmp_path, "hostdrop")
     procs = _launch_pair(tmp_path, "hostdrop", out,
-                         extra=("--beat-dir", beat_dir))
+                         extra=("--beat-dir", beat_dir,
+                                "--telemetry-dir", tel_dir))
     results = [_wait(p, f"rank{i}") for i, p in enumerate(procs)]
 
     rc0, log0 = results[0]
@@ -120,3 +158,18 @@ def test_host_drop_triggers_elastic_reassignment(tmp_path):
     assert all(np.isfinite(r["gs_return"]) for r in hist), hist
     # training really continued post-drop: params present and finite
     assert all(np.isfinite(np.asarray(p)).all() for p in got["params"])
+
+    # the incident is reconstructable from the merged event log alone:
+    # the SIGKILLed rank's (possibly truncated) JSONL still merged, and
+    # the death + replan events are in the stream
+    events = _check_telemetry(tel_dir, procs=(0, 1))
+    death = [e for e in events if e.get("event") == "host_death"]
+    assert death and death[0]["dead_hosts"] == [1], death
+    replan = [e for e in events if e.get("event") == "elastic_reassign"]
+    assert replan, "no elastic_reassign event"
+    assert replan[0]["old_shards"] == 4 and replan[0]["new_shards"] == 2
+    assert replan[0]["moved"] == {"2": 1, "3": 1}, replan[0]
+    # rank 1 died at the top of round 2: its last round record is 1
+    r1_rounds = [e["round"] for e in events
+                 if e.get("event") == "round" and e.get("proc") == 1]
+    assert r1_rounds and max(r1_rounds) == 1, r1_rounds
