@@ -171,9 +171,11 @@ def main() -> int:
     problems = check(args.which, fresh_path, args.baseline,
                      max_regression=args.max_regression,
                      subset=args.subset)
-    for p in problems:
-        print(f"REGRESSION {p}")
-    if problems:
+    # shared formatter with the static-analysis gate: plain
+    # TAG file [rule] lines locally, ::error annotations in CI
+    from repro.analysis.report import Finding, emit
+    if emit([Finding(tag="REGRESSION", rule="BenchRegression",
+                     message=p, file=fresh_path) for p in problems]):
         return 1
     print(f"# check_bench {args.which}: OK")
     return 0

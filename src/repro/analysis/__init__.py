@@ -1,0 +1,20 @@
+"""Static verification layer for the DIALS runtime.
+
+Two passes over the repo's traced programs and source tree:
+
+* **jaxpr contracts** (``walker`` + ``contracts`` + ``recompile``) — a
+  path-aware jaxpr traversal with source provenance, declarative
+  ``ContractRule``s over it (collective placement, donation, dtype
+  round-trip, host-sync budget, steady-state compile), and the program
+  registry in ``programs`` that traces both drivers across every
+  registered scenario;
+* **repo lint** (``lint``) — AST rules ruff cannot express: PRNG key
+  discipline, host-time/``numpy.random`` inside traced code, Python
+  branching on traced values.
+
+Entry point: ``tools/check_programs.py`` (CI ``analysis`` job). Shared
+finding formatting lives in ``report`` and is reused by
+``tools/telemetry_report.py`` and ``benchmarks/check_bench.py``.
+"""
+from repro.analysis import walker  # noqa: F401
+from repro.analysis.report import Finding, format_finding  # noqa: F401

@@ -1,0 +1,340 @@
+"""Declarative contract rules over traced programs.
+
+The runtime's correctness story is a set of *program contracts* — claims
+about what a traced jaxpr may and may not contain, which the paper's
+runtime-stays-constant and exactness arguments rest on. Each contract is
+a :class:`ContractRule` checked against :class:`Program` records;
+violations come back as ``repro.analysis.report.Finding``s whose
+file:line points at the repro source that emitted the offending
+primitive (via the walker's ``PrimSite`` provenance), not at the
+checker.
+
+Rule catalogue (see README "Static program contracts"):
+
+``CollectiveFree``    a train body exchanges nothing between AIP
+                      refreshes — no collective primitive anywhere in
+                      it, nested sub-jaxprs included.
+``HaloOnly``          a region-decomposed GS body talks to its ring
+                      neighbours only (``runtime.HALO_PRIMS``) and must
+                      contain at least one halo exchange — anything
+                      else means the "decomposed" rollout
+                      re-centralized.
+``NoHostCallback``    a fused round program contains no host-callback
+                      primitive — a hidden per-step device↔host sync
+                      would silently break the one-sync-per-round
+                      claim.
+``DonationUsed``      every buffer a program declares donated is
+                      actually aliased into an output at lower time; an
+                      unusable donation is a full silent copy of the
+                      carry every round.
+``DtypeRoundTrip``    with reduced-precision (bf16) inputs the program
+                      returns reduced-precision outputs — kernels may
+                      accumulate in f32 internally but must cast back
+                      (the class of silent-upcast bug the kernel
+                      dispatch paths have grown before).
+``ScalarSyncBudget``  the fused round's non-carry outputs are host
+                      scalars drawn from the typed round-record schema
+                      (``repro.obs.metrics.ROUND_KEYS``) — the
+                      once-per-round sync contract as a rule, replacing
+                      jaxpr string-equality tests.
+
+Programs carry ``roles`` tags; each rule declares which roles it
+applies to, and :func:`run_rules` does the cross product. Adding a
+contract = subclassing :class:`ContractRule` and appending to
+``DEFAULT_RULES``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.analysis import walker
+from repro.analysis.report import Finding
+
+__all__ = [
+    "Program", "ContractRule", "run_rules", "DEFAULT_RULES",
+    "CollectiveFree", "HaloOnly", "NoHostCallback", "DonationUsed",
+    "DtypeRoundTrip", "ScalarSyncBudget",
+]
+
+TAG = "CONTRACT-VIOLATION"
+
+# host-callback primitives — any of these inside a fused round program
+# is a hidden device<->host transfer the sync budget does not see
+CALLBACK_PRIMS = frozenset({
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "outside_call", "host_callback_call",
+})
+
+
+@dataclasses.dataclass
+class Program:
+    """One traced program under audit.
+
+    ``roles`` routes rules: e.g. the sharded fused round registers as
+    ``("round",)`` with its train body re-registered as a
+    ``("train_body",)`` program and each GS body as ``("gs_body",)``.
+    Jaxpr-less programs (donation / dtype checks) carry ``fn`` +
+    abstract ``args`` instead.
+    """
+    name: str
+    roles: Tuple[str, ...]
+    jaxpr: Any = None                      # (Closed)Jaxpr, when traced
+    fn: Optional[Callable] = None          # callable, for lower/eval_shape
+    args: Tuple = ()                       # abstract args for fn
+    donate_argnums: Tuple[int, ...] = ()
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+def _site_finding(rule: str, program: Program, site, message: str,
+                  tag: str = TAG) -> Finding:
+    detail = site.describe()
+    return Finding(tag=tag, rule=rule, file=site.file, line=site.line,
+                   message=f"{program.name}: {message} — {detail}")
+
+
+class ContractRule:
+    """Base rule: ``roles`` it applies to + a ``check`` returning
+    findings (empty list = contract satisfied)."""
+    name: str = "ContractRule"
+    roles: Tuple[str, ...] = ()
+
+    def applies(self, program: Program) -> bool:
+        return any(r in program.roles for r in self.roles)
+
+    def check(self, program: Program) -> List[Finding]:
+        raise NotImplementedError
+
+
+class CollectiveFree(ContractRule):
+    """No cross-shard communication anywhere in the program."""
+    name = "CollectiveFree"
+    roles = ("train_body",)
+
+    def check(self, program: Program) -> List[Finding]:
+        from repro.distributed import runtime
+        return [
+            _site_finding(self.name, program, s,
+                          "collective in a body that must be "
+                          "collective-free between AIP refreshes")
+            for s in walker.sites(program.jaxpr, runtime.COLLECTIVE_PRIMS)
+        ]
+
+
+class HaloOnly(ContractRule):
+    """Only neighbour halo exchanges, and at least one of them."""
+    name = "HaloOnly"
+    roles = ("gs_body",)
+
+    def check(self, program: Program) -> List[Finding]:
+        from repro.distributed import runtime
+        found = walker.sites(program.jaxpr, runtime.COLLECTIVE_PRIMS)
+        out = [
+            _site_finding(self.name, program, s,
+                          f"non-halo collective in a region-decomposed "
+                          f"GS body (allowed: "
+                          f"{sorted(runtime.HALO_PRIMS)})")
+            for s in found if s.prim not in runtime.HALO_PRIMS
+        ]
+        if not found:
+            out.append(Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: no halo exchange at all — "
+                        f"this is not the region-decomposed GS program"))
+        return out
+
+
+class NoHostCallback(ContractRule):
+    """No host-callback primitive inside an on-mesh program."""
+    name = "NoHostCallback"
+    roles = ("round", "train_round", "train_body", "gs_body", "collect",
+             "program")
+
+    def check(self, program: Program) -> List[Finding]:
+        return [
+            _site_finding(self.name, program, s,
+                          "host callback inside a traced round program "
+                          "(hidden device<->host sync)")
+            for s in walker.sites(program.jaxpr, CALLBACK_PRIMS)
+        ]
+
+
+class DonationUsed(ContractRule):
+    """Every donated buffer is actually aliased into an output at lower
+    time.
+
+    The observable signal is the donation attributes on the lowered
+    module's parameters — ``tf.aliasing_output`` when the alias is
+    resolved at lower time, ``jax.buffer_donor`` when it is deferred to
+    XLA (the sharded round takes this path). A donated-but-unused
+    buffer is dropped from the lowered program and carries neither
+    attribute (jax does not reliably warn on CPU), so the rule counts
+    donor-marked parameters against the donated leaf count
+    (``meta["expect_aliased"]`` overrides; default = leaves of the
+    donated arguments). Lower-time donation warnings are violations
+    too.
+    """
+    name = "DonationUsed"
+    roles = ("donated",)
+
+    def check(self, program: Program) -> List[Finding]:
+        if program.fn is None:
+            return []
+        jitted = program.fn
+        if not hasattr(jitted, "lower"):
+            jitted = jax.jit(jitted,
+                             donate_argnums=program.donate_argnums)
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            lowered = jitted.lower(*program.args)
+        out: List[Finding] = []
+        for w in caught:
+            msg = str(w.message)
+            if "donated" in msg.lower():
+                out.append(Finding(
+                    tag=TAG, rule=self.name,
+                    message=f"{program.name}: donation leaked — {msg}"))
+        expected = program.meta.get("expect_aliased")
+        if expected is None:
+            expected = sum(len(jax.tree.leaves(program.args[i]))
+                           for i in program.donate_argnums
+                           if i < len(program.args))
+        text = lowered.as_text()
+        aliased = (text.count("tf.aliasing_output")
+                   + text.count("jax.buffer_donor"))
+        if aliased < expected:
+            out.append(Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: only {aliased} of {expected} "
+                        f"donated buffers aliased into outputs — the "
+                        f"rest are silently copied every call"))
+        return out
+
+
+def _float_dtypes(tree) -> set:
+    import jax.numpy as jnp
+    out = set()
+    for leaf in jax.tree.leaves(tree):
+        dt = jnp.asarray(leaf).dtype if not hasattr(leaf, "dtype") \
+            else leaf.dtype
+        if jnp.issubdtype(dt, jnp.floating):
+            out.add(jnp.dtype(dt))
+    return out
+
+
+class DtypeRoundTrip(ContractRule):
+    """bf16 in ⇒ bf16 out: no floating output wider than the widest
+    floating input (abstractly, via ``eval_shape`` — no FLOPs)."""
+    name = "DtypeRoundTrip"
+    roles = ("dtype",)
+
+    def check(self, program: Program) -> List[Finding]:
+        import jax.numpy as jnp
+        if program.fn is None:
+            return []
+        try:
+            out_tree = jax.eval_shape(program.fn, *program.args)
+        except Exception as e:
+            # a program that cannot even trace at reduced precision has
+            # a dtype bug by definition (e.g. an f32-promoting op inside
+            # a scan whose carry stays bf16)
+            first = str(e).split("\n", 1)[0]
+            return [Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: does not trace at reduced "
+                        f"precision — {type(e).__name__}: {first}")]
+        in_floats = _float_dtypes(program.args)
+        if not in_floats:
+            return []
+        widest_in = max(dt.itemsize for dt in in_floats)
+        out: List[Finding] = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                out_tree)[0]:
+            dt = jnp.dtype(leaf.dtype)
+            if jnp.issubdtype(dt, jnp.floating) and \
+                    dt.itemsize > widest_in:
+                keystr = jax.tree_util.keystr(path)
+                out.append(Finding(
+                    tag=TAG, rule=self.name,
+                    message=f"{program.name}: output{keystr} is {dt} "
+                            f"but the widest floating input is "
+                            f"{widest_in * 8}-bit — a silent upcast "
+                            f"through the kernel path"))
+        return out
+
+
+class ScalarSyncBudget(ContractRule):
+    """The fused round returns (carry, record); the record — the ONLY
+    thing the driver fetches per round — must be host scalars drawn
+    from the typed round schema. Extra keys, non-scalar leaves, or keys
+    outside ``ROUND_KEYS`` would grow the once-per-round sync."""
+    name = "ScalarSyncBudget"
+    roles = ("round", "train_round")
+
+    def check(self, program: Program) -> List[Finding]:
+        from repro.obs import metrics
+        if program.fn is None:
+            return []
+        result = jax.eval_shape(program.fn, *program.args)
+        if not (isinstance(result, tuple) and len(result) == 2
+                and isinstance(result[1], dict)):
+            return [Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: round program must return "
+                        f"(carry, record-dict), got "
+                        f"{type(result).__name__}")]
+        rec = result[1]
+        out: List[Finding] = []
+        extra = set(rec) - set(metrics.ROUND_KEYS)
+        if extra:
+            out.append(Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: record keys {sorted(extra)} "
+                        f"are outside the typed round schema "
+                        f"(repro.obs.metrics.ROUND_FIELDS)"))
+        for k, v in sorted(rec.items()):
+            for leaf in jax.tree.leaves(v):
+                if getattr(leaf, "shape", ()) != ():
+                    out.append(Finding(
+                        tag=TAG, rule=self.name,
+                        message=f"{program.name}: record[{k!r}] has "
+                                f"shape {leaf.shape} — the per-round "
+                                f"fetch must move scalars only"))
+        budget = program.meta.get("sync_budget", len(metrics.ROUND_KEYS))
+        if len(rec) > budget:
+            out.append(Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: {len(rec)} record scalars "
+                        f"exceed the per-round sync budget of {budget}"))
+        return out
+
+
+DEFAULT_RULES: Tuple[ContractRule, ...] = (
+    CollectiveFree(), HaloOnly(), NoHostCallback(), DonationUsed(),
+    DtypeRoundTrip(), ScalarSyncBudget(),
+)
+
+
+def run_rules(programs: Sequence[Program],
+              rules: Sequence[ContractRule] = DEFAULT_RULES
+              ) -> List[Finding]:
+    """Check every rule against every program it applies to."""
+    findings: List[Finding] = []
+    for program in programs:
+        for rule in rules:
+            if rule.applies(program):
+                findings.extend(rule.check(program))
+    return findings
+
+
+def raise_findings(findings: Sequence[Finding]) -> None:
+    """Turn a non-empty finding list into one AssertionError (the shape
+    the repo's in-process audits — ``audit_collectives`` and friends —
+    raise)."""
+    from repro.analysis.report import format_finding
+    if findings:
+        raise AssertionError("\n".join(
+            format_finding(f, github=False) for f in findings))

@@ -1,0 +1,401 @@
+"""Repo-specific AST lint — rules ruff cannot express.
+
+The jaxpr contract engine (``repro.analysis.contracts``) audits what a
+program *traced to*; this pass audits the *source* for bug classes that
+trace fine and fail silently at runtime:
+
+``prng-reuse``           a PRNG key passed to a second consuming
+                         ``jax.random`` call without being re-derived —
+                         correlated randomness across draws.
+``prng-discarded-split`` a result of ``jax.random.split`` bound to a
+                         name that is never read (underscore-prefixed
+                         names opt out — the repo's "deliberately
+                         unused" convention).
+``prng-relative-fold``   ``jax.random.fold_in`` keyed on
+                         ``axis_index`` — per-agent keys must fold the
+                         ABSOLUTE agent id, or randomness changes with
+                         the shard count and the sharded round stops
+                         matching the loop driver (the
+                         shard-equivariance contract of
+                         ``repro.core.ials``).
+``numpy-random``         a ``numpy.random`` *call* in runtime modules —
+                         host RNG inside code that also traces is
+                         either dead under jit or a silent
+                         nondeterminism leak. (Annotations like
+                         ``np.random.Generator`` are fine.)
+``host-time``            ``time.time()``-family calls inside *nested*
+                         functions of runtime modules. Depth-1
+                         functions/methods are driver host code where
+                         wall-clock spans are the point; nested
+                         functions are the traced bodies, where a
+                         host clock is a constant baked in at trace
+                         time.
+``traced-branch``        Python ``if``/``while`` on a bare parameter of
+                         a nested function in ``core/``/
+                         ``distributed/`` — parameters of traced bodies
+                         are tracers; branching on one is a
+                         ConcretizationError at best and a silent
+                         trace-time constant at worst. (``is None``
+                         checks and config attributes don't trip
+                         this.)
+
+Run via ``tools/check_programs.py --lint``; findings carry file:line
+and render as CI annotations through ``repro.analysis.report``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis.report import Finding
+
+__all__ = ["lint_source", "lint_file", "lint_paths", "default_targets"]
+
+TAG = "LINT"
+
+# jax.random calls that consume a key's uniqueness (passing the same key
+# to two of these yields correlated draws)
+CONSUMING = frozenset({
+    "split", "normal", "uniform", "bernoulli", "categorical", "randint",
+    "permutation", "choice", "gumbel", "exponential", "laplace",
+    "truncated_normal", "bits", "poisson", "gamma", "beta", "dirichlet",
+    "orthogonal", "rademacher", "cauchy", "logistic",
+    "multivariate_normal", "ball", "t", "loggamma", "binomial",
+})
+
+HOST_CLOCKS = frozenset({"time", "perf_counter", "monotonic",
+                         "process_time", "perf_counter_ns", "time_ns"})
+
+# modules whose code traces (lint targets); traced-branch additionally
+# restricts to the runtime packages where every nested fn is on-mesh
+RUNTIME_DIRS = ("core", "distributed", "kernels", "marl", "nn", "envs",
+                "models", "optim", "data")
+BRANCH_DIRS = ("core", "distributed")
+
+
+def _dotted(node) -> str:
+    """Best-effort dotted name of an expression (``jax.random.split``)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_jax_random(call: ast.Call) -> Optional[str]:
+    """The jax.random function name of a call, or None."""
+    if not isinstance(call.func, ast.Attribute):
+        return None
+    dotted = _dotted(call.func)
+    head, _, fn = dotted.rpartition(".")
+    if head in ("jax.random", "random", "jrandom", "jr"):
+        return fn
+    return None
+
+
+def _contains_axis_index(node) -> bool:
+    for sub in ast.walk(node):
+        name = None
+        if isinstance(sub, ast.Attribute):
+            name = sub.attr
+        elif isinstance(sub, ast.Name):
+            name = sub.id
+        if name == "axis_index":
+            return True
+    return False
+
+
+class _KeyState:
+    """Per-function PRNG dataflow: which names hold keys that were
+    already consumed, which split results still await a read, and which
+    names carry shard-relative (``axis_index``-derived) data."""
+
+    def __init__(self):
+        self.consumed: Dict[str, Tuple[int, str]] = {}   # name -> (line, by)
+        self.split_unused: Dict[str, int] = {}           # name -> line
+        self.relative: set = set()                       # axis_index data
+
+    def copy(self) -> "_KeyState":
+        st = _KeyState()
+        st.consumed = dict(self.consumed)
+        st.split_unused = dict(self.split_unused)
+        st.relative = set(self.relative)
+        return st
+
+    def merge(self, other: "_KeyState") -> None:
+        # a branch consuming a key counts: union of consumption; a read
+        # on either branch satisfies the split result
+        self.consumed.update(other.consumed)
+        self.relative |= other.relative
+        for name in list(self.split_unused):
+            if name not in other.split_unused:
+                del self.split_unused[name]
+
+
+class _FunctionLinter:
+    """Statement-ordered walk of one function body (branch-aware, loop
+    bodies analyzed once — reuse across loop iterations is out of
+    scope)."""
+
+    def __init__(self, checker: "_Checker", depth: int):
+        self.checker = checker
+        self.depth = depth
+        self.state = _KeyState()
+
+    # -- expression pass ------------------------------------------------------
+    @staticmethod
+    def _is_relative(node, state: _KeyState) -> bool:
+        """Does an expression carry ``axis_index`` data — directly, or
+        through a name previously assigned from one?"""
+        if _contains_axis_index(node):
+            return True
+        return any(isinstance(sub, ast.Name) and sub.id in state.relative
+                   for sub in ast.walk(node))
+
+    def use_expr(self, node, state: _KeyState) -> None:
+        """Record name reads + key consumption inside one expression."""
+        if node is None:
+            return
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Load):
+                state.split_unused.pop(sub.id, None)
+            if isinstance(sub, ast.Call):
+                self.call(sub, state)
+
+    def call(self, call: ast.Call, state: _KeyState) -> None:
+        fn = _is_jax_random(call)
+        if fn is None:
+            return
+        if fn == "fold_in" and len(call.args) >= 2 and \
+                self._is_relative(call.args[1], state):
+            self.checker.add(call, "prng-relative-fold",
+                             "fold_in keyed on axis_index — fold the "
+                             "absolute agent id so per-agent randomness "
+                             "is shard-count invariant")
+        if fn in CONSUMING and call.args and \
+                isinstance(call.args[0], ast.Name):
+            name = call.args[0].id
+            prior = state.consumed.get(name)
+            if prior is not None:
+                self.checker.add(
+                    call, "prng-reuse",
+                    f"key {name!r} already consumed by "
+                    f"jax.random.{prior[1]} at line {prior[0]} — "
+                    f"re-deriving (split/fold_in) is required before "
+                    f"every consuming call")
+            else:
+                state.consumed[name] = (call.lineno, fn)
+
+    # -- statement pass -------------------------------------------------------
+    def assign_targets(self, targets, value, state: _KeyState) -> None:
+        names: List[str] = []
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                names.append(tgt.id)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for el in tgt.elts:
+                    if isinstance(el, ast.Name):
+                        names.append(el.id)
+        relative = value is not None and self._is_relative(value, state)
+        for name in names:
+            state.consumed.pop(name, None)       # rebind = fresh key
+            state.split_unused.pop(name, None)
+            if relative:
+                state.relative.add(name)
+            else:
+                state.relative.discard(name)
+        if isinstance(value, ast.Call) and \
+                _is_jax_random(value) == "split":
+            for tgt in targets:
+                elts = tgt.elts if isinstance(tgt, (ast.Tuple, ast.List)) \
+                    else [tgt]
+                for el in elts:
+                    if isinstance(el, ast.Name) and \
+                            not el.id.startswith("_"):
+                        state.split_unused[el.id] = value.lineno
+
+    def run(self, body) -> None:
+        self.block(body, self.state)
+        for name, line in sorted(self.state.split_unused.items(),
+                                 key=lambda kv: kv[1]):
+            self.checker.add_at(
+                line, "prng-discarded-split",
+                f"split result {name!r} is never used — either consume "
+                f"it or name it with a leading underscore")
+
+    def block(self, body, state: _KeyState) -> None:
+        for stmt in body:
+            self.stmt(stmt, state)
+
+    def stmt(self, stmt, state: _KeyState) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.checker.function(stmt, self.depth + 1)
+            return
+        if isinstance(stmt, ast.Assign):
+            self.use_expr(stmt.value, state)
+            self.assign_targets(stmt.targets, stmt.value, state)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            self.use_expr(stmt.value, state)
+            if stmt.value is not None:
+                self.assign_targets([stmt.target], stmt.value, state)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            self.use_expr(stmt.value, state)
+            return
+        if isinstance(stmt, (ast.If, ast.While)):
+            self.branch_check(stmt)
+            self.use_expr(stmt.test, state)
+            then_state = state.copy()
+            self.block(stmt.body, then_state)
+            else_state = state.copy()
+            self.block(stmt.orelse, else_state)
+            then_state.merge(else_state)
+            state.consumed = then_state.consumed
+            state.split_unused = then_state.split_unused
+            return
+        if isinstance(stmt, ast.For):
+            self.use_expr(stmt.iter, state)
+            self.assign_targets([stmt.target], None, state)
+            self.block(stmt.body, state)
+            self.block(stmt.orelse, state)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.use_expr(item.context_expr, state)
+            self.block(stmt.body, state)
+            return
+        if isinstance(stmt, ast.Try):
+            self.block(stmt.body, state)
+            for handler in stmt.handlers:
+                self.block(handler.body, state)
+            self.block(stmt.orelse, state)
+            self.block(stmt.finalbody, state)
+            return
+        for node in ast.iter_child_nodes(stmt):
+            if isinstance(node, ast.expr):
+                self.use_expr(node, state)
+
+    def branch_check(self, stmt) -> None:
+        """``traced-branch``: if/while on a bare parameter of a nested
+        function in the runtime packages."""
+        if self.depth < 2 or not self.checker.branch_rules:
+            return
+        test = stmt.test
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            test = test.operand
+        if isinstance(test, ast.Name) and \
+                test.id in self.checker.param_stack[-1]:
+            kind = "if" if isinstance(stmt, ast.If) else "while"
+            self.checker.add(
+                stmt, "traced-branch",
+                f"Python `{kind}` on parameter {test.id!r} of a nested "
+                f"(traced) function — tracers cannot drive host control "
+                f"flow; use lax.cond/lax.select or hoist the decision "
+                f"to a static config")
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, filename: str, *, branch_rules: bool):
+        self.filename = filename
+        self.branch_rules = branch_rules
+        self.findings: List[Finding] = []
+        self.param_stack: List[set] = []
+
+    def add(self, node, rule: str, message: str) -> None:
+        self.findings.append(Finding(
+            tag=TAG, rule=rule, file=self.filename,
+            line=getattr(node, "lineno", None), message=message))
+
+    def add_at(self, line: int, rule: str, message: str) -> None:
+        self.findings.append(Finding(
+            tag=TAG, rule=rule, file=self.filename, line=line,
+            message=message))
+
+    # -- module / class walk --------------------------------------------------
+    def check_module(self, tree: ast.Module) -> None:
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                self.flat_call(node)
+        for stmt in tree.body:
+            self.toplevel(stmt)
+
+    def toplevel(self, stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.function(stmt, 1)
+        elif isinstance(stmt, ast.ClassDef):
+            for sub in stmt.body:
+                self.toplevel(sub)
+
+    def flat_call(self, call: ast.Call) -> None:
+        """Position-independent call rules (numpy-random)."""
+        dotted = _dotted(call.func)
+        head = dotted.rpartition(".")[0]
+        if head in ("np.random", "numpy.random"):
+            self.add(call, "numpy-random",
+                     f"{dotted}() in a runtime module — host RNG is "
+                     f"dead under jit; thread a jax.random key instead")
+
+    # -- function walk --------------------------------------------------------
+    def function(self, fn, depth: int) -> None:
+        params = {a.arg for a in (fn.args.posonlyargs + fn.args.args +
+                                  fn.args.kwonlyargs)} - \
+            {"self", "cls", "cfg", "config"}
+        self.param_stack.append(params)
+        if depth >= 2:
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    dotted = _dotted(node.func)
+                    mod, _, attr = dotted.rpartition(".")
+                    if mod == "time" and attr in HOST_CLOCKS:
+                        self.add(node, "host-time",
+                                 f"time.{attr}() inside a nested "
+                                 f"(traced) function — a host clock is "
+                                 f"a trace-time constant under jit; "
+                                 f"time in the driver instead")
+        linter = _FunctionLinter(self, depth)
+        linter.run(fn.body)
+        self.param_stack.pop()
+
+
+def lint_source(source: str, filename: str = "<string>", *,
+                branch_rules: bool = True) -> List[Finding]:
+    """Lint one module's source text (the test-fixture entry point)."""
+    tree = ast.parse(source, filename=filename)
+    checker = _Checker(filename, branch_rules=branch_rules)
+    checker.check_module(tree)
+    return checker.findings
+
+
+def lint_file(path: str, *, branch_rules: Optional[bool] = None
+              ) -> List[Finding]:
+    if branch_rules is None:
+        branch_rules = any(os.sep + d + os.sep in path
+                           for d in BRANCH_DIRS)
+    with open(path) as f:
+        source = f.read()
+    return lint_source(source, filename=path, branch_rules=branch_rules)
+
+
+def default_targets(src_root: str) -> List[str]:
+    """The runtime modules the lint pass covers, under ``src_root``
+    (= ``.../src/repro``)."""
+    out: List[str] = []
+    for d in RUNTIME_DIRS:
+        base = os.path.join(src_root, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirs, files in os.walk(base):
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(files) if f.endswith(".py"))
+    return sorted(out)
+
+
+def lint_paths(paths) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in paths:
+        findings.extend(lint_file(path))
+    return findings

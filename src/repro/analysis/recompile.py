@@ -1,0 +1,102 @@
+"""Steady-state recompile detector.
+
+A traced round program that retraces after the first round silently
+multiplies compile cost by the round count — the bug class behind past
+"static arg changed every round" regressions. jax logs one message per
+XLA compilation when ``jax_log_compiles`` is on; :class:`CompileCounter`
+captures those messages, and :func:`check_steady_state` turns per-round
+counter snapshots (taken from the driver's per-round ``log`` callback)
+into contract findings: after the first full round has compiled
+everything, later rounds must add **zero** new compilations on either
+driver.
+"""
+from __future__ import annotations
+
+import logging
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.analysis.report import Finding
+
+__all__ = ["CompileCounter", "check_steady_state"]
+
+# the loggers jax's dispatch paths emit compile messages on (both the
+# eager dispatch path and the pjit/pxla path)
+_COMPILE_LOGGERS = ("jax._src.dispatch", "jax._src.interpreters.pxla")
+
+
+class _CountingHandler(logging.Handler):
+    def __init__(self):
+        super().__init__(level=logging.DEBUG)
+        self.count = 0
+        self.names: List[str] = []
+
+    def emit(self, record):
+        msg = record.getMessage()
+        if "Compiling" in msg:
+            self.count += 1
+            self.names.append(msg.split("\n", 1)[0])
+
+
+class CompileCounter:
+    """Context manager counting XLA compilations while active.
+
+    ::
+
+        with CompileCounter() as cc:
+            counts = []
+            trainer.run(key, log=lambda rec: counts.append(cc.count))
+        problems = check_steady_state(counts, what="loop driver")
+    """
+
+    def __init__(self):
+        self._handler = _CountingHandler()
+        self._was_on: Optional[bool] = None
+
+    @property
+    def count(self) -> int:
+        return self._handler.count
+
+    @property
+    def names(self) -> List[str]:
+        return list(self._handler.names)
+
+    def __enter__(self) -> "CompileCounter":
+        self._was_on = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        for name in _COMPILE_LOGGERS:
+            logging.getLogger(name).addHandler(self._handler)
+        return self
+
+    def __exit__(self, *exc):
+        for name in _COMPILE_LOGGERS:
+            logging.getLogger(name).removeHandler(self._handler)
+        jax.config.update("jax_log_compiles", bool(self._was_on))
+        return False
+
+
+def check_steady_state(per_round_counts: Sequence[int], *,
+                       what: str = "driver") -> List[Finding]:
+    """Findings for any round after the first that triggered new
+    compilations.
+
+    ``per_round_counts[i]`` is the cumulative compile count observed
+    when round ``i``'s record arrived. Round 0 may compile anything it
+    likes (it IS the compile round); every later round must hold the
+    counter flat. Needs at least two rounds to say anything.
+    """
+    out: List[Finding] = []
+    if len(per_round_counts) < 2:
+        return out
+    steady = per_round_counts[0]
+    for i, count in enumerate(per_round_counts[1:], start=1):
+        if count > steady:
+            out.append(Finding(
+                tag="CONTRACT-VIOLATION", rule="SteadyStateCompile",
+                message=f"{what}: round {i} triggered "
+                        f"{count - steady} recompilation(s) after the "
+                        f"warm-up round — a static argument or shape "
+                        f"is changing per round"))
+            steady = count
+    return out

@@ -256,20 +256,36 @@ class ShardedDIALSRunner:
         halo-only assertion runs against."""
         return self._classify_bodies(self.round_jaxpr(), "round")[1]
 
+    def contract_programs(self):
+        """Both round programs and their extracted bodies as tagged
+        ``repro.analysis.contracts.Program`` records — what the static
+        checker (``tools/check_programs.py``) and
+        :meth:`audit_collectives` feed the rule engine."""
+        from repro.analysis.contracts import Program
+        programs = []
+        for what, role, jaxpr in (
+                ("round", "round", self.round_jaxpr()),
+                ("shard-train program", "train_round",
+                 self.train_round_jaxpr())):
+            train, gs_bodies = self._classify_bodies(jaxpr, what)
+            programs.append(Program(
+                name=f"{what} per-shard train body",
+                roles=("train_body",), jaxpr=train))
+            programs.extend(Program(
+                name=f"{what} GS body", roles=("gs_body",), jaxpr=body)
+                for body in gs_bodies)
+        return programs
+
     def audit_collectives(self):
         """The full communication contract of both round programs, as
-        one executable check: the train body is collective-free, and
-        every GS body contains exactly the halo-exchange collectives and
-        nothing else."""
-        for what, jaxpr in (("round", self.round_jaxpr()),
-                            ("shard-train program",
-                             self.train_round_jaxpr())):
-            train, gs_bodies = self._classify_bodies(jaxpr, what)
-            runtime_lib.assert_no_collectives(
-                train, what=f"{what} per-shard train body")
-            for body in gs_bodies:
-                runtime_lib.assert_only_halo_collectives(
-                    body, what=f"{what} GS body")
+        one executable check through the rule engine: the train body is
+        collective-free, and every GS body contains exactly the
+        halo-exchange collectives and nothing else — violations raise
+        with the offending primitive's source line."""
+        from repro.analysis import contracts
+        contracts.raise_findings(contracts.run_rules(
+            self.contract_programs(),
+            rules=(contracts.CollectiveFree(), contracts.HaloOnly())))
 
     # -- the shard-train program ---------------------------------------------
     def _make_train(self):

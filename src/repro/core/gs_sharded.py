@@ -323,3 +323,26 @@ def make_sharded_evaluator(env_mod, env_cfg,
         return build(int(episodes))(params, key)
 
     return eval_fn
+
+
+# ---------------------------------------------------------------------------
+# Contract audit
+# ---------------------------------------------------------------------------
+def audit_halo_contract(program, *args, what: str = "sharded GS program"):
+    """Trace a sharded-GS callable abstractly and run the engine's
+    halo-only rule over every ``shard_map`` body it contains: nothing
+    but boundary ``ppermute``s, and at least one of them. Violations
+    raise with the emitting source line (``repro.analysis``)."""
+    from repro.analysis import contracts
+
+    jx = jax.make_jaxpr(program)(*args)
+    bodies = runtime_lib.find_shard_map_jaxprs(jx)
+    if not bodies:
+        raise AssertionError(
+            f"{what} contains no shard_map at all — it is not a mesh "
+            f"program")
+    contracts.raise_findings(contracts.run_rules(
+        [contracts.Program(name=f"{what} body[{i}]", roles=("gs_body",),
+                           jaxpr=body)
+         for i, body in enumerate(bodies)],
+        rules=(contracts.HaloOnly(),)))

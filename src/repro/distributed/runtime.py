@@ -241,29 +241,23 @@ def local_slice_struct(tree, n_shards: int):
 
 
 # ---------------------------------------------------------------------------
-# Jaxpr auditing
+# Jaxpr auditing — thin compatibility surface over repro.analysis.walker
+# (the path-aware traversal with source provenance; pallas_call kernel
+# bodies are walked explicitly there, which the old generic param scan
+# left to luck)
 # ---------------------------------------------------------------------------
 def _sub_jaxprs(eqn):
-    for val in eqn.params.values():
-        vals = val if isinstance(val, (list, tuple)) else (val,)
-        for v in vals:
-            if isinstance(v, jax.extend.core.ClosedJaxpr):
-                yield v.jaxpr
-            elif isinstance(v, jax.extend.core.Jaxpr):
-                yield v
+    from repro.analysis import walker
+    for _label, sub in walker.sub_jaxprs(eqn):
+        yield sub
 
 
 def jaxpr_primitives(jaxpr) -> Set[str]:
-    """All primitive names in a (Closed)Jaxpr, recursing into nested
-    scan/while/cond/pjit/custom_* sub-jaxprs."""
-    if isinstance(jaxpr, jax.extend.core.ClosedJaxpr):
-        jaxpr = jaxpr.jaxpr
-    prims: Set[str] = set()
-    for eqn in jaxpr.eqns:
-        prims.add(eqn.primitive.name)
-        for sub in _sub_jaxprs(eqn):
-            prims |= jaxpr_primitives(sub)
-    return prims
+    """All primitive names in a (Closed)Jaxpr, recursing into every
+    nested sub-jaxpr — scan/while/cond/pjit/custom_* AND ``pallas_call``
+    kernel bodies (``repro.analysis.walker`` owns the traversal)."""
+    from repro.analysis import walker
+    return walker.primitives(jaxpr)
 
 
 def collectives_in_jaxpr(jaxpr) -> Set[str]:
@@ -275,39 +269,85 @@ def find_shard_map_jaxprs(jaxpr):
     (recursing through nested sub-jaxprs). Auditing these — extracted
     from the REAL program rather than traced separately — is what ties
     the no-collectives assertion to the code that actually runs."""
-    if isinstance(jaxpr, jax.extend.core.ClosedJaxpr):
-        jaxpr = jaxpr.jaxpr
+    from repro.analysis import walker
+    jaxpr = walker.raw_jaxpr(jaxpr)
     found = []
     for eqn in jaxpr.eqns:
         if eqn.primitive.name == "shard_map":
             body = eqn.params.get("jaxpr")
             if body is not None:
                 found.append(body)
-        for sub in _sub_jaxprs(eqn):
+        for _label, sub in walker.sub_jaxprs(eqn):
             found.extend(find_shard_map_jaxprs(sub))
     return found
 
 
+def _collective_sites(jaxpr):
+    from repro.analysis import walker
+    return walker.sites(jaxpr, COLLECTIVE_PRIMS)
+
+
+def _describe_sites(sites) -> str:
+    return "; ".join(s.describe() for s in sites)
+
+
 def assert_no_collectives(jaxpr, *, what: str = "program") -> None:
-    """Raise if any cross-shard collective appears anywhere in ``jaxpr``."""
-    found = collectives_in_jaxpr(jaxpr)
-    if found:
+    """Raise if any cross-shard collective appears anywhere in
+    ``jaxpr`` — naming each occurrence's source line and jaxpr path."""
+    sites = _collective_sites(jaxpr)
+    if sites:
         raise AssertionError(
             f"{what} must be collective-free between AIP refreshes but "
-            f"contains {sorted(found)}")
+            f"contains {sorted({s.prim for s in sites})}: "
+            f"{_describe_sites(sites)}")
 
 
 def assert_only_halo_collectives(jaxpr, *, what: str = "GS body") -> None:
     """Raise unless every collective in ``jaxpr`` is a halo exchange
     (``HALO_PRIMS``) and at least one is present — a region-decomposed
     GS body must talk to its ring neighbours and to nobody else."""
-    found = collectives_in_jaxpr(jaxpr)
-    extra = found - HALO_PRIMS
+    sites = _collective_sites(jaxpr)
+    extra = [s for s in sites if s.prim not in HALO_PRIMS]
     if extra:
         raise AssertionError(
             f"{what} may contain only halo-exchange collectives "
-            f"{sorted(HALO_PRIMS)} but also has {sorted(extra)}")
-    if not found:
+            f"{sorted(HALO_PRIMS)} but also has "
+            f"{sorted({s.prim for s in extra})}: "
+            f"{_describe_sites(extra)}")
+    if not sites:
         raise AssertionError(
             f"{what} contains no halo exchange at all — it is not the "
             f"region-decomposed GS program")
+
+
+def live_collective_prims() -> Set[str]:
+    """Collective primitive names registered by the *running* jax (from
+    ``jax.lax``'s parallel-operator module), minus ``axis_index`` (reads
+    the shard id without communicating). The frozen tables above must
+    cover these — :func:`validate_collective_tables`."""
+    from jax._src.lax import parallel
+    live = {
+        p.name for p in vars(parallel).values()
+        if isinstance(p, jax.extend.core.Primitive)
+    }
+    return live - {"axis_index"}
+
+
+def validate_collective_tables() -> None:
+    """Raise if the frozen ``COLLECTIVE_PRIMS``/``HALO_PRIMS`` tables
+    rotted against the running jax: every live collective primitive must
+    be classified (else an upgrade could add a collective the audits
+    silently wave through), and the halo whitelist must stay a strict
+    subset of the collective set."""
+    live = live_collective_prims()
+    missing = live - COLLECTIVE_PRIMS
+    if missing:
+        raise AssertionError(
+            f"COLLECTIVE_PRIMS is missing live jax collective "
+            f"primitives {sorted(missing)} — the no-collectives audit "
+            f"would not see them; add them to the table")
+    if not HALO_PRIMS <= COLLECTIVE_PRIMS:
+        raise AssertionError(
+            f"HALO_PRIMS {sorted(HALO_PRIMS - COLLECTIVE_PRIMS)} not in "
+            f"COLLECTIVE_PRIMS — the halo whitelist must be a subset of "
+            f"the collective set")

@@ -30,5 +30,7 @@ def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
         [vl[1:], last_value.reshape(1, -1).astype(jnp.float32)], axis=0)
     adv = k_mod.gae_reverse_scan(rw, vl, nv, dn, gamma=gamma, lam=lam,
                                  interpret=bool(interpret))
-    adv = jnp.moveaxis(adv, 0, 1).reshape(shape)
+    # the scan runs in f32; cast back so reduced-precision inputs do
+    # not silently widen through the kernel path (DtypeRoundTrip)
+    adv = jnp.moveaxis(adv, 0, 1).reshape(shape).astype(values.dtype)
     return adv, adv + values

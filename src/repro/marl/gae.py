@@ -28,11 +28,17 @@ def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
         return gae_ops.gae(rewards, values, dones, last_value,
                            gamma=gamma, lam=lam,
                            interpret=decision.interpret)
+    # accumulate the scan in f32 regardless of input precision (the
+    # (1 - d) masking promotes to f32 anyway, which under bf16 inputs
+    # used to desync the carry dtype), then cast back so bf16 in means
+    # bf16 out — the DtypeRoundTrip contract
+    out_dtype = values.dtype
     t_axis = rewards.ndim - 1
-    rw = jnp.moveaxis(rewards, t_axis, 0)
-    vl = jnp.moveaxis(values, t_axis, 0)
+    rw = jnp.moveaxis(rewards, t_axis, 0).astype(jnp.float32)
+    vl = jnp.moveaxis(values, t_axis, 0).astype(jnp.float32)
     dn = jnp.moveaxis(dones.astype(jnp.float32), t_axis, 0)
-    next_values = jnp.concatenate([vl[1:], last_value[None]], axis=0)
+    next_values = jnp.concatenate(
+        [vl[1:], last_value[None].astype(jnp.float32)], axis=0)
 
     def step(carry, inp):
         r, v, nv, d = inp
@@ -40,7 +46,8 @@ def gae(rewards, values, dones, last_value, *, gamma: float = 0.99,
         adv = delta + gamma * lam * (1.0 - d) * carry
         return adv, adv
 
-    _, advs = jax.lax.scan(step, jnp.zeros_like(last_value),
+    _, advs = jax.lax.scan(step,
+                           jnp.zeros(last_value.shape, jnp.float32),
                            (rw, vl, next_values, dn), reverse=True)
-    advs = jnp.moveaxis(advs, 0, t_axis)
+    advs = jnp.moveaxis(advs, 0, t_axis).astype(out_dtype)
     return advs, advs + values

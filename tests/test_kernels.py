@@ -274,6 +274,45 @@ def test_gae_kernel_grad_matches_ref(shape):
     assert tree_maxdiff(gk, gr) < 1e-5
 
 
+def test_gae_oracle_traces_and_round_trips_bf16():
+    """The oracle used to desync its scan carry dtype under bf16 inputs
+    (the (1 - d) masking promotes to f32) and crash at trace time; it
+    now accumulates in f32 and casts back, so bf16 in means bf16 out —
+    the DtypeRoundTrip contract."""
+    from repro.marl import gae as gae_mod
+    shape = (3, 8)
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    args = (jax.random.normal(ks[0], shape, jnp.bfloat16),
+            jax.random.normal(ks[1], shape, jnp.bfloat16),
+            jax.random.bernoulli(ks[2], 0.1, shape).astype(jnp.bfloat16),
+            jax.random.normal(ks[3], shape[:-1], jnp.bfloat16))
+    adv, ret = gae_mod.gae(*args)
+    assert adv.dtype == jnp.bfloat16 and ret.dtype == jnp.bfloat16
+    assert bool(jnp.isfinite(adv.astype(jnp.float32)).all())
+    # f32 numerics untouched by the accumulate-then-cast rewrite
+    f32 = tuple(a.astype(jnp.float32) for a in args)
+    adv32, _ = gae_mod.gae(*f32)
+    np.testing.assert_allclose(np.asarray(adv.astype(jnp.float32)),
+                               np.asarray(adv32), atol=0.15, rtol=0.15)
+
+
+def test_gae_kernel_path_round_trips_bf16():
+    """The kernel dispatch path scans in f32 and used to return f32 for
+    bf16 inputs — a silent upcast; it now casts back to values.dtype."""
+    shape = (2, 8)
+    ks = jax.random.split(jax.random.PRNGKey(12), 4)
+    args = (jax.random.normal(ks[0], shape, jnp.bfloat16),
+            jax.random.normal(ks[1], shape, jnp.bfloat16),
+            jax.random.bernoulli(ks[2], 0.1, shape).astype(jnp.bfloat16),
+            jax.random.normal(ks[3], shape[:-1], jnp.bfloat16))
+    adv_k, ret_k = gae_ops.gae(*args, interpret=True)
+    assert adv_k.dtype == jnp.bfloat16 and ret_k.dtype == jnp.bfloat16
+    adv_r, _ = gae_ref.gae(*args)
+    np.testing.assert_allclose(
+        np.asarray(adv_k.astype(jnp.float32)),
+        np.asarray(adv_r.astype(jnp.float32)), atol=0.1, rtol=0.1)
+
+
 # ---------------------------------------------------------------------------
 # dispatch layer
 # ---------------------------------------------------------------------------

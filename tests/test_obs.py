@@ -413,7 +413,9 @@ def test_loop_driver_without_inner_steps_emits_null_reward(tmp_path):
 def test_sharded_driver_record_parity_and_jaxpr_unchanged(tmp_path):
     """The sharded driver's records carry the same typed key set as the
     loop driver's, and enabling telemetry leaves the traced round
-    program byte-identical — observability cannot cost a host sync."""
+    program structurally identical — observability cannot cost a host
+    sync (asserted via the analysis walker's fingerprint plus the
+    ScalarSyncBudget contract, not jaxpr string equality)."""
     _, h_loop = _build_trainer().run(jax.random.PRNGKey(0))
 
     plain = _build_trainer()
@@ -434,12 +436,23 @@ def test_sharded_driver_record_parity_and_jaxpr_unchanged(tmp_path):
     # telemetry changes nothing the math can see
     assert [r["gs_return"] for r in h_tel] == \
         [r["gs_return"] for r in h_plain]
-    # function reprs inside jaxpr params carry object addresses; the
-    # programs must be identical modulo those
-    import re
-    norm = lambda jx: re.sub(r"0x[0-9a-f]+", "0x", str(jx))
-    assert norm(teled._sharded.round_jaxpr()) == \
-        norm(plain._sharded.round_jaxpr())
+    # same primitive multiset at every program path — telemetry may not
+    # add (or move) a single operation in the traced round
+    import jax.numpy as jnp
+    from repro.analysis import contracts, walker
+    assert walker.fingerprint(teled._sharded.round_jaxpr()) == \
+        walker.fingerprint(plain._sharded.round_jaxpr())
+    # the once-per-round sync contract: the record half of the round
+    # output is scalars from the typed schema, nothing else
+    for runner in (plain._sharded, teled._sharded):
+        carry = runner._abstract_carry()
+        mask = jax.ShapeDtypeStruct(
+            (plain.info.n_agents,), jnp.float32)
+        prog = contracts.Program(
+            name="test/round", roles=("round",), fn=runner.round,
+            args=(carry, jax.ShapeDtypeStruct((2,), jnp.uint32),
+                  jax.ShapeDtypeStruct((), jnp.int32), mask))
+        assert contracts.ScalarSyncBudget().check(prog) == []
     # fused path: phase columns are explicit nulls, staleness on-mesh
     for r in h_plain:
         assert r["collect_s"] is None and r["aip_s"] is None

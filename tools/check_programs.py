@@ -1,0 +1,203 @@
+"""Static program-contract checker — the CI ``analysis`` gate.
+
+Traces both DIALS drivers across every registered scenario at tiny
+sizes (abstractly — no training FLOPs), runs the full
+``repro.analysis.contracts`` rule set over the resulting programs, runs
+the AST lint pass over the runtime modules, validates the collective
+primitive tables against the running jax, and (unless ``--no-recompile``)
+executes one tiny run per driver under the compile counter to assert
+zero steady-state retraces.
+
+Violations print through ``repro.analysis.report.format_finding`` —
+``file:line`` locally, ``::error`` annotations under GitHub Actions.
+Exit 1 on any violation.
+
+    PYTHONPATH=src python -m tools.check_programs                # everything
+    PYTHONPATH=src python -m tools.check_programs --lint         # lint only
+    PYTHONPATH=src python -m tools.check_programs --contracts \
+        --scenarios traffic,powergrid --drivers sharded
+    PYTHONPATH=src python -m tools.check_programs --selftest     # the
+        # deliberately-broken fixtures must FAIL (sanity of the gate)
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+# a multi-device mesh must exist before jax initializes; 8 forced host
+# devices mirrors the runtime-multidevice CI job (harmless if the env
+# var is already set by the caller)
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rel(findings):
+    """Repo-relativize finding paths so CI annotations land on files."""
+    import dataclasses
+    out = []
+    for f in findings:
+        if f.file and os.path.isabs(f.file):
+            try:
+                f = dataclasses.replace(
+                    f, file=os.path.relpath(f.file, REPO_ROOT))
+            except ValueError:
+                pass
+        out.append(f)
+    return out
+
+
+def run_contracts(scenarios, drivers) -> list:
+    from repro.analysis import contracts, programs
+    progs = programs.all_programs(scenarios or None, drivers)
+    print(f"# check_programs: {len(progs)} programs traced "
+          f"({', '.join(drivers)} x "
+          f"{', '.join(scenarios) if scenarios else 'all scenarios'})")
+    return contracts.run_rules(progs)
+
+
+def run_lint() -> list:
+    from repro.analysis import lint
+    targets = lint.default_targets(os.path.join(REPO_ROOT, "src",
+                                                "repro"))
+    print(f"# check_programs: linting {len(targets)} runtime modules")
+    return lint.lint_paths(targets)
+
+
+def run_tables() -> list:
+    from repro.analysis.report import Finding
+    from repro.distributed import runtime
+    try:
+        runtime.validate_collective_tables()
+    except AssertionError as e:
+        return [Finding(tag="CONTRACT-VIOLATION", rule="PrimTables",
+                        message=str(e))]
+    return []
+
+
+def run_recompile() -> list:
+    """One tiny run per driver under the compile counter: zero
+    retraces after the warm-up round (3 rounds so the steady state is
+    observed twice)."""
+    import jax
+    from repro.analysis import programs, recompile
+    findings = []
+    for driver, kw in (("loop", dict(shards=1)), ("sharded", {})):
+        trainer = programs.tiny_trainer("traffic", outer_rounds=3, **kw)
+        counts = []
+        with recompile.CompileCounter() as cc:
+            trainer.run(jax.random.PRNGKey(0),
+                        log=lambda rec: counts.append(cc.count))
+        print(f"# check_programs: {driver} driver compile counts "
+              f"per round: {counts}")
+        findings.extend(recompile.check_steady_state(
+            counts, what=f"{driver} driver"))
+    return findings
+
+
+def run_selftest() -> int:
+    """The gate must still be able to fail: deliberately-broken fixtures
+    (a psum smuggled into a train body, an unused donated buffer, a
+    reused PRNG key) must each produce a finding with provenance."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.analysis import contracts, lint, walker
+    from repro.distributed import runtime
+
+    failures = []
+
+    mesh = runtime.shard_mesh(1)
+    smuggled = jax.make_jaxpr(runtime.shard_map_nocheck(
+        lambda x: x + jax.lax.psum(x.sum(), runtime.SHARD_AXIS),
+        mesh, in_specs=(P(runtime.SHARD_AXIS),),
+        out_specs=P(runtime.SHARD_AXIS)))(jnp.ones((4, 2)))
+    body = runtime.find_shard_map_jaxprs(smuggled)[0]
+    found = contracts.run_rules(
+        [contracts.Program(name="selftest/psum-in-train-body",
+                           roles=("train_body",), jaxpr=body)])
+    if not (found and found[0].line and "psum" in found[0].message):
+        failures.append("psum-in-train-body fixture did not fail "
+                        "with provenance")
+
+    def unused_donation(carry, x):
+        return x * 2.0                     # carry never aliased
+    found = contracts.DonationUsed().check(contracts.Program(
+        name="selftest/unused-donation", roles=("donated",),
+        fn=unused_donation,
+        args=(jax.ShapeDtypeStruct((8,), jnp.float32),
+              jax.ShapeDtypeStruct((8,), jnp.float32)),
+        donate_argnums=(0,)))
+    if not found:
+        failures.append("unused-donation fixture did not fail")
+
+    found = lint.lint_source(
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    b = jax.random.uniform(key, (3,))\n"
+        "    return a + b\n", filename="selftest_reuse.py")
+    if not (found and found[0].rule == "prng-reuse" and found[0].line):
+        failures.append("reused-PRNG-key fixture did not fail with "
+                        "provenance")
+
+    site = walker.sites(smuggled, ("psum",))
+    if not (site and site[0].path and site[0].file):
+        failures.append("walker lost path/source provenance")
+
+    for msg in failures:
+        print(f"SELFTEST-FAIL {msg}")
+    print("# check_programs --selftest: "
+          + ("FAIL" if failures else "OK (all broken fixtures fail)"))
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--contracts", action="store_true",
+                    help="run only the jaxpr contract pass")
+    ap.add_argument("--lint", action="store_true",
+                    help="run only the AST lint pass")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the gate fails on broken fixtures")
+    ap.add_argument("--scenarios", default="",
+                    help="comma-separated env names (default: all "
+                         "registered)")
+    ap.add_argument("--drivers", default="loop,sharded",
+                    help="comma-separated driver subset")
+    ap.add_argument("--no-recompile", action="store_true",
+                    help="skip the steady-state recompile check (the "
+                         "one pass that executes real rounds)")
+    args = ap.parse_args()
+
+    if args.selftest:
+        return run_selftest()
+
+    from repro.analysis.report import emit
+    everything = not (args.contracts or args.lint)
+    findings = []
+    if everything or args.contracts:
+        findings += run_tables()
+        findings += run_contracts(
+            [s for s in args.scenarios.split(",") if s],
+            [d for d in args.drivers.split(",") if d])
+        if not args.no_recompile:
+            findings += run_recompile()
+    if everything or args.lint:
+        findings += run_lint()
+    n = emit(_rel(findings))
+    if n:
+        print(f"# check_programs: {n} violation(s)")
+        return 1
+    print("# check_programs: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

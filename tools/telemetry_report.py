@@ -152,10 +152,13 @@ def main(argv=None) -> int:
 
     events = load_events(args.path)
     if args.check:
+        # violations go through the analyzer's formatter: plain
+        # TAG file [rule] lines locally, ::error annotations in CI
+        from repro.analysis.report import Finding, emit
         problems = check(events)
-        for p in problems:
-            print(f"TELEMETRY-INVALID {p}")
-        if problems:
+        if emit([Finding(tag="TELEMETRY-INVALID", rule="TelemetrySchema",
+                         message=p, file=args.path)
+                 for p in problems]):
             return 1
         procs = sorted({e.get("proc", 0) for e in events})
         n_rounds = sum(e.get("event") == "round" for e in events)
