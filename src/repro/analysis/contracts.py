@@ -37,6 +37,11 @@ Rule catalogue (see README "Static program contracts"):
                       (``repro.obs.metrics.ROUND_KEYS``) — the
                       once-per-round sync contract as a rule, replacing
                       jaxpr string-equality tests.
+``ReshardCollectives`` the restore/re-shard transfers (post-loss
+                      resume) compile to data movement only —
+                      all-gather / collective-permute — never a
+                      combining collective; checked on compiled HLO
+                      text, where sharding-induced collectives live.
 
 Programs carry ``roles`` tags; each rule declares which roles it
 applies to, and :func:`run_rules` does the cross product. Adding a
@@ -46,6 +51,7 @@ contract = subclassing :class:`ContractRule` and appending to
 from __future__ import annotations
 
 import dataclasses
+import re
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -57,7 +63,7 @@ from repro.analysis.report import Finding
 __all__ = [
     "Program", "ContractRule", "run_rules", "DEFAULT_RULES",
     "CollectiveFree", "HaloOnly", "NoHostCallback", "DonationUsed",
-    "DtypeRoundTrip", "ScalarSyncBudget",
+    "DtypeRoundTrip", "ScalarSyncBudget", "ReshardCollectives",
 ]
 
 TAG = "CONTRACT-VIOLATION"
@@ -312,9 +318,63 @@ class ScalarSyncBudget(ContractRule):
         return out
 
 
+class ReshardCollectives(ContractRule):
+    """The restore/re-shard path moves data; it must not compute on it.
+
+    After a recovery the survivors re-place checkpoint rows onto the
+    shrunken mesh and fetch sharded state back for snapshots — pure data
+    movement, which XLA lowers to at most ``all-gather`` /
+    ``collective-permute``. Any other collective in the compiled
+    transfer (an ``all-reduce``, ``reduce-scatter``, ``all-to-all``)
+    means the resume path is silently *combining* shards rather than
+    moving rows — exactly the bug class that turns a bitwise resume into
+    a numerically different run. Sharding-induced collectives do not
+    exist at jaxpr level, so the rule inspects the *compiled* HLO text
+    (same observable layer as ``DonationUsed``'s donation attributes).
+    """
+    name = "ReshardCollectives"
+    roles = ("reshard",)
+    # HLO op mnemonics; compiled text shows them as e.g. "all-gather",
+    # "all-gather-start", "%all-gather.3 = ..."
+    COLLECTIVE_TOKENS = ("all-reduce", "all-gather", "all-to-all",
+                         "collective-permute", "reduce-scatter",
+                         "collective-broadcast")
+    ALLOWED = frozenset({"all-gather", "collective-permute"})
+
+    @classmethod
+    def _collectives_in_text(cls, text: str) -> List[str]:
+        """Collective op tokens present in (compiled) HLO text, sorted.
+        Longest-token-first matching so ``all-gather-start`` does not
+        also count as a phantom second op."""
+        found = set()
+        for tok in cls.COLLECTIVE_TOKENS:
+            if re.search(rf"(?<![\w-]){re.escape(tok)}(?![a-z])", text):
+                found.add(tok)
+        return sorted(found)
+
+    def check(self, program: Program) -> List[Finding]:
+        if program.fn is None:
+            return []
+        jitted = program.fn
+        if not hasattr(jitted, "lower"):
+            jitted = jax.jit(jitted)
+        compiled = jitted.lower(*program.args).compile()
+        text = compiled.as_text()
+        banned = [tok for tok in self._collectives_in_text(text)
+                  if tok not in self.ALLOWED]
+        if banned:
+            return [Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: compiled re-shard transfer "
+                        f"contains {banned} — the restore path must be "
+                        f"pure data movement (all-gather / "
+                        f"collective-permute only)")]
+        return []
+
+
 DEFAULT_RULES: Tuple[ContractRule, ...] = (
     CollectiveFree(), HaloOnly(), NoHostCallback(), DonationUsed(),
-    DtypeRoundTrip(), ScalarSyncBudget(),
+    DtypeRoundTrip(), ScalarSyncBudget(), ReshardCollectives(),
 )
 
 

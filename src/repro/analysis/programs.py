@@ -32,7 +32,8 @@ import jax.numpy as jnp
 from repro.analysis.contracts import Program
 
 __all__ = ["tiny_trainer", "loop_programs", "sharded_programs",
-           "kernel_dtype_programs", "scenario_programs", "all_programs",
+           "kernel_dtype_programs", "recovery_programs",
+           "scenario_programs", "all_programs",
            "register_programs", "DRIVERS"]
 
 DRIVERS = ("loop", "sharded")
@@ -179,6 +180,82 @@ def sharded_programs(env: str, *, kind: str = "fnn",
 
 
 # ---------------------------------------------------------------------------
+# recovery / resume path (post-loss re-bootstrap)
+# ---------------------------------------------------------------------------
+def recovery_programs(env: str = "traffic", *,
+                      kind: str = "fnn") -> List[Program]:
+    """The post-loss resume path's traced programs.
+
+    After a host death the survivors re-exec, re-bootstrap as a shrunken
+    group, and resume from the committed distributed checkpoint — so the
+    programs that actually run are (a) the fused round retraced on the
+    *shrunken* mesh and (b) the two jit-identity re-shard transfers the
+    restore/mirror path performs: checkpoint rows (host/replicated) →
+    agent-sharded placement, and agent-sharded state → replicated fetch
+    (the checkpoint snapshot + metrics path). The round re-audits under
+    the full rule set; the ``("reshard",)`` programs feed the
+    ``ReshardCollectives`` rule, which pins the restore path to
+    data-movement collectives only (all-gather / collective-permute) —
+    a surprise all-reduce here would mean the resume path silently
+    recomputes instead of moving rows."""
+    from repro.core import dials_sharded
+    from repro.distributed import runtime
+
+    trainer = tiny_trainer(env, kind=kind)
+    info = trainer.info
+    n_dev = len(jax.devices())
+    # the shrunken group: half the devices vanished with the dead host
+    n_shards = runtime.choose_shards(info.n_agents, max(1, n_dev // 2))
+    runner = dials_sharded.ShardedDIALSRunner(
+        trainer.env_mod, trainer.env_cfg, trainer.policy_cfg,
+        trainer.aip_cfg, trainer.ppo_cfg, trainer.cfg,
+        n_shards=n_shards)
+
+    key = _key_aval()
+    carry = runner._abstract_carry()
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    mask = jax.ShapeDtypeStruct((info.n_agents,), jnp.float32)
+    n_carry_leaves = len(jax.tree.leaves(carry))
+    round_jx = runner.round_jaxpr()
+    pre = f"recovery/{env}@{runner.n_shards}"
+    programs = [
+        Program(name=f"{pre}/resume_round", roles=("round", "donated"),
+                jaxpr=round_jx, fn=runner.round,
+                args=(carry, key, scalar, mask), donate_argnums=(0,),
+                meta={"expect_aliased": n_carry_leaves}),
+    ]
+    # the resume round IS a fused round program — classify it as one
+    # (the "round" key sets the expected GS-body count: collect + eval)
+    train_body, gs_bodies = runner._classify_bodies(round_jx, "round")
+    programs.append(Program(
+        name=f"{pre}/resume_round/train_body", roles=("train_body",),
+        jaxpr=train_body))
+    programs.extend(Program(
+        name=f"{pre}/resume_round/gs_body[{i}]", roles=("gs_body",),
+        jaxpr=body) for i, body in enumerate(gs_bodies))
+
+    # the re-shard transfers: jit identities whose in/out shardings force
+    # XLA to emit exactly the data movement the restore path performs
+    sharded = jax.tree.map(
+        lambda _: runtime.agent_sharding(runner.mesh), carry)
+    replicated = jax.tree.map(
+        lambda _: runtime.replicated_sharding(runner.mesh), carry)
+    place = jax.jit(lambda t: t, in_shardings=(replicated,),
+                    out_shardings=sharded)
+    fetch = jax.jit(lambda t: t, in_shardings=(sharded,),
+                    out_shardings=replicated)
+    programs.extend([
+        Program(name=f"{pre}/reshard_place", roles=("reshard",),
+                fn=place, args=(carry,),
+                meta={"mesh_devices": runner.mesh.devices.size}),
+        Program(name=f"{pre}/reshard_fetch", roles=("reshard",),
+                fn=fetch, args=(carry,),
+                meta={"mesh_devices": runner.mesh.devices.size}),
+    ])
+    return programs
+
+
+# ---------------------------------------------------------------------------
 # kernel dispatch dtype contracts
 # ---------------------------------------------------------------------------
 def kernel_dtype_programs(dtype=jnp.bfloat16) -> List[Program]:
@@ -230,19 +307,23 @@ def scenario_programs(env: str, drivers: Iterable[str] = DRIVERS,
 
 def all_programs(scenarios: Optional[Iterable[str]] = None,
                  drivers: Iterable[str] = DRIVERS,
-                 *, kernels: bool = True) -> List[Program]:
+                 *, kernels: bool = True,
+                 recovery: bool = True) -> List[Program]:
     """Every registered program: both drivers × every scenario, the
-    kernel dtype contracts, and anything added via
-    :func:`register_programs`."""
+    kernel dtype contracts, the post-loss resume-path programs, and
+    anything added via :func:`register_programs`."""
     from repro.envs import registry
 
     if scenarios is None:
         scenarios = registry.names()
+    scenarios = list(scenarios)
     out: List[Program] = []
     for env in scenarios:
         out.extend(scenario_programs(env, drivers))
     if kernels:
         out.extend(kernel_dtype_programs())
+    if recovery and scenarios and "sharded" in drivers:
+        out.extend(recovery_programs(scenarios[0]))
     for builder in _EXTRA_BUILDERS:
         out.extend(builder())
     return out

@@ -1,3 +1,4 @@
 """Sharding-aware checkpointing: atomic save, integrity manifest, rotation,
-async writes, restore-with-reshard for elastic restarts."""
-from repro.checkpoint import ckpt, manager  # noqa: F401
+async writes, restore-with-reshard for elastic restarts, and the
+distributed per-process-slice layout with a two-phase rank-0 commit."""
+from repro.checkpoint import ckpt, distributed, manager  # noqa: F401

@@ -12,12 +12,18 @@ from __future__ import annotations
 import hashlib
 import json
 import os
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+
+def leaf_name(path) -> str:
+    """Public alias for the path→filename encoding (distributed layout
+    reuses it for by-name leaf addressing)."""
+    return _leaf_name(path)
 
 
 def _leaf_name(path) -> str:
@@ -40,7 +46,11 @@ def _sha256(fn: str) -> str:
     return h.hexdigest()
 
 
-def save(directory: str, tree, *, step: int = 0, extra: Optional[dict] = None):
+def save(directory: str, tree, *, step: int = 0, extra: Optional[dict] = None,
+         on_phase: Optional[Callable[[str], None]] = None):
+    """``on_phase`` (if given) is called with ``"leaves_written"`` after
+    every leaf file landed but *before* the manifest — the window where a
+    crash leaves an unverifiable (and therefore skipped) checkpoint."""
     os.makedirs(directory, exist_ok=True)
     leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
     entries = []
@@ -59,9 +69,35 @@ def save(directory: str, tree, *, step: int = 0, extra: Optional[dict] = None):
             "dtype": str(arr.dtype),
             "sha256": _sha256(os.path.join(directory, name)),
         })
+    if on_phase is not None:
+        on_phase("leaves_written")
     manifest = {"step": step, "leaves": entries, "extra": extra or {}}
     with open(os.path.join(directory, MANIFEST), "w") as f:
         json.dump(manifest, f, indent=1)
+
+
+def load_manifest(directory: str) -> Optional[dict]:
+    """The parsed manifest, or None when missing/corrupt."""
+    try:
+        with open(os.path.join(directory, MANIFEST)) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def load_array(directory: str, name: str,
+               manifest: Optional[dict] = None) -> np.ndarray:
+    """One leaf by manifest ``name`` (``<leaf>.npy``), with the uint
+    bit-pattern view undone back to the true (bf16/fp8) dtype."""
+    manifest = manifest if manifest is not None else load_manifest(directory)
+    dtypes = {e["name"]: e["dtype"] for e in (manifest or {}).get("leaves", [])}
+    arr = np.load(os.path.join(directory, name))
+    true_dt = dtypes.get(name)
+    if true_dt is not None and arr.dtype.kind == "u" \
+            and true_dt != str(arr.dtype):
+        import ml_dtypes  # noqa: F401  (registers bf16/fp8 dtypes)
+        arr = arr.view(np.dtype(true_dt))
+    return arr
 
 
 def is_valid(directory: str) -> bool:

@@ -1,0 +1,523 @@
+"""Distributed (per-process agent-slice) checkpoints with a two-phase
+rank-0 commit.
+
+Lifting the old "no checkpointing on a mesh spanning processes" ban
+needs a layout where no process ever has to materialize the global
+carry: each process writes only the contiguous agent block its local
+devices hold (the ``runtime.shard_agent_tree`` tiling) as a complete
+mini-checkpoint with its own integrity manifest, and rank 0 turns the
+pile of slices into a checkpoint *atomically* with a commit marker.
+
+On-disk layout of one step::
+
+    <dir>/step_<n>/
+        agents-00000-00002/      # process A's rows [0, 2): leaf .npy files
+            ...  manifest.json   #   + per-slice integrity manifest
+        agents-00002-00004/      # process B's rows [2, 4)
+        replicated/              # rank 0 only: non-agent leaves (round, key)
+        COMMIT                   # rank 0, written LAST: the step's metadata
+
+Two-phase protocol: (prepare) every process writes its slice into a
+``.tmp-*`` dir and renames it into place; rank 0 additionally writes
+``replicated/``, then polls until the renamed slices verify and tile
+``[0, n_agents)`` exactly, and only then (commit) renames ``COMMIT``
+into place. A host dying mid-write therefore leaves either a missing
+slice or a missing ``COMMIT`` — never a torn checkpoint:
+``restore_latest`` treats any step without a verifying ``COMMIT`` as
+garbage, skips it (optionally deleting it), and falls back to the
+previous committed step. A *fully prepared* step whose rank 0 died
+between prepare and commit can be completed by any survivor via
+:meth:`DistributedCheckpointManager.finalize_pending` (prepare is
+complete, so the commit is unambiguous — the recovery supervisor does
+this before re-bootstrapping).
+
+Restore is elastic: the saved slice count need not match the reading
+mesh. :func:`read_step_mesh` builds each global array with
+``jax.make_array_from_callback``, mapping every new shard's rows back
+to saved slices by range intersection — the ownership mapping is the
+``fault.ElasticPlan`` even tiling, and the plan is emitted as a
+``restore_reshard`` telemetry event so an elastic restart is auditable.
+:func:`read_step_host` assembles full host arrays for the loop driver
+and cross-format restores.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.checkpoint.manager import CheckpointManager, step_dir
+
+COMMIT = "COMMIT"
+REPLICATED = "replicated"
+_SLICE_RE = re.compile(r"^agents-(\d+)-(\d+)$")
+
+
+# ---------------------------------------------------------------------------
+# Leaf classification + local-slice extraction
+# ---------------------------------------------------------------------------
+def is_agent_sharded(leaf) -> bool:
+    """True for jax.Arrays actually split over devices along axis 0 —
+    the agent-stacked carry leaves on a >1-shard mesh. Host numpy,
+    python scalars, single-device and fully-replicated arrays all fall
+    into the ``replicated/`` group (rank 0 writes them once)."""
+    return (isinstance(leaf, jax.Array) and leaf.ndim >= 1
+            and hasattr(leaf, "sharding")
+            and not leaf.sharding.is_fully_replicated)
+
+
+def local_block(leaf) -> Tuple[np.ndarray, int, int]:
+    """This process's contiguous rows of an agent-sharded array:
+    ``(block, lo, hi)`` with ``block == leaf[lo:hi]``."""
+    def start(s):
+        idx = s.index[0] if s.index else slice(None)
+        return idx.start or 0
+
+    shards = sorted(leaf.addressable_shards, key=start)
+    lo = start(shards[0])
+    rows = []
+    nxt = lo
+    for s in shards:
+        data = np.asarray(s.data)
+        assert start(s) == nxt, \
+            f"non-contiguous local shards at row {start(s)} (expected {nxt})"
+        rows.append(data)
+        nxt += data.shape[0]
+    return np.concatenate(rows, axis=0), lo, nxt
+
+
+def _slice_name(lo: int, hi: int) -> str:
+    return f"agents-{lo:05d}-{hi:05d}"
+
+
+def slice_dirs(d: str) -> List[Tuple[int, int, str]]:
+    """Renamed-into-place slice dirs of one step: ``[(lo, hi, path)]``
+    sorted by ``lo`` (``.tmp-*`` prepares are excluded by name)."""
+    out = []
+    for name in os.listdir(d) if os.path.isdir(d) else []:
+        m = _SLICE_RE.match(name)
+        if m:
+            out.append((int(m.group(1)), int(m.group(2)),
+                        os.path.join(d, name)))
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Low-level writers (unit-testable without jax.distributed)
+# ---------------------------------------------------------------------------
+def write_slice(d: str, block_tree, lo: int, hi: int, n_agents: int, *,
+                step: int, tag: str = "w", on_phase=None) -> str:
+    """Prepare one agent slice: write ``block_tree`` (host arrays of rows
+    ``[lo, hi)``) into ``.tmp-*`` and rename into place. Returns the
+    slice path."""
+    tmp = os.path.join(d, f".tmp-{_slice_name(lo, hi)}-{tag}")
+    final = os.path.join(d, _slice_name(lo, hi))
+    shutil.rmtree(tmp, ignore_errors=True)
+    ckpt.save(tmp, block_tree, step=step,
+              extra={"agents": [lo, hi], "n_agents": n_agents},
+              on_phase=on_phase)
+    shutil.rmtree(final, ignore_errors=True)
+    os.rename(tmp, final)
+    return final
+
+
+def write_replicated(d: str, rep_tree, *, step: int,
+                     extra: Optional[dict] = None, on_phase=None) -> str:
+    """Prepare the rank-0 replicated group (carries the user ``extra``)."""
+    tmp = os.path.join(d, ".tmp-" + REPLICATED)
+    final = os.path.join(d, REPLICATED)
+    shutil.rmtree(tmp, ignore_errors=True)
+    ckpt.save(tmp, rep_tree, step=step, extra={"user": extra or {}},
+              on_phase=on_phase)
+    shutil.rmtree(final, ignore_errors=True)
+    os.rename(tmp, final)
+    return final
+
+
+def build_commit_meta(d: str, *, expect_n: Optional[int] = None,
+                      verify: bool = True) -> Optional[dict]:
+    """The COMMIT metadata for a *fully prepared* step dir, or None if
+    prepare is incomplete: the replicated group must verify, every slice
+    must verify, and the slices must tile ``[0, n_agents)`` exactly."""
+    rep = os.path.join(d, REPLICATED)
+    repm = ckpt.load_manifest(rep)
+    if repm is None or (verify and not ckpt.is_valid(rep)):
+        return None
+    slices = slice_dirs(d)
+    n_agents, sharded = 0, []
+    if slices:
+        first = ckpt.load_manifest(slices[0][2])
+        if first is None:
+            return None
+        n_agents = int(first["extra"].get("n_agents", 0))
+        if expect_n is not None and n_agents != expect_n:
+            return None
+        sharded = sorted(e["name"] for e in first["leaves"])
+        nxt = 0
+        for lo, hi, path in slices:
+            if lo != nxt:
+                return None              # gap or overlap in the tiling
+            m = ckpt.load_manifest(path)
+            if m is None or m["extra"].get("agents") != [lo, hi] \
+                    or sorted(e["name"] for e in m["leaves"]) != sharded \
+                    or (verify and not ckpt.is_valid(path)):
+                return None
+            nxt = hi
+        if nxt != n_agents:
+            return None
+    elif expect_n:
+        return None
+    return {"step": int(repm["step"]), "n_agents": n_agents,
+            "slices": [[lo, hi] for lo, hi, _ in slices],
+            "sharded": sharded,
+            "replicated": sorted(e["name"] for e in repm["leaves"]),
+            "extra": dict(repm.get("extra", {}).get("user", {}))}
+
+
+def write_commit(d: str, meta: dict) -> None:
+    tmp = os.path.join(d, ".tmp-" + COMMIT)
+    with open(tmp, "w") as f:
+        json.dump(meta, f, indent=1)
+    os.replace(tmp, os.path.join(d, COMMIT))
+
+
+# ---------------------------------------------------------------------------
+# Readers
+# ---------------------------------------------------------------------------
+def is_distributed_dir(d: str) -> bool:
+    return (os.path.exists(os.path.join(d, COMMIT))
+            or os.path.isdir(os.path.join(d, REPLICATED))
+            or bool(slice_dirs(d)))
+
+
+def committed_meta(d: str, *, verify: bool = True) -> Optional[dict]:
+    """The COMMIT metadata iff the step is committed AND (``verify``)
+    every referenced manifest still checks out — a corrupted committed
+    step reads as uncommitted and is skipped."""
+    try:
+        with open(os.path.join(d, COMMIT)) as f:
+            meta = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not verify:
+        return meta
+    try:
+        rebuilt = build_commit_meta(d, expect_n=meta.get("n_agents"))
+    except (KeyError, TypeError, ValueError):
+        return None
+    if rebuilt is None or rebuilt["slices"] != meta.get("slices") \
+            or rebuilt["sharded"] != meta.get("sharded"):
+        return None
+    return meta
+
+
+class SliceReader:
+    """Row-range reads across a committed step's slices, with the loaded
+    arrays cached per ``(slice, leaf)`` so a restore touches each file
+    once."""
+
+    def __init__(self, d: str, meta: dict):
+        self.dir = d
+        self.meta = meta
+        self.slices = slice_dirs(d)
+        self._cache: Dict[Tuple[str, str], np.ndarray] = {}
+        self._manifests: Dict[str, Optional[dict]] = {}
+
+    def _slice_array(self, path: str, name: str) -> np.ndarray:
+        key = (path, name)
+        if key not in self._cache:
+            if path not in self._manifests:
+                self._manifests[path] = ckpt.load_manifest(path)
+            self._cache[key] = ckpt.load_array(
+                path, name, self._manifests[path])
+        return self._cache[key]
+
+    def rows(self, name: str, start: int, stop: int) -> np.ndarray:
+        """Rows ``[start, stop)`` of the sharded leaf ``name``, assembled
+        from every saved slice the range intersects (the ElasticPlan
+        ownership mapping run backwards)."""
+        parts = []
+        for lo, hi, path in self.slices:
+            a, b = max(lo, start), min(hi, stop)
+            if a >= b:
+                continue
+            parts.append(self._slice_array(path, name)[a - lo:b - lo])
+        out = np.concatenate(parts, axis=0) if parts else \
+            np.zeros((0,), np.float32)
+        assert out.shape[0] == stop - start, \
+            f"{name}: rows [{start},{stop}) not covered by slices"
+        return out
+
+    def replicated(self, name: str) -> np.ndarray:
+        return ckpt.load_array(os.path.join(self.dir, REPLICATED), name)
+
+
+def _target_leaves(target_tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    return [(ckpt.leaf_name(path) + ".npy", leaf) for path, leaf in flat], \
+        treedef
+
+
+def read_step_host(d: str, target_tree, *, meta: Optional[dict] = None):
+    """Restore a committed step into host/global arrays shaped like
+    ``target_tree`` (names absent from the target — e.g. ``reports`` —
+    are simply not read). Returns ``(tree, step)``."""
+    meta = meta if meta is not None else committed_meta(d)
+    if meta is None:
+        raise ValueError(f"{d}: not a committed distributed checkpoint")
+    reader = SliceReader(d, meta)
+    sharded = set(meta["sharded"])
+    named, treedef = _target_leaves(target_tree)
+    out = []
+    for name, leaf in named:
+        if name in sharded:
+            arr = reader.rows(name, 0, meta["n_agents"])
+        else:
+            arr = reader.replicated(name)
+        if not hasattr(leaf, "shape"):       # python scalar leaf (round)
+            out.append(type(leaf)(arr))
+            continue
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{name}: ckpt {arr.shape} vs target {leaf.shape}"
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out), int(meta["step"])
+
+
+def read_step_mesh(d: str, target_tree, mesh, *,
+                   meta: Optional[dict] = None, telemetry=None):
+    """Restore a committed step directly onto ``mesh`` — each process
+    loads only the rows its local devices own, so a checkpoint written
+    by P processes / S shards restores onto any other process/shard
+    count. Returns ``(tree, step)`` of global jax.Arrays."""
+    from repro.distributed import fault, runtime as runtime_lib
+    meta = meta if meta is not None else committed_meta(d)
+    if meta is None:
+        raise ValueError(f"{d}: not a committed distributed checkpoint")
+    reader = SliceReader(d, meta)
+    sharded = set(meta["sharded"])
+    n_agents = int(meta["n_agents"])
+    new_shards = int(mesh.devices.size)
+    if sharded and n_agents:
+        old = max(1, len(meta["slices"]))
+        plan = fault.ElasticPlan(
+            n_agents=n_agents, old_shards=old, new_shards=new_shards,
+            dead=(), survivors=tuple(range(old)))
+        if telemetry is not None:
+            telemetry.emit("restore_reshard", step=int(meta["step"]),
+                           n_agents=n_agents, old_shards=plan.old_shards,
+                           new_shards=plan.new_shards,
+                           slices=meta["slices"])
+    agent_sh = runtime_lib.agent_sharding(mesh)
+    rep_sh = runtime_lib.replicated_sharding(mesh)
+    named, treedef = _target_leaves(target_tree)
+    out = []
+    for name, leaf in named:
+        if not hasattr(leaf, "shape"):
+            out.append(type(leaf)(reader.replicated(name)))
+            continue
+        shape, dtype = tuple(leaf.shape), leaf.dtype
+        if name in sharded:
+            def cb(idx, name=name, dtype=dtype):
+                rows = reader.rows(name, idx[0].start or 0,
+                                   idx[0].stop if idx[0].stop is not None
+                                   else n_agents)
+                return np.asarray(rows[(slice(None),) + tuple(idx[1:])],
+                                  dtype=dtype)
+            out.append(jax.make_array_from_callback(shape, agent_sh, cb))
+        else:
+            arr = np.asarray(reader.replicated(name), dtype=dtype)
+            assert arr.shape == shape, \
+                f"{name}: ckpt {arr.shape} vs target {shape}"
+            out.append(jax.make_array_from_callback(
+                shape, rep_sh, lambda idx, arr=arr: arr[idx]))
+    return jax.tree_util.tree_unflatten(treedef, out), int(meta["step"])
+
+
+# ---------------------------------------------------------------------------
+# The manager
+# ---------------------------------------------------------------------------
+class DistributedCheckpointManager(CheckpointManager):
+    """Per-process slice writer + rank-0 two-phase committer.
+
+    Every process calls ``save(step, tree)`` with the *same* step and the
+    mesh-sharded tree; each writes its own slice, rank 0 writes the
+    replicated group and commits once every slice verifies. Single
+    process (or a tree with no sharded leaves) degenerates to one slice
+    — the format is identical, so single- and multi-process runs share
+    checkpoints."""
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_write: bool = True, process_id: int = 0,
+                 primary: Optional[bool] = None,
+                 commit_timeout_s: float = 60.0, poll_s: float = 0.05,
+                 telemetry=None):
+        super().__init__(directory, keep=keep, async_write=async_write)
+        self.process_id = process_id
+        self.primary = (process_id == 0) if primary is None else primary
+        self.commit_timeout_s = commit_timeout_s
+        self.poll_s = poll_s
+        self.telemetry = telemetry
+        # clean slice prepares a crashed writer left inside step dirs
+        for s in self.steps():
+            d = step_dir(directory, s)
+            for name in os.listdir(d):
+                if name.startswith(".tmp-"):
+                    shutil.rmtree(os.path.join(d, name), ignore_errors=True)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, *, extra: Optional[dict] = None):
+        payload = self._snapshot(tree)
+        self.wait()
+        if self.async_write:
+            self._thread = threading.Thread(
+                target=self._write_guarded, args=(step, payload, extra),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, payload, extra)
+
+    def _snapshot(self, tree) -> dict:
+        """Caller-thread device→host copy: local rows of sharded leaves,
+        full values of replicated ones."""
+        flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+        shard_blocks: Dict[str, np.ndarray] = {}
+        replicated: Dict[str, object] = {}
+        lo = hi = n = None
+        for path, leaf in flat:
+            name = ckpt.leaf_name(path)
+            if is_agent_sharded(leaf):
+                blk, blo, bhi = local_block(leaf)
+                if lo is None:
+                    lo, hi, n = blo, bhi, int(leaf.shape[0])
+                else:
+                    assert (blo, bhi, int(leaf.shape[0])) == (lo, hi, n), \
+                        f"{name}: mixed agent shardings in one checkpoint"
+                shard_blocks[name] = blk
+            else:
+                replicated[name] = jax.device_get(leaf) \
+                    if isinstance(leaf, jax.Array) else leaf
+        return {"sharded": shard_blocks, "replicated": replicated,
+                "lo": lo, "hi": hi, "n": n}
+
+    def _write(self, step: int, payload, extra):
+        d = step_dir(self.directory, step)
+        os.makedirs(d, exist_ok=True)
+        self._phase(step, "write_begin", d)
+        if payload["sharded"]:
+            # rewriting a step saved under an older shard layout: drop
+            # stale slices overlapping our range before preparing ours
+            for lo, hi, path in slice_dirs(d):
+                if lo < payload["hi"] and hi > payload["lo"] and \
+                        (lo, hi) != (payload["lo"], payload["hi"]):
+                    shutil.rmtree(path, ignore_errors=True)
+            write_slice(d, payload["sharded"], payload["lo"], payload["hi"],
+                        payload["n"], step=step, tag=f"p{self.process_id}",
+                        on_phase=lambda ph: self._phase(step, ph, d))
+        self._phase(step, "prepared", d)
+        if not self.primary:
+            return
+        # a stale COMMIT (step being rewritten after an elastic restart)
+        # must drop before the new prepare completes
+        try:
+            os.remove(os.path.join(d, COMMIT))
+        except OSError:
+            pass
+        write_replicated(d, payload["replicated"], step=step, extra=extra,
+                         on_phase=lambda ph: self._phase(step, ph, d))
+        if self._await_commit(d, step, payload["n"]):
+            self._phase(step, "committed", d)
+            self._rotate()
+        else:
+            if self.telemetry is not None:
+                self.telemetry.emit("ckpt_commit_timeout", step=step,
+                                    timeout_s=self.commit_timeout_s)
+
+    def _await_commit(self, d: str, step: int, expect_n) -> bool:
+        """Phase two: poll until every peer's slice is prepared and
+        verifies, then write COMMIT. False on timeout (a peer died
+        mid-prepare — the step stays uncommitted, restore skips it)."""
+        deadline = time.monotonic() + self.commit_timeout_s
+        while True:
+            meta = build_commit_meta(d, expect_n=expect_n)
+            if meta is not None:
+                self._phase(step, "pre_commit", d)
+                write_commit(d, meta)
+                return True
+            if time.monotonic() >= deadline:
+                return False
+            time.sleep(self.poll_s)
+
+    def _rotate(self):
+        if self.primary:
+            super()._rotate()
+
+    # -- restore ------------------------------------------------------------
+    def latest_committed(self) -> int:
+        """Newest committed-and-verifying step, or -1."""
+        for s in reversed(self.steps()):
+            if committed_meta(step_dir(self.directory, s)) is not None:
+                return s
+        return -1
+
+    def restore_latest(self, target_tree, *, mesh=None, gc: bool = True,
+                       shardings=None):
+        """(tree, step) from the newest *committed* step; uncommitted or
+        unverifiable newer steps are skipped and (``gc``, rank 0 only)
+        deleted. ``mesh``: restore directly onto a device mesh instead
+        of host arrays."""
+        self.wait()
+        for s in reversed(self.steps()):
+            d = step_dir(self.directory, s)
+            meta = committed_meta(d)
+            if meta is None:
+                if gc and self.primary:
+                    shutil.rmtree(d, ignore_errors=True)
+                continue
+            self.last_extra = dict(meta.get("extra") or {})
+            if mesh is not None:
+                return read_step_mesh(d, target_tree, mesh, meta=meta,
+                                      telemetry=self.telemetry)
+            return read_step_host(d, target_tree, meta=meta)
+        return None, -1
+
+    def restore_step(self, step: int, target_tree, *, mesh=None,
+                     shardings=None):
+        self.wait()
+        d = step_dir(self.directory, step)
+        meta = committed_meta(d) if os.path.isdir(d) else None
+        if meta is None:
+            return None, -1
+        self.last_extra = dict(meta.get("extra") or {})
+        if mesh is not None:
+            return read_step_mesh(d, target_tree, mesh, meta=meta,
+                                  telemetry=self.telemetry)
+        return read_step_host(d, target_tree, meta=meta)
+
+    # -- recovery -----------------------------------------------------------
+    def finalize_pending(self) -> Optional[int]:
+        """Commit takeover: complete the newest fully-prepared step whose
+        writer died between prepare and commit. Safe because prepare
+        completeness is checkable (slices verify + tile exactly) and the
+        commit content is a pure function of the prepared files. Returns
+        the finalized step, or None if nothing was pending."""
+        self.wait()
+        for s in reversed(self.steps()):
+            d = step_dir(self.directory, s)
+            if committed_meta(d) is not None:
+                return None              # newest usable step already committed
+            meta = build_commit_meta(d)
+            if meta is not None:
+                write_commit(d, meta)
+                if self.telemetry is not None:
+                    self.telemetry.emit("ckpt_finalized", step=s)
+                return s
+        return None

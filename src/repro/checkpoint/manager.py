@@ -5,8 +5,19 @@ Atomicity: write into ``<dir>/tmp.<step>`` then ``os.rename`` to
 ``step_<n>`` — a crash mid-write leaves only a tmp dir that is ignored and
 garbage-collected. Async: the device→host copy happens on the caller
 thread (cheap, and pins the values), the disk write on a worker thread so
-training overlaps I/O. Restore scans descending steps and returns the
-first checkpoint whose integrity manifest verifies.
+training overlaps I/O. A write failure on the worker thread (disk full,
+rename failure, injected fault) is captured and re-raised on the next
+``save()``/``wait()`` call — training never silently continues
+uncheckpointed. Restore scans descending steps and returns the first
+checkpoint whose integrity manifest verifies; it understands both the
+flat single-file layout and the distributed per-slice layout
+(:mod:`repro.checkpoint.distributed`), so a run can move between the
+loop and sharded drivers across restarts.
+
+Fault-injection surface: ``self.hooks`` (when set, e.g. by
+``distributed.chaos.FaultSchedule.checkpoint_phase``) is called as
+``hooks(step, phase, directory)`` at every write phase —
+``write_begin`` → ``leaves_written`` → ``prepared`` → ``committed``.
 """
 from __future__ import annotations
 
@@ -14,7 +25,7 @@ import os
 import re
 import shutil
 import threading
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 
@@ -23,48 +34,74 @@ from repro.checkpoint import ckpt
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step}")
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, async_write: bool = True):
         self.directory = directory
         self.keep = keep
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # chaos/fault-injection hook: hooks(step, phase, directory)
+        self.hooks: Optional[Callable[[int, str, str], None]] = None
+        # manifest "extra" dict of the step most recently restored
+        self.last_extra: dict = {}
         os.makedirs(directory, exist_ok=True)
         # clean stale tmp dirs from crashed runs
         for d in os.listdir(directory):
             if d.startswith("tmp."):
                 shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
+    def _phase(self, step: int, phase: str, directory: str):
+        if self.hooks is not None:
+            self.hooks(step, phase, directory)
+
     # -- save ---------------------------------------------------------------
     def save(self, step: int, tree, *, extra: Optional[dict] = None):
         host_tree = jax.tree.map(lambda x: jax.device_get(x), tree)
-        self.wait()
+        self.wait()                      # joins + re-raises a prior failure
         if self.async_write:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, extra), daemon=True)
+                target=self._write_guarded, args=(step, host_tree, extra),
+                daemon=True)
             self._thread.start()
         else:
             self._write(step, host_tree, extra)
 
+    def _write_guarded(self, step: int, host_tree, extra):
+        try:
+            self._write(step, host_tree, extra)
+        except BaseException as e:  # noqa: BLE001 - resurface on caller thread
+            self._error = e
+
     def _write(self, step: int, host_tree, extra):
         tmp = os.path.join(self.directory, f"tmp.{step}")
-        final = os.path.join(self.directory, f"step_{step}")
+        final = step_dir(self.directory, step)
         shutil.rmtree(tmp, ignore_errors=True)
-        ckpt.save(tmp, host_tree, step=step, extra=extra)
+        self._phase(step, "write_begin", tmp)
+        ckpt.save(tmp, host_tree, step=step, extra=extra,
+                  on_phase=lambda ph: self._phase(step, ph, tmp))
+        self._phase(step, "prepared", tmp)
         shutil.rmtree(final, ignore_errors=True)
         os.rename(tmp, final)
+        self._phase(step, "committed", final)
         self._rotate()
 
     def wait(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _rotate(self):
         steps = sorted(self.steps())
         for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
-                          ignore_errors=True)
+            shutil.rmtree(step_dir(self.directory, s), ignore_errors=True)
 
     # -- restore ------------------------------------------------------------
     def steps(self):
@@ -75,12 +112,41 @@ class CheckpointManager:
                 out.append(int(m.group(1)))
         return sorted(out)
 
+    def _restore_dir(self, d: str, target_tree, *, shardings=None):
+        """Restore from one step dir, dispatching on its on-disk format;
+        None if the dir is torn/unverifiable."""
+        from repro.checkpoint import distributed
+        if distributed.is_distributed_dir(d):
+            meta = distributed.committed_meta(d)
+            if meta is None:
+                return None
+            tree, step = distributed.read_step_host(d, target_tree, meta=meta)
+            self.last_extra = dict(meta.get("extra") or {})
+            return tree, step
+        if not ckpt.is_valid(d):
+            return None
+        tree, step = ckpt.restore(d, target_tree, shardings=shardings)
+        manifest = ckpt.load_manifest(d) or {}
+        self.last_extra = dict(manifest.get("extra") or {})
+        return tree, step
+
     def restore_latest(self, target_tree, *, shardings=None):
         """Returns (tree, step) from the newest checkpoint that passes the
         integrity check; (None, -1) if none exists."""
         self.wait()
         for s in reversed(self.steps()):
-            d = os.path.join(self.directory, f"step_{s}")
-            if ckpt.is_valid(d):
-                return ckpt.restore(d, target_tree, shardings=shardings)
+            got = self._restore_dir(step_dir(self.directory, s), target_tree,
+                                    shardings=shardings)
+            if got is not None:
+                return got
         return None, -1
+
+    def restore_step(self, step: int, target_tree, *, shardings=None):
+        """Restore a specific step (both layouts); (None, -1) when the step
+        is absent or fails verification."""
+        self.wait()
+        d = step_dir(self.directory, step)
+        if not os.path.isdir(d):
+            return None, -1
+        got = self._restore_dir(d, target_tree, shardings=shardings)
+        return got if got is not None else (None, -1)

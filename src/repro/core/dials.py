@@ -30,12 +30,26 @@ untrained-DIALS baseline), and **bounded staleness made real**:
   ``async_collect=True, max_aip_staleness=0`` degenerates to the serial
   schedule, which is how the equivalence tests pin the semantics.
 
-Checkpoint-resume caveat under ``async_collect``: the in-flight dataset
-is not checkpointed, so the first resumed round re-primes with a
-force-sync collect (``forced_sync=True``, ``data_round == round``) —
-the resumed schedule trains that round on FRESHER data than the
-uninterrupted run would have (safe direction under Lemma 2, but not the
-sync path's bitwise run-vs-restore equality).
+Checkpoint-resume under ``async_collect``: the in-flight dataset is not
+checkpointed, but its round tag is (``extra["async_round"]``, along
+with the per-agent ``reports`` vector), so a resumed run *re-primes*
+the double buffer — it re-collects that dataset from the prior round's
+checkpointed params under the prior round's collect key and resumes on
+the exact staleness schedule of the uninterrupted run (bitwise on the
+loop path; see ``_reprime_collector``). Only when the needed prior step
+has been rotated away does the resume fall back to a force-sync collect
+(``forced_sync=True`` — fresher data, the safe direction under
+Lemma 2).
+
+Fault tolerance: ``run(..., chaos=FaultSchedule)`` threads the
+deterministic fault injector through the round loop, the checkpoint
+writer, and the heartbeat monitor; on a mesh spanning processes the
+sharded path checkpoints through
+``checkpoint.distributed.DistributedCheckpointManager`` (per-process
+agent slices, two-phase rank-0 commit), and a ``heartbeats`` callback
+that raises ``recovery.HostLossDetected`` hands the loss to the
+re-bootstrap supervisor (``distributed.recovery``) instead of the
+in-group elastic path.
 """
 from __future__ import annotations
 
@@ -159,6 +173,8 @@ class DIALSTrainer:
         self.manager = (CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
                         if cfg.ckpt_dir else None)
         self._sharded = None       # lazily-built ShardedDIALSRunner
+        self._dist_manager = None  # lazily-built DistributedCheckpointManager
+        self._resume_extra = {}    # checkpoint extra of the restored step
 
     # -- state --------------------------------------------------------------
     def init(self, key):
@@ -170,14 +186,19 @@ class DIALSTrainer:
         return {"ials": state, "aips": aip_params,
                 "round": 0, "key": key}
 
+    def _state_struct(self, state):
+        return jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
+                       if hasattr(x, "shape") else x), state)
+
     def restore_or_init(self, key):
         state = self.init(key)
+        self._resume_extra = {}
         if self.manager is not None:
             tree, step = self.manager.restore_latest(
-                jax.tree.map(
-                    lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
-                               if hasattr(x, "shape") else x), state))
+                self._state_struct(state))
             if tree is not None:
+                self._resume_extra = dict(self.manager.last_extra)
                 tree["round"] = int(step)
                 # the base key drives the per-round fold-in stream; a
                 # resumed run must continue it exactly
@@ -214,6 +235,67 @@ class DIALSTrainer:
         collect randomness for any given round."""
         return jax.random.split(jax.random.fold_in(base_key, rnd), 3)[0]
 
+    # -- checkpoint-resume plumbing ------------------------------------------
+    def _ckpt_extra(self, collector, reports) -> dict:
+        """What a checkpoint must carry beyond the state tree for an
+        exact resume: the in-flight async collect's round tag and the
+        per-agent data-report rounds (staleness bookkeeping)."""
+        return {"async_round": (collector.pending_round
+                                if collector is not None else None),
+                "reports": jax.device_get(reports).tolist()}
+
+    def _restored_reports(self, state):
+        """The resumed ``reports`` vector: the checkpointed one when
+        present, else the legacy treat-AIPs-as-fresh default."""
+        saved = self._resume_extra.get("reports")
+        if saved is not None and len(saved) == self.info.n_agents:
+            return jnp.asarray(saved, jnp.int32)
+        return jnp.full((self.info.n_agents,), state["round"] - 1,
+                        jnp.int32)
+
+    def _params_at_round(self, p: int, state):
+        """The joint policy params as of the TOP of round ``p`` — what
+        the original run submitted its tag-``p`` collect with: the
+        step-``p`` checkpoint (end of round p-1), or the deterministic
+        init for p == 0. None when step ``p`` was rotated away."""
+        if p <= 0:
+            return self.init(state["key"])["ials"]["params"]
+        tree, step = self.manager.restore_step(p, self._state_struct(state))
+        return None if tree is None else tree["ials"]["params"]
+
+    def _reprime_collector(self, collector, state, *, runner=None) -> bool:
+        """Exact async resume: re-submit the interrupted run's in-flight
+        collect — same params (from the prior checkpoint), same key,
+        same round tag — so the resumed staleness schedule is identical
+        to the uninterrupted one. False → caller falls back to the
+        force-sync prime (fresher data, Lemma-2-safe)."""
+        p = self._resume_extra.get("async_round")
+        if p is None:
+            return False
+        params = self._params_at_round(int(p), state)
+        if params is None:
+            return False
+        if runner is not None:
+            from repro.distributed import runtime as runtime_lib
+            params = runtime_lib.shard_agent_tree(params, runner.mesh)
+        collector.submit(params, self._collect_key(state["key"], int(p) + 1),
+                         int(p))
+        return True
+
+    def _sharded_manager(self, telemetry=obs.DISABLED):
+        """The sharded path's checkpoint manager: the distributed
+        per-process-slice layout with a two-phase rank-0 commit — the
+        same format on one process or many, so checkpoints move freely
+        across process/shard counts (elastic restarts, post-loss
+        re-bootstrap)."""
+        from repro.checkpoint.distributed import DistributedCheckpointManager
+        if self._dist_manager is None:
+            self._dist_manager = DistributedCheckpointManager(
+                self.cfg.ckpt_dir, keep=self.cfg.ckpt_keep,
+                process_id=jax.process_index())
+        self._dist_manager.telemetry = telemetry
+        return self._dist_manager
+
     def _make_collector_executor(self, telemetry=obs.DISABLED):
         """Loop-path executor: a host worker thread driving the same
         jitted collector (safe here — this path never donates buffers).
@@ -228,7 +310,8 @@ class DIALSTrainer:
     # -- Algorithm 1 --------------------------------------------------------
     def run(self, key, *, log: Optional[Callable] = None,
             straggler_mask: Optional[Callable] = None,
-            heartbeats: Optional[Callable] = None):
+            heartbeats: Optional[Callable] = None,
+            chaos=None):
         """Runs ``outer_rounds`` rounds of (collect → AIP train → F inner
         steps). Returns (state, history). ``straggler_mask(round) ->
         (N,) {0,1}`` simulates late shards (bounded-staleness refresh,
@@ -245,6 +328,11 @@ class DIALSTrainer:
         stalls that program's collectives — the monitor converts silence
         *between* rounds into a plan.
 
+        ``chaos`` (a ``distributed.chaos.FaultSchedule``) injects the
+        deterministic fault schedule: round-boundary host kills /
+        interrupts via its ``round_start`` hook, checkpoint-writer
+        faults via ``CheckpointManager.hooks``.
+
         Dispatches to the agent-sharded fused runtime whenever more than
         one device is visible (or ``cfg.shards`` forces a mesh); both
         paths compute the same numbers — the sharded one in a single
@@ -256,7 +344,7 @@ class DIALSTrainer:
         if n_shards:
             return self._run_sharded(state, n_shards, log=log,
                                      straggler_mask=straggler_mask,
-                                     heartbeats=heartbeats)
+                                     heartbeats=heartbeats, chaos=chaos)
         if heartbeats is not None:
             raise ValueError(
                 "heartbeats= (elastic host-loss handling) requires the "
@@ -275,9 +363,16 @@ class DIALSTrainer:
                                              self.ppo_cfg)
         collector = (self._make_collector_executor(tel)
                      if cfg.async_collect else None)
-        # collection round of each agent's newest trained-on dataset;
-        # resume treats the checkpointed AIPs as fresh at their round
-        reports = jnp.full((n,), state["round"] - 1, jnp.int32)
+        if chaos is not None and self.manager is not None:
+            self.manager.hooks = chaos.checkpoint_phase
+        # collection round of each agent's newest trained-on dataset —
+        # checkpointed (extra["reports"]) so resume keeps the schedule
+        reports = self._restored_reports(state)
+        if collector is not None and state["round"] > 0 \
+                and cfg.max_aip_staleness > 0:
+            # re-prime the interrupted in-flight collect; on failure the
+            # first obtain() below force-syncs (the legacy resume)
+            self._reprime_collector(collector, state)
         history = []
         t_start = time.time()
         tel.emit("run_start", path="loop", env=self.info.name,
@@ -286,6 +381,8 @@ class DIALSTrainer:
                  async_collect=cfg.async_collect, kernels=kernels)
         try:
             for rnd in range(state["round"], cfg.outer_rounds):
+                if chaos is not None:
+                    chaos.round_start(rnd)
                 tel.reset_spans()
                 t_round = time.perf_counter()
                 key = jax.random.fold_in(state["key"], rnd)
@@ -385,7 +482,9 @@ class DIALSTrainer:
                     log(rec)
                 state["round"] = rnd + 1
                 if self.manager is not None:
-                    self.manager.save(rnd + 1, state)
+                    self.manager.save(rnd + 1, state,
+                                      extra=self._ckpt_extra(collector,
+                                                             reports))
         finally:
             if collector is not None:
                 collector.close()
@@ -453,7 +552,7 @@ class DIALSTrainer:
         return runner, carry, collector, len(dead_shards)
 
     def _run_sharded(self, state, n_shards: int, *, log, straggler_mask,
-                     heartbeats=None):
+                     heartbeats=None, chaos=None):
         """The same round loop over the mesh. Sync: one fused donated
         program per round. Async: the round is split into a collect
         program and a shard-train program — round k+1's collect is
@@ -472,19 +571,23 @@ class DIALSTrainer:
         runner = self._sharded_runner(n_shards)
         n = self.info.n_agents
         base_key = state["key"]
-        if (self.manager is not None
-                and runtime_lib.mesh_spans_processes(runner.mesh)):
-            raise ValueError(
-                "checkpointing on a mesh spanning processes is not "
-                "supported — run with ckpt_dir=None under multi-host")
         carry = runner.shard_carry(
             {"aips": state["aips"], "ials": state["ials"],
-             "reports": jnp.full((n,), state["round"] - 1, jnp.int32)})
+             "reports": self._restored_reports(state)})
         tel = obs.maybe(cfg.telemetry_dir, fence=cfg.telemetry_fence)
         kernels = obs_metrics.kernel_summary(self.policy_cfg, self.aip_cfg,
                                              self.ppo_cfg)
+        # the distributed per-slice manager works on any process count —
+        # each process writes only its local agent rows, rank 0 commits
+        mgr = (self._sharded_manager(tel)
+               if self.manager is not None else None)
+        if chaos is not None and mgr is not None:
+            mgr.hooks = chaos.checkpoint_phase
         collector = (self._make_sharded_collector(runner, tel)
                      if cfg.async_collect else None)
+        if collector is not None and state["round"] > 0 \
+                and cfg.max_aip_staleness > 0:
+            self._reprime_collector(collector, state, runner=runner)
         elastic = heartbeats is not None
         mirror = runner.unshard_carry(carry) if elastic else None
         history = []
@@ -496,6 +599,10 @@ class DIALSTrainer:
                  sharded_gs=runner.use_sharded_gs, kernels=kernels)
         try:
             for rnd in range(state["round"], cfg.outer_rounds):
+                if chaos is not None:
+                    # the round boundary: the one point where killing a
+                    # host cannot strand survivors inside a collective
+                    chaos.round_start(rnd)
                 t_round = time.perf_counter()
                 dead_hosts, reassigned = (), 0
                 if elastic:
@@ -570,18 +677,22 @@ class DIALSTrainer:
                 history.append(rec)
                 if log:
                     log(rec)
-                if self.manager is not None:
-                    # device_get inside save() copies out before the next
-                    # round donates these buffers
-                    self.manager.save(rnd + 1, {
+                if mgr is not None:
+                    # the local-slice copy inside save() runs before the
+                    # next round donates these buffers; reports is tiny
+                    # ((N,) int32) but global — fetch for the extra
+                    mgr.save(rnd + 1, {
                         "ials": carry["ials"], "aips": carry["aips"],
-                        "round": rnd + 1, "key": base_key})
+                        "round": rnd + 1, "key": base_key},
+                        extra=self._ckpt_extra(
+                            collector,
+                            runtime_lib.fetch_tree(carry["reports"])))
         finally:
             tel.emit("run_end", rounds=len(history))
             tel.close()
         unshard = runner.unshard_carry(carry)
         unshard.pop("reports", None)     # keep both paths' state schema
         state = {**unshard, "round": cfg.outer_rounds, "key": base_key}
-        if self.manager is not None:
-            self.manager.wait()
+        if mgr is not None:
+            mgr.wait()
         return state, history

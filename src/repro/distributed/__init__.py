@@ -1,3 +1,5 @@
 """Distribution layer: logical-axis sharding rules, collectives, fault
-tolerance, and the agent-sharded runtime substrate."""
-from repro.distributed import collectives, fault, mesh, runtime  # noqa: F401
+tolerance, deterministic fault injection, post-loss re-bootstrap, and
+the agent-sharded runtime substrate."""
+from repro.distributed import (chaos, collectives, fault, mesh,  # noqa: F401
+                               recovery, runtime)

@@ -132,6 +132,14 @@ class AsyncCollector:
         the steady loop ever observes as False."""
         return self._pending is None
 
+    @property
+    def pending_round(self):
+        """The in-flight collect's round tag, or None when idle — what a
+        checkpoint must persist (``extra["async_round"]``) so a resumed
+        run can re-prime the double buffer with the same staleness
+        schedule instead of force-syncing into drift."""
+        return self._pending[0] if self._pending is not None else None
+
     def submit(self, params, key, round: int) -> None:
         """Launch the collect for ``round``'s joint policy in the
         background. One in-flight collect at a time: the double buffer

@@ -38,6 +38,9 @@ ENV_COORDINATOR = "DIALS_COORDINATOR"
 ENV_NUM_PROCESSES = "DIALS_NUM_PROCESSES"
 ENV_PROCESS_ID = "DIALS_PROCESS_ID"
 ENV_LOCAL_DEVICES = "DIALS_LOCAL_DEVICES"
+# truthy: the coordination service at DIALS_COORDINATOR is an external
+# process (repro.distributed.coordinator) — rank 0 must NOT host one
+ENV_COORDINATOR_EXTERNAL = "DIALS_COORDINATOR_EXTERNAL"
 
 _FORCE_FLAG = "--xla_force_host_platform_device_count"
 
@@ -158,8 +161,85 @@ def force_host_devices(n: int, environ=os.environ) -> None:
     environ["XLA_FLAGS"] = f"{flags} {_FORCE_FLAG}={n}".strip()
 
 
+_HEARTBEAT_INTERVAL_S = 10           # jax's own default, kept explicit
+
+
+def grace_kwargs(grace_s: float) -> dict:
+    """The coordination-service heartbeat kwargs that give a surviving
+    process ``grace_s`` seconds after a peer dies before the service's
+    missed-heartbeat reaction (terminate the survivors) can fire."""
+    misses = max(2, -(-int(grace_s) // _HEARTBEAT_INTERVAL_S))
+    return {"service_heartbeat_interval_seconds": _HEARTBEAT_INTERVAL_S,
+            "service_max_missing_heartbeats": misses,
+            "client_heartbeat_interval_seconds": _HEARTBEAT_INTERVAL_S,
+            "client_max_missing_heartbeats": misses}
+
+
+def _initialize_with_grace(cfg: BootstrapConfig, grace_s: float,
+                           kwargs: dict, *,
+                           environ: Mapping[str, str] = os.environ) -> bool:
+    """``jax.distributed.initialize`` with stretched heartbeat windows
+    and optional external-coordinator support.
+
+    The public wrapper hides the heartbeat knobs; the defaults
+    *terminate the survivors* when a peer dies — after the
+    missed-heartbeat window in general, and INSTANTLY when the dead
+    peer was rank 0, because the coordination service lives inside
+    rank 0's process and every survivor's error-polling RPC breaks with
+    it (the fatal fires in a native thread; a Python
+    ``missed_heartbeat_callback`` cannot intercept it — jaxlib's
+    nanobind cast of a non-OK status into Python throws and
+    ``std::terminate``s). So a recovery supervisor needs two things:
+    stretched windows (this function) and, to survive a *coordinator*
+    death, a coordination service that is not hosted by any worker
+    (``repro.distributed.coordinator`` + ``DIALS_COORDINATOR_EXTERNAL``
+    — then rank 0 skips in-process service creation and merely connects
+    like everyone else).
+
+    Replicates the internal ``global_state.initialize`` group path
+    (stable across jax 0.4.x) because the heartbeat kwargs and the
+    skip-service choice are invisible to the public API; returns False
+    when this jax build doesn't expose the internals so the caller can
+    fall back to the public API (no grace, but functional)."""
+    try:
+        from jax._src import distributed as _jax_distributed
+        from jax._src import xla_bridge as _xla_bridge
+        from jax._src.lib import xla_extension as _xla_extension
+        if _xla_bridge.backends_are_initialized():
+            raise RuntimeError(
+                "jax.distributed must initialize before any computation")
+        state = _jax_distributed.global_state
+        if state.client is not None:
+            raise RuntimeError("jax.distributed already initialized")
+        gk = grace_kwargs(grace_s)
+        external = environ.get(ENV_COORDINATOR_EXTERNAL, "") not in ("", "0")
+        if cfg.process_id == 0 and not external:
+            bind = "[::]:" + cfg.coordinator.rsplit(":", 1)[1]
+            state.service = _xla_extension.get_distributed_runtime_service(
+                bind, cfg.num_processes,
+                heartbeat_interval=gk["service_heartbeat_interval_seconds"],
+                max_missing_heartbeats=gk["service_max_missing_heartbeats"])
+        client = _xla_extension.get_distributed_runtime_client(
+            cfg.coordinator, cfg.process_id,
+            init_timeout=kwargs.get("initialization_timeout", 300),
+            heartbeat_interval=gk["client_heartbeat_interval_seconds"],
+            max_missing_heartbeats=gk["client_max_missing_heartbeats"],
+            use_compression=True)
+        client.connect()
+        state.client = client
+        state.process_id = cfg.process_id
+        state.num_processes = cfg.num_processes
+        state.coordinator_address = cfg.coordinator
+        state.initialize_preemption_sync_manager()
+        return True
+    except (ImportError, AttributeError, TypeError):
+        return False
+
+
 def bootstrap(cfg: Optional[BootstrapConfig] = None, *,
-              environ: Mapping[str, str] = os.environ) -> DistContext:
+              environ: Mapping[str, str] = os.environ,
+              init_timeout_s: Optional[float] = None,
+              peer_death_grace_s: Optional[float] = None) -> DistContext:
     """Initialize this process's place in the (possibly 1-process) group.
 
     Call once, before any jax device use. Idempotent for the
@@ -168,7 +248,12 @@ def bootstrap(cfg: Optional[BootstrapConfig] = None, *,
     them at first device query), the gloo CPU-collectives selection
     second (cross-process collectives on CPU need a real transport —
     without it the first halo exchange dies inside XLA), initialize
-    last.
+    last. ``init_timeout_s`` bounds how long initialize blocks waiting
+    for peers (jax's default is ~300s) — the recovery supervisor's
+    bounded-retry re-bootstrap needs a short, known bound.
+    ``peer_death_grace_s`` stretches the coordination service's
+    missed-heartbeat windows so it cannot terminate a surviving process
+    while a recovery supervisor is still reacting to the loss.
     """
     if cfg is None:
         cfg = config_from_env(environ)
@@ -183,9 +268,15 @@ def bootstrap(cfg: Optional[BootstrapConfig] = None, *,
         jax.config.update("jax_cpu_collectives_implementation", "gloo")
     except (AttributeError, ValueError):     # non-CPU build / renamed knob
         pass
-    jax.distributed.initialize(coordinator_address=cfg.coordinator,
-                               num_processes=cfg.num_processes,
-                               process_id=cfg.process_id)
+    kwargs = {}
+    if init_timeout_s is not None:
+        kwargs["initialization_timeout"] = int(init_timeout_s)
+    if (peer_death_grace_s is None
+            or not _initialize_with_grace(cfg, peer_death_grace_s, kwargs,
+                                          environ=environ)):
+        jax.distributed.initialize(coordinator_address=cfg.coordinator,
+                                   num_processes=cfg.num_processes,
+                                   process_id=cfg.process_id, **kwargs)
     return DistContext(process_id=jax.process_index(),
                        num_processes=jax.process_count(),
                        coordinator=cfg.coordinator, initialized=True)

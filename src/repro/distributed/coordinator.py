@@ -1,0 +1,91 @@
+"""Standalone (external) coordination service for fault-tolerant groups.
+
+``jax.distributed`` hosts its coordination service inside rank 0's
+process. For fault tolerance that placement is fatal by construction:
+when rank 0 dies, every survivor's error-polling RPC to the service
+breaks instantly and the client's native reaction terminates the
+survivor — *before* any Python-level recovery can run, and uninterceptably
+(the fatal fires in a native thread; jaxlib cannot cast the failure
+status into a Python callback). The survivable topology is a
+coordination service that is not hosted by any worker:
+
+    python -m repro.distributed.coordinator --bind 127.0.0.1:5432 \\
+        --num-processes 2 --ready-file /tmp/coord.ready &
+
+    DIALS_COORDINATOR=127.0.0.1:5432 DIALS_COORDINATOR_EXTERNAL=1 \\
+        <launch workers as usual>
+
+With ``DIALS_COORDINATOR_EXTERNAL`` set (and a
+``peer_death_grace_s``-enabled bootstrap), rank 0 skips in-process
+service creation and connects like every other rank; any worker —
+including rank 0 — can then die without collapsing the others'
+coordination channel. The service's own missed-heartbeat reaction is
+stretched by the same grace window, so the recovery supervisor
+(``repro.distributed.recovery``) owns the timeline.
+
+The process serves until SIGTERM/SIGINT (or ``--timeout-s``);
+``--ready-file`` is written (atomically) once the service is listening
+so launchers can sequence worker startup without polling the port.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import threading
+from typing import Optional
+
+from repro.distributed import bootstrap
+
+
+def serve(bind: str, num_processes: int, *, grace_s: float = 600.0,
+          ready_file: Optional[str] = None,
+          stop: Optional[threading.Event] = None,
+          timeout_s: Optional[float] = None) -> None:
+    """Run the coordination service until ``stop`` is set (or
+    ``timeout_s`` elapses). Blocks the calling thread."""
+    from jax._src.lib import xla_extension
+    gk = bootstrap.grace_kwargs(grace_s)
+    service = xla_extension.get_distributed_runtime_service(
+        bind, num_processes,
+        heartbeat_interval=gk["service_heartbeat_interval_seconds"],
+        max_missing_heartbeats=gk["service_max_missing_heartbeats"])
+    try:
+        if ready_file:
+            tmp = ready_file + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(bind)
+            os.replace(tmp, ready_file)
+        if stop is None:
+            stop = threading.Event()
+        stop.wait(timeout_s)
+    finally:
+        service.shutdown()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="external jax.distributed coordination service")
+    ap.add_argument("--bind", required=True,
+                    help="host:port to serve on (workers' "
+                         "DIALS_COORDINATOR must point here)")
+    ap.add_argument("--num-processes", type=int, required=True)
+    ap.add_argument("--grace-s", type=float, default=600.0,
+                    help="missed-heartbeat window before the service "
+                         "declares a silent worker dead")
+    ap.add_argument("--ready-file", default=None,
+                    help="written once the service is listening")
+    ap.add_argument("--timeout-s", type=float, default=None,
+                    help="exit after this long even without a signal")
+    args = ap.parse_args(argv)
+
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: stop.set())
+    serve(args.bind, args.num_processes, grace_s=args.grace_s,
+          ready_file=args.ready_file, stop=stop, timeout_s=args.timeout_s)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

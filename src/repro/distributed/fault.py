@@ -186,13 +186,14 @@ class HostMonitor:
 
     def __init__(self, directory: str, *, host: int, n_hosts: int,
                  timeout_s: float = 30.0, poll_s: float = 0.05,
-                 telemetry=None):
+                 telemetry=None, chaos=None):
         self.directory = directory
         self.host = int(host)
         self.n_hosts = int(n_hosts)
         self.timeout_s = float(timeout_s)
         self.poll_s = float(poll_s)
         self.telemetry = telemetry      # optional repro.obs.Telemetry
+        self.chaos = chaos              # optional chaos.FaultSchedule
         self.dead: Set[int] = set()
         os.makedirs(directory, exist_ok=True)
 
@@ -200,6 +201,8 @@ class HostMonitor:
         return os.path.join(self.directory, f"beat-{host}-{rnd}")
 
     def beat(self, rnd: int) -> None:
+        if self.chaos is not None:       # injected straggler delay
+            self.chaos.heartbeat(rnd)
         path = self._beat_path(self.host, rnd)
         with open(path + ".tmp", "w") as f:      # atomic publish
             f.write(str(time.time()))

@@ -1,0 +1,42 @@
+"""Torn-write worker for ``tests/test_chaos.py``.
+
+Saves a committed step 1, then saves step 2 with a ``writer_crash``
+fault scheduled at the phase named on the command line — the
+FaultSchedule SIGKILLs this process mid-write, leaving real torn state
+on disk (tmp leaf files, an unrenamed slice, or a fully prepared but
+uncommitted step, depending on the phase). The parent test then asserts
+what a fresh manager makes of the wreckage.
+
+Usage: ``python _chaos_check.py <ckpt_dir> <phase>``
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.checkpoint.distributed import DistributedCheckpointManager  # noqa: E402
+from repro.distributed import chaos  # noqa: E402
+
+
+def main():
+    directory, phase = sys.argv[1], sys.argv[2]
+    mgr = DistributedCheckpointManager(directory, keep=5,
+                                       async_write=False)
+    state = {"w": np.arange(12, dtype=np.float32).reshape(4, 3),
+             "key": np.zeros((2,), np.uint32)}
+    mgr.save(1, {**state, "round": 1},
+             extra={"async_round": None, "reports": [0] * 4})
+    sched = chaos.FaultSchedule.from_spec(f"crash@2:phase={phase}")
+    mgr.hooks = sched.checkpoint_phase
+    print("STEP1-COMMITTED", flush=True)
+    mgr.save(2, {**{k: v + 1 for k, v in state.items()}, "round": 2},
+             extra={"async_round": 1, "reports": [1] * 4})
+    # unreachable: the writer_crash SIGKILLs this process mid-save
+    print("SURVIVED", flush=True)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,170 @@
+"""Post-loss re-bootstrap worker for ``tests/test_recovery.py``.
+
+Run as a coordinated 2-process ``jax.distributed`` group (4 forced host
+devices each). A chaos spec kills one rank deterministically relative to
+checkpoint state — ``writer_crash`` SIGKILLs its writer thread at a
+chosen checkpoint phase while a ``heartbeat_delay`` parks its main
+thread inside ``monitor.beat`` (so the dying rank never beats that
+round and is never inside a collective when it dies). The survivor's
+heartbeat gate times out, raises ``HostLossDetected``, and
+``recovery.recover`` takes over: finalize any prepared-but-uncommitted
+step, timeout-guarded teardown, shrink to a solo group (env cleared),
+``os.execv``. The re-executed generation ≥ 1 process bootstraps solo,
+resumes from the committed distributed checkpoint, finishes the run,
+dumps params/history, then exercises the corrupt-fallback contract
+(damage the newest committed step; ``restore_latest`` must fall back to
+the previous one) and prints ``RECOVERY-OK``.
+
+``--mode reference`` is the uninterrupted single-process run the test
+compares final params against.
+"""
+import argparse
+import json
+import os
+import sys
+import threading
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import obs  # noqa: E402
+from repro.distributed import chaos as chaos_mod  # noqa: E402
+from repro.distributed import fault, recovery  # noqa: E402
+
+
+def dump(path, state, history):
+    """Same observable dump as _multihost_check: every param leaf in
+    deterministic order plus the round records."""
+    import jax
+    import numpy as np
+    leaves = {
+        "aips": [np.asarray(x).tolist()
+                 for x in jax.tree.leaves(state["aips"])],
+        "params": [np.asarray(x).tolist()
+                   for x in jax.tree.leaves(state["ials"]["params"])],
+    }
+    with open(path, "w") as f:
+        json.dump({"history": history, **leaves}, f)
+
+
+def build(args, telemetry_dir):
+    # local import: _multidevice_check imports jax at module level, so
+    # it must come after bootstrap
+    from _multidevice_check import build_trainer
+    return build_trainer(env="traffic", shards=4, outer_rounds=5,
+                         ckpt_dir=args.ckpt_dir, ckpt_keep=10,
+                         telemetry_dir=telemetry_dir)
+
+
+def check_corrupt_fallback(args, trainer, state):
+    """Damage the newest committed step; restore must skip it (and GC
+    it) and land on the previous committed step."""
+    from repro.checkpoint.distributed import DistributedCheckpointManager
+    from repro.checkpoint.manager import step_dir
+    mgr = DistributedCheckpointManager(args.ckpt_dir, keep=10,
+                                       async_write=False)
+    newest = mgr.latest_committed()
+    assert newest >= 2, f"expected several committed steps, got {newest}"
+    chaos_mod.corrupt_checkpoint(step_dir(args.ckpt_dir, newest), "bytes")
+    tree, step = mgr.restore_latest(trainer._state_struct(state))
+    assert step == newest - 1, (step, newest)
+    assert tree is not None and tree["round"] == newest - 1
+
+
+def run_worker(args):
+    rank = int(os.environ.get("DIALS_PROCESS_ID", "0"))
+    # telemetry BEFORE startup (explicit process_id — no device query)
+    # so generation >= 1's rebootstrap event lands in the stream
+    tel = (obs.Telemetry.create(args.telemetry_dir, process_id=rank)
+           if args.telemetry_dir else obs.DISABLED)
+    # tight clocks: jax's coordination service kills survivors ~10 s
+    # after a peer stops heartbeating (its own missed-heartbeat
+    # reaction) — detection (4 s) + teardown (2 s) must beat it to execv
+    reco = recovery.RecoveryConfig(teardown_timeout_s=2.0,
+                                   init_timeout_s=30.0, retries=4,
+                                   backoff_s=0.25)
+    ctx, gen = recovery.startup(reco=reco, telemetry=tel)
+
+    import jax
+    trainer = build(args, args.telemetry_dir)
+    schedule = None
+    if args.chaos:
+        schedule = chaos_mod.FaultSchedule.from_spec(
+            args.chaos, host=ctx.process_id, generation=gen, telemetry=tel)
+    heartbeats, deadman = None, None
+    if ctx.num_processes > 1:
+        monitor = fault.HostMonitor(
+            args.beat_dir, host=ctx.process_id,
+            n_hosts=ctx.num_processes, timeout_s=4.0,
+            telemetry=tel if tel.enabled else None)
+        heartbeats = recovery.raising_gate(monitor)
+        # out-of-band backstop: a peer dying mid-collective can wedge
+        # this process in a native wait that never errors — the deadman
+        # pulses/watches from daemon threads and recovers via execv
+        # when a peer's pulse goes silent, main thread be damned
+        deadman = recovery.Deadman(
+            args.beat_dir, host=ctx.process_id,
+            n_hosts=ctx.num_processes,
+            current_round=lambda: heartbeats.round,
+            on_loss=lambda loss: recovery.recover(
+                loss, ctx, ckpt_dir=args.ckpt_dir, reco=reco,
+                telemetry=tel),
+            interval_s=1.0, silence_s=20.0, telemetry=tel).start()
+    try:
+        state, history = trainer.run(jax.random.PRNGKey(0),
+                                     heartbeats=heartbeats, chaos=schedule)
+        if deadman is not None:
+            deadman.stop()           # a finished peer is silent, not dead
+    except Exception as err:
+        # a death BETWEEN rounds raises HostLossDetected at the gate; a
+        # death MID-round surfaces first as a failed gloo collective —
+        # diagnose() turns the wreckage into a verdict (and re-raises
+        # anything that isn't a peer failure)
+        loss = recovery.diagnose(err, heartbeats, telemetry=tel)
+        if deadman is not None and not deadman.claim():
+            threading.Event().wait()  # watchdog already recovering; it
+            #                           will exec this process away
+        recovery.recover(loss, ctx, ckpt_dir=args.ckpt_dir, reco=reco,
+                         telemetry=tel)
+        raise AssertionError("recover() returned")    # pragma: no cover
+    if gen == 0:
+        # the scheduled fault never fired — fail loudly, don't let a
+        # fault-free run masquerade as a recovery
+        print("NO-FAULT", flush=True)
+        return 1
+    dump(args.out, state, history)
+    check_corrupt_fallback(args, trainer, state)
+    tel.close()
+    print("RECOVERY-OK", flush=True)
+    return 0
+
+
+def run_reference(args):
+    ctx, _ = recovery.startup()
+    assert ctx.num_processes == 1, ctx
+    import jax
+    trainer = build(args, args.telemetry_dir)
+    state, history = trainer.run(jax.random.PRNGKey(0))
+    dump(args.out, state, history)
+    print("RECOVERY-OK", flush=True)
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", required=True,
+                    choices=["reference", "worker"])
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--beat-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--telemetry-dir", default=None)
+    ap.add_argument("--chaos", default=None,
+                    help="FaultSchedule.from_spec string (host/generation "
+                         "filtering makes one spec safe for every rank)")
+    args = ap.parse_args()
+    if args.mode == "reference":
+        return run_reference(args)
+    return run_worker(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -417,3 +417,38 @@ def test_kernel_dtype_contracts_clean():
     findings = contracts.run_rules(programs.kernel_dtype_programs())
     assert findings == [], "\n".join(
         format_finding(f, github=False) for f in findings)
+
+
+def test_reshard_collectives_token_classifier():
+    find = contracts.ReshardCollectives._collectives_in_text
+    hlo = ("%ag = f32[8,3] all-gather-start(f32[2,3] %p), dims={0}\n"
+           "%cp = f32[2,3] collective-permute(f32[2,3] %x)")
+    assert find(hlo) == ["all-gather", "collective-permute"]
+    assert find("%r = f32[] all-reduce(f32[] %x)") == ["all-reduce"]
+    # token boundaries: no spurious match inside identifiers
+    assert find("my-all-reduce-like-name %all-gatherer") == []
+    assert find("no collectives here") == []
+    assert "ReshardCollectives" in {r.name for r in contracts.DEFAULT_RULES}
+
+
+@pytest.mark.slow
+def test_recovery_resume_programs_clean():
+    """The PR-8 standing rule applied to the resume path: the restore /
+    re-shard programs registered by ``recovery_programs`` must stay free
+    of banned collectives (all-reduce, all-to-all, ...) — re-sharding a
+    checkpoint onto a shrunken mesh is data movement (all-gather /
+    collective-permute at most), never a reduction."""
+    from repro.analysis import programs
+    progs = programs.recovery_programs("traffic")
+    names = {p.name for p in progs}
+    assert any(n.endswith("/resume_round") for n in names)
+    assert {"reshard_place", "reshard_fetch"} <= \
+        {n.rsplit("/", 1)[-1] for n in names}
+    roles = {r for p in progs for r in p.roles}
+    assert "reshard" in roles and "round" in roles
+    # and they ride along in the default registry next to the drivers
+    all_names = {p.name for p in programs.all_programs(["traffic"])}
+    assert any(n.startswith("recovery/traffic@") for n in all_names)
+    findings = contracts.run_rules(progs)
+    assert findings == [], "\n".join(
+        format_finding(f, github=False) for f in findings)

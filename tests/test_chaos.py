@@ -1,0 +1,209 @@
+"""The deterministic fault-injection harness
+(``repro.distributed.chaos``): schedule construction (spec strings,
+seeded draws), the three hook surfaces, once-only/host/generation
+filtering, the pre-act ``chaos_inject`` telemetry contract — and the
+satellite torn-write test: a REAL SIGKILL mid-checkpoint-write (via a
+subprocess), after which ``restore_latest`` must return the last
+committed step and garbage-collect the wreckage."""
+import os
+import signal
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.checkpoint import distributed as dckpt
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed import chaos, fault
+
+CHECK = os.path.join(os.path.dirname(__file__), "_chaos_check.py")
+
+
+class _Rec:
+    """Telemetry fake recording emits in order."""
+
+    def __init__(self):
+        self.events = []
+
+    def emit(self, event, **fields):
+        self.events.append({"event": event, **fields})
+
+
+# ---------------------------------------------------------------------------
+# schedule construction
+# ---------------------------------------------------------------------------
+def test_from_spec_parses_kinds_and_options():
+    s = chaos.FaultSchedule.from_spec(
+        "kill@2:host=1,crash@3:phase=pre_commit:mode=raise,"
+        "corrupt@4:target=commit,delay@1:delay_s=0.5,"
+        "interrupt@2:generation=1")
+    kinds = [e.kind for e in s.events]
+    assert kinds == ["host_kill", "writer_crash", "corrupt",
+                     "heartbeat_delay", "interrupt"]
+    assert s.events[0].host == 1 and s.events[0].round == 2
+    assert s.events[1].phase == "pre_commit" and s.events[1].mode == "raise"
+    assert s.events[2].target == "commit"
+    assert s.events[3].delay_s == 0.5
+    assert s.events[4].generation == 1
+
+
+def test_from_spec_rejects_unknowns():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.FaultSchedule.from_spec("meteor@1")
+    with pytest.raises(ValueError, match="unknown fault option"):
+        chaos.FaultSchedule.from_spec("kill@1:sev=9")
+
+
+def test_seeded_schedule_is_deterministic():
+    a = chaos.FaultSchedule.seeded(7, rounds=6, hosts=2, n_faults=4)
+    b = chaos.FaultSchedule.seeded(7, rounds=6, hosts=2, n_faults=4)
+    assert a.events == b.events
+    assert len(a.events) == 4
+    for ev in a.events:
+        assert ev.kind in ("host_kill", "heartbeat_delay", "writer_crash")
+        assert 1 <= ev.round < 6 and ev.host in (0, 1)
+    c = chaos.FaultSchedule.seeded(8, rounds=6, hosts=2, n_faults=4)
+    assert c.events != a.events
+
+
+# ---------------------------------------------------------------------------
+# hook surfaces + filtering
+# ---------------------------------------------------------------------------
+def test_round_start_interrupt_fires_once_with_telemetry():
+    rec = _Rec()
+    s = chaos.FaultSchedule.from_spec("interrupt@2", telemetry=rec)
+    s.round_start(0)
+    s.round_start(1)
+    assert not s.fired
+    with pytest.raises(chaos.ChaosInterrupt):
+        s.round_start(2)
+    # telemetry was emitted BEFORE the fault acted, and exactly once
+    assert [e["event"] for e in rec.events] == ["chaos_inject"]
+    assert rec.events[0]["kind"] == "interrupt"
+    assert len(s.fired) == 1
+    s.round_start(2)                      # once-only: does not re-fire
+    assert len(s.fired) == 1
+
+
+def test_host_kill_uses_injected_kill():
+    killed = []
+    s = chaos.FaultSchedule.from_spec(
+        "kill@1:host=3", host=3,
+        kill=lambda pid, sig: killed.append((pid, sig)))
+    s.round_start(1)
+    assert killed == [(os.getpid(), signal.SIGKILL)]
+
+
+def test_host_and_generation_filtering():
+    s0 = chaos.FaultSchedule.from_spec("kill@1:host=1", host=0,
+                                       kill=lambda *a: (_ for _ in ()
+                                                        ).throw(AssertionError))
+    s0.round_start(1)                     # wrong host: no fire
+    assert not s0.fired
+    s1 = chaos.FaultSchedule.from_spec(
+        "interrupt@1", generation=1)      # event is generation 0
+    s1.round_start(1)
+    assert not s1.fired                   # survivor gen-1 must not re-fire
+
+
+def test_heartbeat_delay_through_host_monitor(tmp_path):
+    slept = []
+    s = chaos.FaultSchedule.from_spec("delay@2:delay_s=0.3",
+                                      sleep=slept.append)
+    mon = fault.HostMonitor(str(tmp_path), host=0, n_hosts=1, chaos=s)
+    mon.beat(1)
+    assert slept == []
+    mon.beat(2)
+    assert slept == [0.3] and len(s.fired) == 1
+    assert os.path.exists(os.path.join(str(tmp_path), "beat-0-2"))
+
+
+def test_commit_delay_sleeps_at_matching_phase_only():
+    slept = []
+    s = chaos.FaultSchedule.from_spec(
+        "commit_delay@5:phase=pre_commit:delay_s=2.0", sleep=slept.append)
+    s.checkpoint_phase(5, "prepared", "/nowhere")
+    assert slept == []
+    s.checkpoint_phase(5, "pre_commit", "/nowhere")
+    assert slept == [2.0]
+
+
+def test_writer_crash_raise_mode_surfaces_via_manager(tmp_path):
+    """The in-process half of the torn-write story: a writer_crash in
+    mode=raise on the async writer thread is captured and re-raised by
+    the next wait() — checkpointing never fails silently."""
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=True)
+    s = chaos.FaultSchedule.from_spec(
+        "crash@2:phase=leaves_written:mode=raise")
+    mgr.hooks = s.checkpoint_phase
+    tree = {"w": np.zeros((2, 2), np.float32)}
+    mgr.save(1, tree)
+    mgr.wait()                            # step 1: no fault scheduled
+    mgr.save(2, tree)
+    with pytest.raises(chaos.ChaosError):
+        mgr.wait()
+    mgr.hooks = None
+    mgr.save(3, tree)
+    mgr.wait()
+    assert set(mgr.steps()) == {1, 3}
+
+
+def test_corrupt_checkpoint_targets(tmp_path):
+    d = str(tmp_path / "step_1")
+    ckpt.save(d, {"w": np.ones((3,), np.float32)}, step=1)
+    assert ckpt.is_valid(d)
+    assert chaos.corrupt_checkpoint(d, "bytes").endswith(".npy")
+    assert not ckpt.is_valid(d)
+    # commit target writes a torn marker
+    d2 = str(tmp_path / "step_2")
+    os.makedirs(d2)
+    with open(os.path.join(d2, "COMMIT"), "w") as f:
+        f.write("{}")
+    assert chaos.corrupt_checkpoint(d2, "commit").endswith("COMMIT")
+    assert dckpt.committed_meta(d2) is None
+    assert chaos.corrupt_checkpoint(str(tmp_path / "empty"), "bytes") is None
+
+
+# ---------------------------------------------------------------------------
+# the torn-write subprocess test (satellite: SIGKILL mid-write)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("phase,finalizable", [
+    ("leaves_written", False),   # torn slice: only tmp wreckage
+    ("prepared", False),         # slice renamed, replicated missing
+    ("pre_commit", True),        # fully prepared, COMMIT never written
+])
+def test_sigkill_mid_write_restores_last_committed(tmp_path, phase,
+                                                   finalizable):
+    ck = str(tmp_path / "ck")
+    proc = subprocess.run(
+        [sys.executable, CHECK, ck, phase],
+        cwd="/root/repo", capture_output=True, text=True, timeout=300,
+        env={**os.environ, "JAX_PLATFORMS": "cpu", "PYTHONPATH": "src"})
+    assert proc.returncode == -signal.SIGKILL, \
+        (proc.returncode, proc.stdout, proc.stderr)
+    assert "STEP1-COMMITTED" in proc.stdout
+    assert "SURVIVED" not in proc.stdout
+
+    mgr = dckpt.DistributedCheckpointManager(ck, keep=5, async_write=False)
+    if finalizable:
+        # died between prepare and commit: a survivor can take over
+        assert mgr.finalize_pending() == 2
+        expect_step, expect_off = 2, 1.0
+    else:
+        assert mgr.finalize_pending() is None
+        expect_step, expect_off = 1, 0.0
+    target = {"w": np.zeros((4, 3), np.float32),
+              "key": np.zeros((2,), np.uint32), "round": 0}
+    tree, step = mgr.restore_latest(target)
+    assert step == expect_step
+    assert tree["round"] == expect_step
+    np.testing.assert_array_equal(
+        np.asarray(tree["w"]),
+        np.arange(12, dtype=np.float32).reshape(4, 3) + expect_off)
+    assert mgr.last_extra == {"async_round": None if expect_step == 1 else 1,
+                              "reports": [expect_step - 1] * 4}
+    # the wreckage of the torn step was garbage-collected on restore
+    assert mgr.steps() == ([1, 2] if finalizable else [1])

@@ -88,3 +88,222 @@ def test_restore_none_when_empty(tmp_path):
     back, step = mgr.restore_latest({"x": jax.ShapeDtypeStruct((1,),
                                                                jnp.float32)})
     assert back is None
+
+
+# ---------------------------------------------------------------------------
+# async write-failure capture (a failed checkpoint must never be silent)
+# ---------------------------------------------------------------------------
+def test_async_write_failure_reraised_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=True)
+
+    def exploding_hook(step, phase, directory):
+        if phase == "leaves_written":
+            raise OSError("disk full (injected)")
+
+    mgr.hooks = exploding_hook
+    mgr.save(1, _tree(jax.random.PRNGKey(0)))
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    # the error is consumed: the manager is usable again
+    mgr.hooks = None
+    mgr.save(2, _tree(jax.random.PRNGKey(0)))
+    mgr.wait()
+    assert mgr.steps() == [2]
+
+
+def test_async_write_failure_reraised_on_next_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=True)
+    boom = {"on": True}
+
+    def hook(step, phase, directory):
+        if boom["on"] and phase == "write_begin":
+            raise RuntimeError("writer died (injected)")
+
+    mgr.hooks = hook
+    mgr.save(1, _tree(jax.random.PRNGKey(0)))
+    while mgr._thread is not None and mgr._thread.is_alive():
+        mgr._thread.join(0.01)
+    boom["on"] = False
+    with pytest.raises(RuntimeError, match="writer died"):
+        mgr.save(2, _tree(jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# distributed per-slice layout (repro.checkpoint.distributed)
+# ---------------------------------------------------------------------------
+from repro.checkpoint import distributed as dckpt  # noqa: E402
+
+
+def _blocks(n=4, dim=3, seed=0):
+    """A full agent-stacked host tree plus its two half-slices."""
+    rng = np.random.RandomState(seed)
+    full = {"w.npy": rng.randn(n, dim).astype(np.float32),
+            "b.npy": rng.randn(n).astype(np.float32)}
+    lo_tree = {"w": full["w.npy"][:n // 2], "b": full["b.npy"][:n // 2]}
+    hi_tree = {"w": full["w.npy"][n // 2:], "b": full["b.npy"][n // 2:]}
+    return full, lo_tree, hi_tree
+
+
+def _prepare_step(d, *, step=3, n=4, extra=None, seed=0):
+    """Manufacture a fully prepared (uncommitted) 2-slice step dir."""
+    full, lo_tree, hi_tree = _blocks(n=n, seed=seed)
+    dckpt.write_slice(d, lo_tree, 0, n // 2, n, step=step, tag="a")
+    dckpt.write_slice(d, hi_tree, n // 2, n, n, step=step, tag="b")
+    dckpt.write_replicated(d, {"round": step, "key": np.arange(2,
+                           dtype=np.uint32)}, step=step, extra=extra)
+    return full
+
+
+def test_distributed_two_slice_roundtrip(tmp_path):
+    d = str(tmp_path / "step_3")
+    full = _prepare_step(d, step=3, extra={"tag": "x"})
+    meta = dckpt.build_commit_meta(d)
+    assert meta is not None
+    assert meta["n_agents"] == 4 and meta["slices"] == [[0, 2], [2, 4]]
+    assert meta["extra"] == {"tag": "x"}
+    dckpt.write_commit(d, meta)
+    assert dckpt.committed_meta(d) is not None
+
+    target = {"w": jax.ShapeDtypeStruct((4, 3), jnp.float32),
+              "b": jax.ShapeDtypeStruct((4,), jnp.float32),
+              "round": 0,
+              "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    tree, step = dckpt.read_step_host(d, target)
+    assert step == 3 and tree["round"] == 3
+    np.testing.assert_array_equal(np.asarray(tree["w"]), full["w.npy"])
+    np.testing.assert_array_equal(np.asarray(tree["b"]), full["b.npy"])
+
+    # cross-shard-count assembly: row ranges that straddle the saved
+    # slice boundary (what a 4-shard restore of a 2-slice save does)
+    reader = dckpt.SliceReader(d, meta)
+    np.testing.assert_array_equal(reader.rows("w.npy", 1, 3),
+                                  full["w.npy"][1:3])
+    np.testing.assert_array_equal(reader.rows("b.npy", 3, 4),
+                                  full["b.npy"][3:4])
+
+
+def test_build_commit_meta_rejects_incomplete_prepare(tmp_path):
+    d = str(tmp_path / "step_1")
+    full, lo_tree, _ = _blocks()
+    # only the low slice present: the tiling [0,4) has a gap
+    dckpt.write_slice(d, lo_tree, 0, 2, 4, step=1)
+    dckpt.write_replicated(d, {"round": 1}, step=1)
+    assert dckpt.build_commit_meta(d) is None
+    # wrong expected agent count
+    _prepare_step(d, step=1)
+    assert dckpt.build_commit_meta(d, expect_n=8) is None
+    assert dckpt.build_commit_meta(d, expect_n=4) is not None
+
+
+def test_committed_meta_rejects_corrupted_step(tmp_path):
+    d = str(tmp_path / "step_2")
+    _prepare_step(d, step=2)
+    dckpt.write_commit(d, dckpt.build_commit_meta(d))
+    assert dckpt.committed_meta(d) is not None
+    victim = os.path.join(d, "agents-00000-00002", "w.npy")
+    with open(victim, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\xff")
+    # a corrupted committed step reads as uncommitted
+    assert dckpt.committed_meta(d) is None
+
+
+def _dist_mgr(path, **kw):
+    kw.setdefault("async_write", False)
+    return dckpt.DistributedCheckpointManager(str(path), **kw)
+
+
+def _state(seed=0, n=4):
+    k = jax.random.PRNGKey(seed)
+    return {"ials": {"params": jax.random.normal(k, (n, 3))},
+            "round": 1, "key": jnp.zeros((2,), jnp.uint32)}
+
+
+def _struct(tree):
+    return jax.tree.map(
+        lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
+                   if hasattr(x, "shape") else x), tree)
+
+
+def test_distributed_manager_single_process_roundtrip(tmp_path):
+    mgr = _dist_mgr(tmp_path, keep=5)
+    st = _state()
+    mgr.save(1, st, extra={"async_round": None, "reports": [0, 0, 0, 0]})
+    mgr.save(2, jax.tree.map(
+        lambda x: x + 1 if hasattr(x, "dtype") else x, st),
+        extra={"async_round": 1, "reports": [1, 1, 1, 1]})
+    assert mgr.latest_committed() == 2
+    tree, step = mgr.restore_latest(_struct(st))
+    assert step == 2
+    assert mgr.last_extra == {"async_round": 1, "reports": [1, 1, 1, 1]}
+    np.testing.assert_array_equal(
+        np.asarray(tree["ials"]["params"]),
+        np.asarray(st["ials"]["params"]) + 1)
+    # restore_step reaches the older step
+    tree1, step1 = mgr.restore_step(1, _struct(st))
+    assert step1 == 1 and mgr.last_extra["async_round"] is None
+    np.testing.assert_array_equal(np.asarray(tree1["ials"]["params"]),
+                                  np.asarray(st["ials"]["params"]))
+
+
+def test_flat_manager_restores_distributed_layout(tmp_path):
+    """Cross-path dispatch: a checkpoint written by the sharded driver's
+    distributed manager restores through the plain CheckpointManager
+    (the loop driver / restore_or_init path)."""
+    st = _state(seed=3)
+    _dist_mgr(tmp_path).save(4, st, extra={"reports": [3, 3, 3, 3]})
+    flat = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    tree, step = flat.restore_latest(_struct(st))
+    assert step == 4
+    assert flat.last_extra["reports"] == [3, 3, 3, 3]
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a, np.float32), np.asarray(b, np.float32)),
+        {k: v for k, v in st.items() if k != "round"},
+        {k: v for k, v in tree.items() if k != "round"})
+
+
+def test_restore_latest_skips_uncommitted_and_gcs(tmp_path):
+    mgr = _dist_mgr(tmp_path, keep=5)
+    st = _state()
+    mgr.save(1, st)
+    mgr.save(2, st)
+    # step 3: fully prepared but never committed (writer died pre-commit)
+    d3 = os.path.join(str(tmp_path), "step_3")
+    _prepare_step(d3, step=3)
+    # step 4: committed but then corrupted
+    mgr.save(4, st)
+    from repro.distributed import chaos
+    assert chaos.corrupt_checkpoint(os.path.join(str(tmp_path), "step_4"),
+                                    "bytes")
+    tree, step = mgr.restore_latest(_struct(st))
+    assert step == 2
+    # the unusable newer steps were garbage-collected (rank 0 only)
+    assert mgr.steps() == [1, 2]
+
+
+def test_finalize_pending_commit_takeover(tmp_path):
+    mgr = _dist_mgr(tmp_path, keep=5)
+    mgr.save(1, _state())
+    d2 = os.path.join(str(tmp_path), "step_2")
+    full = _prepare_step(d2, step=2, extra={"async_round": 0})
+    # a survivor (not necessarily rank 0) completes the commit
+    survivor = _dist_mgr(tmp_path, keep=5, process_id=1)
+    assert survivor.finalize_pending() == 2
+    meta = dckpt.committed_meta(d2)
+    assert meta is not None and meta["extra"] == {"async_round": 0}
+    target = {"w": jax.ShapeDtypeStruct((4, 3), jnp.float32),
+              "b": jax.ShapeDtypeStruct((4,), jnp.float32),
+              "round": 0,
+              "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    tree, step = survivor.restore_latest(target)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["w"]), full["w.npy"])
+    # newest step already committed -> nothing pending
+    assert survivor.finalize_pending() is None
+
+
+def test_finalize_pending_nothing_prepared(tmp_path):
+    mgr = _dist_mgr(tmp_path)
+    assert mgr.finalize_pending() is None
+    mgr.save(1, _state())
+    assert mgr.finalize_pending() is None   # newest is committed

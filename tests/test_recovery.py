@@ -1,0 +1,495 @@
+"""Post-loss re-bootstrap (``repro.distributed.recovery``).
+
+Unit half: the supervisor's pure pieces — survivor re-ranking with
+coordinator failover (``shrink_config``), bounded-retry bootstrap with
+exponential backoff, the env/exec contract of ``reexec``, the
+``raising_gate`` adapter, and the full ``recover`` flow against test
+doubles.
+
+E2E half (real subprocess groups, the ISSUE's acceptance scenario): a
+2-process ``jax.distributed`` group in which a chaos schedule SIGKILLs
+one rank mid-checkpoint — (A) the non-primary dies after preparing its
+slice, so rank 0 commits and recovers; (B) rank 0 dies between prepare
+and commit, so the survivor *finalizes the pending commit* (takeover)
+before recovering. Either way the survivor re-execs as a solo group,
+resumes from the committed distributed checkpoint, and its final params
+must match an uninterrupted single-process run at the PR-2/PR-6
+tolerances (AIP 1e-6, policy params 1e-2). The merged telemetry must
+tell the whole story (``tools.telemetry_report --check
+--expect-recovery``).
+"""
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed import bootstrap, recovery
+
+CHECK = os.path.join(os.path.dirname(__file__), "_recovery_check.py")
+
+
+class _Rec:
+    def __init__(self):
+        self.events = []
+
+    def emit(self, event, **fields):
+        self.events.append({"event": event, **fields})
+
+    def close(self):
+        pass
+
+
+# ---------------------------------------------------------------------------
+# shrink_config
+# ---------------------------------------------------------------------------
+def _cfg(n=2, pid=0, port=5000):
+    return bootstrap.BootstrapConfig(coordinator=f"127.0.0.1:{port}",
+                                     num_processes=n, process_id=pid)
+
+
+def test_shrink_to_solo_returns_none():
+    assert recovery.shrink_config(_cfg(2, 0), dead=[1],
+                                  new_generation=1) is None
+
+
+def test_shrink_reranks_survivors_with_coordinator_failover():
+    # 3-process group loses its coordinator (rank 0): survivors 1, 2
+    # re-rank to 0, 1 and the new coordinator port avoids the old one
+    new = recovery.shrink_config(_cfg(3, 1), dead=[0], new_generation=1)
+    assert new.num_processes == 2 and new.process_id == 0
+    assert new.coordinator == "127.0.0.1:5017"     # 5000 + 1 * 17
+    new2 = recovery.shrink_config(_cfg(3, 2), dead=[0], new_generation=2,
+                                  port_stride=10)
+    assert new2.process_id == 1
+    assert new2.coordinator == "127.0.0.1:5020"    # 5000 + 2 * 10
+
+
+def test_shrink_rejects_dead_self():
+    with pytest.raises(ValueError, match="among the dead"):
+        recovery.shrink_config(_cfg(2, 0), dead=[0], new_generation=1)
+
+
+# ---------------------------------------------------------------------------
+# bootstrap_with_retry
+# ---------------------------------------------------------------------------
+def test_bootstrap_retry_backs_off_then_succeeds():
+    calls, slept = [], []
+    sentinel = object()
+
+    def flaky(cfg, init_timeout_s=None, peer_death_grace_s=None):
+        calls.append((init_timeout_s, peer_death_grace_s))
+        if len(calls) < 3:
+            raise RuntimeError("coordinator not up yet")
+        return sentinel
+
+    rec = _Rec()
+    ctx, attempts = recovery.bootstrap_with_retry(
+        _cfg(), reco=recovery.RecoveryConfig(init_timeout_s=7.0,
+                                             peer_death_grace_s=300.0),
+        telemetry=rec, sleep=slept.append, _bootstrap=flaky)
+    assert ctx is sentinel and attempts == 3
+    assert calls == [(7.0, 300.0)] * 3
+    assert slept == [0.5, 1.0]               # backoff_s * 2**attempt
+    assert [e["event"] for e in rec.events] == ["bootstrap_retry"] * 2
+
+
+def test_bootstrap_retry_exhaustion_reraises():
+    slept = []
+
+    def never(cfg, init_timeout_s=None, peer_death_grace_s=None):
+        raise OSError("bind failed")
+
+    with pytest.raises(OSError, match="bind failed"):
+        recovery.bootstrap_with_retry(
+            _cfg(), reco=recovery.RecoveryConfig(retries=2),
+            sleep=slept.append, _bootstrap=never)
+    assert slept == [0.5, 1.0]               # no sleep after the last try
+
+
+# ---------------------------------------------------------------------------
+# reexec / raising_gate / generation
+# ---------------------------------------------------------------------------
+def test_reexec_env_contract():
+    env = {"DIALS_COORDINATOR": "127.0.0.1:5000",
+           "DIALS_NUM_PROCESSES": "2", "DIALS_PROCESS_ID": "1",
+           "OTHER": "kept"}
+    execs = []
+    recovery.reexec(None, 1, environ=env, argv=["tests/x.py", "--f"],
+                    execv=lambda p, a: execs.append((p, a)))
+    # solo resume: the group declaration is cleared, generation stamped
+    assert "DIALS_COORDINATOR" not in env
+    assert "DIALS_NUM_PROCESSES" not in env
+    assert "DIALS_PROCESS_ID" not in env
+    assert env["DIALS_RECOVERY_GENERATION"] == "1" and env["OTHER"] == "kept"
+    assert execs == [(sys.executable,
+                      [sys.executable, "tests/x.py", "--f"])]
+
+    env2 = {"DIALS_PROCESS_ID": "2"}
+    recovery.reexec(_cfg(2, 1, port=5017), 1, environ=env2, argv=["x"],
+                    execv=lambda p, a: None)
+    assert env2["DIALS_COORDINATOR"] == "127.0.0.1:5017"
+    assert env2["DIALS_NUM_PROCESSES"] == "2"
+    assert env2["DIALS_PROCESS_ID"] == "1"   # re-ranked, not the old id
+
+
+def test_raising_gate_converts_death_verdicts():
+    class Mon:
+        def __init__(self, dead):
+            self._dead = dead
+
+        def gate(self, rnd):
+            return self._dead
+
+    assert recovery.raising_gate(Mon(()))(3) == ()
+    with pytest.raises(recovery.HostLossDetected) as ei:
+        recovery.raising_gate(Mon((1, 0)))(4)
+    assert ei.value.round == 4 and ei.value.dead == (0, 1)
+
+
+def test_grace_kwargs_scale_missing_heartbeats():
+    kw = bootstrap.grace_kwargs(600.0)
+    assert kw["service_max_missing_heartbeats"] == 60     # 600 s / 10 s
+    assert kw["client_max_missing_heartbeats"] == 60
+    assert kw["service_heartbeat_interval_seconds"] == 10
+    # sub-interval grace still keeps a sane floor of 2 missed beats
+    assert bootstrap.grace_kwargs(1.0)["service_max_missing_heartbeats"] == 2
+    # non-multiples round UP — grace is a lower bound
+    assert bootstrap.grace_kwargs(25.0)["client_max_missing_heartbeats"] == 3
+
+
+def test_is_peer_failure_marker_matching():
+    assert recovery.is_peer_failure(RuntimeError(
+        "FAILED_PRECONDITION: Buffer Definition Event: Gloo collective "
+        "permute failed: Read error [127.0.0.1]:10157: "
+        "Connection reset by peer"))
+    assert recovery.is_peer_failure(RuntimeError(
+        "Task /job:jax_worker/replica:0/task:1 heartbeat timeout"))
+    assert not recovery.is_peer_failure(ValueError("shape mismatch"))
+    assert not recovery.is_peer_failure(ZeroDivisionError("div by zero"))
+
+
+class _StubGate:
+    """Stands in for raising_gate's closure: scripted verdict per call."""
+
+    def __init__(self, dead, last_round=4):
+        self.round = last_round
+        self.monitor = object()
+        self.calls = []
+        self._dead = dead
+
+    def __call__(self, rnd):
+        self.calls.append(rnd)
+        if self._dead:
+            raise recovery.HostLossDetected(rnd, self._dead)
+        return ()
+
+
+def test_diagnose_passes_through_host_loss():
+    loss = recovery.HostLossDetected(3, (1,))
+    assert recovery.diagnose(loss, None) is loss
+
+
+def test_diagnose_collective_wreckage_asks_the_monitor():
+    gate, rec = _StubGate(dead=(1,)), _Rec()
+    err = RuntimeError("Gloo collective permute failed: "
+                       "Connection reset by peer")
+    loss = recovery.diagnose(err, gate, telemetry=rec)
+    # the verdict round is the one the dead peer can never beat
+    assert gate.calls == [5] and loss.round == 5 and loss.dead == (1,)
+    assert [e["event"] for e in rec.events] == ["collective_failure"]
+    assert rec.events[0]["round"] == 4
+
+
+def test_diagnose_reraises_program_errors_and_live_peers():
+    # not a peer failure: never consults the monitor
+    gate = _StubGate(dead=(1,))
+    with pytest.raises(ValueError, match="shape"):
+        recovery.diagnose(ValueError("shape mismatch"), gate)
+    assert gate.calls == []
+    # peer failure but everyone beats: the original error stays fatal
+    gate2 = _StubGate(dead=())
+    err = RuntimeError("connection reset by peer")
+    with pytest.raises(RuntimeError, match="connection reset"):
+        recovery.diagnose(err, gate2)
+    assert gate2.calls == [5]
+    # no gate at all (solo run): nothing to diagnose
+    with pytest.raises(RuntimeError, match="connection reset"):
+        recovery.diagnose(RuntimeError("connection reset by peer"), None)
+
+
+def test_raising_gate_tracks_rounds_for_post_mortem():
+    class Mon:
+        def gate(self, rnd):
+            return ()
+
+    mon = Mon()
+    gate = recovery.raising_gate(mon)
+    assert gate.round == 0 and gate.monitor is mon
+    gate(3)
+    gate(7)
+    assert gate.round == 7
+
+
+def _touch(path, age_s=0.0):
+    with open(path, "w") as f:
+        f.write("x")
+    if age_s:
+        t = time.time() - age_s
+        os.utime(path, (t, t))
+
+
+def test_deadman_silent_peer_detection(tmp_path):
+    d = recovery.Deadman(str(tmp_path), host=0, n_hosts=3,
+                         on_loss=lambda loss: None, silence_s=5.0)
+    d._born = time.time() - 120.0        # watchdog has been up a while
+    # peer 1 pulsed long ago -> silent; peer 2 never pulsed -> still
+    # bootstrapping, which is the init timeout's failure mode, not ours
+    _touch(str(tmp_path / "live-1"), age_s=60.0)
+    assert d.silent_peers() == (1,)
+    # a fresh pulse clears the verdict
+    _touch(str(tmp_path / "live-1"))
+    assert d.silent_peers() == ()
+
+
+def test_deadman_ignores_previous_incarnation_pulses(tmp_path):
+    # the beat dir survives execv and re-ranked ids alias old ones: a
+    # pulse file older than this watchdog's birth is not evidence
+    d = recovery.Deadman(str(tmp_path), host=0, n_hosts=2,
+                         on_loss=lambda loss: None, silence_s=0.1)
+    _touch(str(tmp_path / "live-1"), age_s=60.0)
+    assert d.silent_peers() == ()
+
+
+def test_deadman_recovers_from_watch_thread(tmp_path):
+    fired, rec = [], _Rec()
+    d = recovery.Deadman(str(tmp_path), host=0, n_hosts=2,
+                         on_loss=fired.append, current_round=lambda: 7,
+                         interval_s=0.02, silence_s=0.2, telemetry=rec)
+    _touch(str(tmp_path / "live-1"))     # peer pulses once, then dies
+    d.start()
+    deadline = time.time() + 10.0
+    while not fired and time.time() < deadline:
+        time.sleep(0.02)
+    d.stop()
+    assert fired and fired[0].dead == (1,) and fired[0].round == 7
+    # our own pulse was being published all along
+    assert os.path.exists(tmp_path / "live-0")
+    ev = [e for e in rec.events if e["event"] == "host_death"]
+    assert ev and ev[0]["dead_hosts"] == [1] \
+        and ev[0]["detector"] == "deadman"
+    # the watchdog claimed the latch: a racing main-thread path loses
+    assert not d.claim()
+
+
+def test_deadman_claim_is_exclusive(tmp_path):
+    d = recovery.Deadman(str(tmp_path), host=0, n_hosts=1,
+                         on_loss=lambda loss: None)
+    assert d.claim()
+    assert not d.claim()
+
+
+def test_generation_reads_env():
+    assert recovery.generation({}) == 0
+    assert recovery.generation({"DIALS_RECOVERY_GENERATION": ""}) == 0
+    assert recovery.generation({"DIALS_RECOVERY_GENERATION": "2"}) == 2
+
+
+def test_recover_flow_with_doubles():
+    env = {"DIALS_RECOVERY_GENERATION": "0", "DIALS_PROCESS_ID": "0"}
+    rec, execs = _Rec(), []
+    ctx = bootstrap.DistContext(process_id=0, num_processes=2,
+                                coordinator="127.0.0.1:5000",
+                                initialized=False)
+    recovery.recover(
+        recovery.HostLossDetected(2, (1,)), ctx, cfg=_cfg(2, 0),
+        environ=env, telemetry=rec,
+        execv=lambda p, a: execs.append((p, a)))
+    kinds = [e["event"] for e in rec.events]
+    assert kinds == ["recovery_begin", "recovery_exec"]
+    assert rec.events[0]["generation"] == 1 and rec.events[0]["dead"] == [1]
+    assert rec.events[1]["num_processes"] == 1   # 2 -> 1: solo resume
+    assert env["DIALS_RECOVERY_GENERATION"] == "1"
+    assert "DIALS_PROCESS_ID" not in env
+    assert len(execs) == 1
+
+
+# ---------------------------------------------------------------------------
+# E2E: SIGKILL one rank of a real 2-process group, survive, resume
+# ---------------------------------------------------------------------------
+def _telemetry_dir(tmp_path, name):
+    base = os.environ.get("DIALS_TELEMETRY_DIR") or str(tmp_path)
+    path = os.path.join(base, name)
+    os.makedirs(path, exist_ok=True)
+    return path
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _env(*, group=None, rank=0):
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "PYTHONPATH": "src",
+           "JAX_PLATFORMS": "cpu"}
+    env.pop("DIALS_RECOVERY_GENERATION", None)
+    env.pop("DIALS_COORDINATOR_EXTERNAL", None)
+    if group is not None:
+        # external coordinator: the service must not die with rank 0 —
+        # a worker-hosted service collapses every survivor's
+        # coordination channel the instant the host rank dies
+        env.update({"DIALS_COORDINATOR": f"127.0.0.1:{group}",
+                    "DIALS_COORDINATOR_EXTERNAL": "1",
+                    "DIALS_NUM_PROCESSES": "2",
+                    "DIALS_PROCESS_ID": str(rank)})
+    return env
+
+
+def _wait(proc, timeout=1500):
+    out, _ = proc.communicate(timeout=timeout)
+    return proc.returncode, out
+
+
+@pytest.fixture(scope="module")
+def reference(tmp_path_factory):
+    """The uninterrupted 1-process 4-shard run both scenarios compare
+    against (computed once)."""
+    out = str(tmp_path_factory.mktemp("recovery-ref") / "ref.json")
+    rc, log = _wait(subprocess.Popen(
+        [sys.executable, CHECK, "--mode", "reference", "--out", out],
+        cwd="/root/repo", env=_env(), stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT, text=True))
+    assert rc == 0 and "RECOVERY-OK" in log, log[-3000:]
+    with open(out) as f:
+        return json.load(f)
+
+
+def _launch_group(tmp_path, *, out, tel_dir, spec):
+    port = _free_port()
+    ready = str(tmp_path / "coordinator.ready")
+    coordinator = subprocess.Popen(
+        [sys.executable, "-m", "repro.distributed.coordinator",
+         "--bind", f"127.0.0.1:{port}", "--num-processes", "2",
+         "--ready-file", ready, "--timeout-s", "1500"],
+        cwd="/root/repo", env=_env(), stdout=subprocess.DEVNULL,
+        stderr=subprocess.DEVNULL)
+    for _ in range(600):                      # wait for the listener
+        if os.path.exists(ready) or coordinator.poll() is not None:
+            break
+        time.sleep(0.05)
+    assert os.path.exists(ready), "external coordinator never came up"
+    args = [sys.executable, CHECK, "--mode", "worker", "--out", out,
+            "--beat-dir", str(tmp_path / "beats"),
+            "--ckpt-dir", str(tmp_path / "ck"),
+            "--telemetry-dir", tel_dir, "--chaos", spec]
+    workers = [subprocess.Popen(args, cwd="/root/repo",
+                                env=_env(group=port, rank=rank),
+                                stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT, text=True)
+               for rank in (0, 1)]
+    return workers, coordinator
+
+
+def _assert_recovery(results, *, dead_rank, ref, out, tel_dir,
+                     resume_rounds):
+    survivor = 1 - dead_rank
+    rc_dead, log_dead = results[dead_rank]
+    rc_live, log_live = results[survivor]
+    # the doomed rank really died by SIGKILL mid-write, no cleanup
+    assert rc_dead == -9, f"rc={rc_dead}\n{log_dead[-3000:]}"
+    # the survivor's Popen handle followed it through os.execv (same
+    # pid): rc/stdout are the RE-EXECUTED generation-1 run's
+    assert rc_live == 0 and "RECOVERY-OK" in log_live, log_live[-5000:]
+    assert "NO-FAULT" not in log_live
+
+    with open(out) as f:
+        got = json.load(f)
+    # resumed exactly from the committed step, on the solo 4-shard mesh
+    assert [r["round"] for r in got["history"]] == resume_rounds, \
+        got["history"]
+    assert all(r["n_shards"] == 4 for r in got["history"])
+    # final params match the uninterrupted run: AIPs to 1e-6, policy
+    # params to optimizer-step tolerance (PR-2/PR-6 contract)
+    for a, b in zip(ref["aips"], got["aips"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, err_msg="AIP params")
+    for a, b in zip(ref["params"], got["params"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-2, err_msg="policy params")
+    # the merged event log tells the whole story, in causal order —
+    # the same gate CI runs (--check --expect-recovery)
+    from tools import telemetry_report
+    events = telemetry_report.load_events(tel_dir)
+    assert telemetry_report.check(events) == [], \
+        telemetry_report.check(events)
+    assert telemetry_report.check_recovery(events) == [], \
+        telemetry_report.check_recovery(events)
+    injected = [e for e in events if e.get("event") == "chaos_inject"]
+    assert any(e["kind"] == "writer_crash" and e.get("host") == dead_rank
+               for e in injected), injected
+    death = [e for e in events if e.get("event") == "host_death"]
+    assert death and death[0]["dead_hosts"] == [dead_rank], death
+    reboot = [e for e in events if e.get("event") == "rebootstrap"]
+    assert reboot and reboot[0]["generation"] == 1 \
+        and reboot[0]["num_processes"] == 1, reboot
+    return events
+
+
+@pytest.mark.timeout(2400)
+def test_nonprimary_death_recovers_from_rank0_commit(tmp_path, reference):
+    """Scenario A: rank 1's writer SIGKILLs right after preparing its
+    step-2 slice (a heartbeat_delay parks its main thread so it never
+    beats round 2 and dies outside any collective). Rank 0 commits step
+    2, times out the gate, and re-execs solo — resuming at round 2."""
+    out = str(tmp_path / "got.json")
+    tel_dir = _telemetry_dir(tmp_path, "recovery-kill1")
+    spec = ("crash@2:host=1:phase=prepared,"
+            "delay@2:host=1:delay_s=30")
+    workers, coordinator = _launch_group(tmp_path, out=out,
+                                         tel_dir=tel_dir, spec=spec)
+    try:
+        results = [_wait(p) for p in workers]
+    finally:
+        coordinator.terminate()
+        try:
+            coordinator.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            coordinator.kill()
+            coordinator.wait()
+    _assert_recovery(results, dead_rank=1, ref=reference, out=out,
+                     tel_dir=tel_dir, resume_rounds=[2, 3, 4])
+
+
+@pytest.mark.timeout(2400)
+def test_primary_death_finalized_by_survivor_takeover(tmp_path, reference):
+    """Scenario B: rank 0 dies at ``pre_commit`` of step 3 — after every
+    slice verified, before COMMIT. The survivor's recover() finalizes
+    the pending commit (takeover), so the solo resume starts at round 3,
+    losing NO completed round to the primary's death."""
+    out = str(tmp_path / "got.json")
+    tel_dir = _telemetry_dir(tmp_path, "recovery-commit0")
+    spec = ("crash@3:host=0:phase=pre_commit,"
+            "delay@3:host=0:delay_s=30")
+    workers, coordinator = _launch_group(tmp_path, out=out,
+                                         tel_dir=tel_dir, spec=spec)
+    try:
+        results = [_wait(p) for p in workers]
+    finally:
+        coordinator.terminate()
+        try:
+            coordinator.wait(timeout=30)
+        except subprocess.TimeoutExpired:
+            coordinator.kill()
+            coordinator.wait()
+    events = _assert_recovery(results, dead_rank=0, ref=reference, out=out,
+                              tel_dir=tel_dir, resume_rounds=[3, 4])
+    # the takeover really happened: the survivor finalized step 3
+    fin = [e for e in events if e.get("event") == "recovery_finalize"]
+    assert fin and fin[0]["step"] == 3, fin

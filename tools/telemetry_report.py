@@ -17,6 +17,10 @@ JSONL file. Output:
   log must be parseable and non-empty, every round event must pass
   ``metrics.validate_round``, and each process's round events must be
   monotone in the round index. Exit 1 on any violation.
+* ``--check --expect-recovery`` additionally requires the recovery
+  story in causal order: a ``host_death``, a generation ≥ 1
+  ``rebootstrap`` after it, and a resumed ``run_start`` with
+  ``start_round > 0`` — the chaos CI job's gate.
 
     PYTHONPATH=src python -m tools.telemetry_report experiments/telemetry
     PYTHONPATH=src python -m tools.telemetry_report run.jsonl --check
@@ -96,6 +100,25 @@ def elasticity_timeline(events: List[Dict]) -> str:
                 f"  replan: shards {e.get('old_shards')}->"
                 f"{e.get('new_shards')}, dead blocks "
                 f"{e.get('dead_blocks')}, moved {e.get('moved')}")
+        elif kind == "chaos_inject":
+            lines.append(
+                f"  round {e.get('round')}: chaos_inject "
+                f"kind={e.get('kind')} host={e.get('host')} "
+                f"(p{e.get('proc', 0)})")
+        elif kind == "recovery_begin":
+            lines.append(
+                f"  round {e.get('round')}: recovery_begin "
+                f"dead={e.get('dead')} -> generation "
+                f"{e.get('generation')} (p{e.get('proc', 0)})")
+        elif kind == "rebootstrap":
+            lines.append(
+                f"  rebootstrap: generation {e.get('generation')}, "
+                f"{e.get('num_processes')} process(es), "
+                f"{e.get('attempts')} attempt(s) (p{e.get('proc', 0)})")
+        elif kind == "restore_reshard":
+            lines.append(
+                f"  restore: step {e.get('step')} re-sharded "
+                f"{e.get('old_shards')}->{e.get('new_shards')} shards")
         elif kind == "round":
             shards = e.get("n_shards")
             if prev_shards is not None and shards != prev_shards:
@@ -140,6 +163,42 @@ def check(events: List[Dict]) -> List[str]:
     return problems
 
 
+def check_recovery(events: List[Dict]) -> List[str]:
+    """The chaos job's gate: the log must tell the full recovery story,
+    in causal order — a ``host_death`` verdict, then a ``rebootstrap``
+    of generation ≥ 1 (the re-executed survivor coming back up), then a
+    resumed ``run_start`` with ``start_round > 0`` (training continued
+    from the committed checkpoint, not from scratch)."""
+    problems = []
+    death = next((i for i, e in enumerate(events)
+                  if e.get("event") == "host_death"), None)
+    if death is None:
+        return ["expected a host_death event — no death was detected"]
+    begin = next((i for i, e in enumerate(events)
+                  if e.get("event") == "recovery_begin" and i > death),
+                 None)
+    if begin is None:
+        problems.append("no recovery_begin after the host_death — the "
+                        "supervisor never ran")
+    reboot = next((i for i, e in enumerate(events)
+                   if e.get("event") == "rebootstrap"
+                   and e.get("generation", 0) >= 1 and i > death), None)
+    if reboot is None:
+        problems.append("no generation>=1 rebootstrap after the "
+                        "host_death — the survivor never came back")
+        return problems
+    resumed = [e for i, e in enumerate(events)
+               if e.get("event") == "run_start" and i > reboot]
+    if not resumed:
+        problems.append("no run_start after the rebootstrap — the "
+                        "re-executed survivor never resumed training")
+    elif not any(e.get("start_round", 0) > 0 for e in resumed):
+        problems.append(
+            "resumed run_start has start_round=0 — the survivor "
+            "restarted from scratch instead of the committed checkpoint")
+    return problems
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("path", help="telemetry directory or JSONL file")
@@ -148,6 +207,10 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="validate only (schema + monotone rounds); "
                          "exit 1 on any problem")
+    ap.add_argument("--expect-recovery", action="store_true",
+                    help="with --check: additionally require the "
+                         "host_death -> rebootstrap -> resumed "
+                         "run_start recovery sequence")
     args = ap.parse_args(argv)
 
     events = load_events(args.path)
@@ -156,6 +219,8 @@ def main(argv=None) -> int:
         # TAG file [rule] lines locally, ::error annotations in CI
         from repro.analysis.report import Finding, emit
         problems = check(events)
+        if args.expect_recovery:
+            problems += check_recovery(events)
         if emit([Finding(tag="TELEMETRY-INVALID", rule="TelemetrySchema",
                          message=p, file=args.path)
                  for p in problems]):
