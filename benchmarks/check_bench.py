@@ -55,9 +55,10 @@ SPECS = {
         # higher-better cells gated on regression; everything else is
         # structure-checked only (ratio columns bounce with machine
         # load; a vanished cell is the real signal)
-        "throughput": ("inner_steps_per_s", "inner_steps_per_s_async"),
+        "throughput": ("inner_steps_per_s", "inner_steps_per_s_async",
+                       "env_steps_per_s"),
         "times": (),
-        "shape_cols": ("n_agents", "shards", "processes"),
+        "shape_cols": ("n_agents", "shards", "processes", "streams"),
         "schema": lambda r: metrics.SCALING_ROW_SCHEMA,
     },
     "kernels": {

@@ -67,7 +67,8 @@ def _setup(env_name, n_side, *, horizon=32):
 
 
 def fig3_learning(fast: bool = False, shards=None, async_collect=False,
-                  use_kernels="auto", sharded_gs="auto"):
+                  use_kernels="auto", sharded_gs="auto",
+                  collect_streams=None):
     """GS vs DIALS vs untrained-DIALS mean return (4-agent envs)."""
     from repro.core import dials
     from repro.launch import variants
@@ -85,7 +86,8 @@ def fig3_learning(fast: bool = False, shards=None, async_collect=False,
                 untrained=untrained, eval_episodes=8,
                 use_kernels=use_kernels,
                 **variants.dials_variant_for(shards, async_collect,
-                                             sharded_gs))
+                                             sharded_gs,
+                                             streams=collect_streams))
             tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac, ppo_cfg, cfg)
             t0 = time.time()
             _, hist = tr.run(jax.random.PRNGKey(0))
@@ -281,6 +283,9 @@ def main() -> None:
                     help="region-decomposed GS collect/eval on the mesh "
                          "(auto = whenever the env partition supports "
                          "the shard count)")
+    ap.add_argument("--collect-streams", type=int, default=None,
+                    help="GS env-stream count S for the DIALS cells "
+                         "(wide vmapped collect; None = collect_envs)")
     ap.add_argument("--profile-dir", default=None,
                     help="capture an XLA profiler trace of the whole "
                          "sweep into this directory "
@@ -303,6 +308,8 @@ def main() -> None:
                 kw["use_kernels"] = args.use_kernels
             if "sharded_gs" in inspect.signature(fn).parameters:
                 kw["sharded_gs"] = args.sharded_gs
+            if "collect_streams" in inspect.signature(fn).parameters:
+                kw["collect_streams"] = args.collect_streams
             fn(**kw)
     if args.profile_dir:
         print(f"# profiler trace written to {args.profile_dir}")

@@ -15,7 +15,12 @@ Measures, for every (registered scenario, shard count) cell:
   ``repro.core.gs_sharded`` on the same mesh
   (``collect_s_sharded_gs`` / ``gs_speedup``; null where the env's
   ``region_partition`` cannot tile the shard count, e.g. a 2×2 grid on
-  8 shards).
+  8 shards),
+* with ``--streams S1,S2,...``, the large-batch collect curve: the
+  loop path at collect width S (``DIALSConfig.collect_streams`` — the
+  ring-buffer datasets feeding the fused AIP round), one row per S with
+  ``env_steps_per_s = S * collect_steps / collect_s`` from a dedicated
+  post-compile collect timing.
 
 The default grid includes the side-4 (16-agent) cells at shards 8/16
 (powergrid-ring16 / supplychain-line16 — contiguous-ring topologies that
@@ -84,6 +89,7 @@ def _make_collect_ab(env_mod, env_cfg, pc, *, n_envs, steps):
 
     def ab(shards):
         out = {"collect_s": rep_s,
+               "env_steps_per_s": n_envs * steps / rep_s,
                "collect_s_sharded_gs": None, "gs_speedup": None}
         ok, _why = gs_sharded.partition_supported(env_mod, env_cfg,
                                                   shards)
@@ -162,7 +168,7 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps,
                 cfg.rollout_steps * n                  # F * E * T * N
             row = {"label": f"{scenario}-s{shards}{suffix}",
                    "scenario": scenario, "n_agents": n, "shards": shards,
-                   "processes": processes,
+                   "processes": processes, "streams": 4,
                    "fused": shards > 1,
                    "round_s": steady,
                    "round_s_async": steady_by_mode[True],
@@ -178,6 +184,78 @@ def _sweep(scenarios, shard_counts, *, rounds, inner, collect_steps,
             if unfused_round_s is not None:
                 row["speedup_vs_unfused"] = unfused_round_s / steady
             rows.append(row)
+    return rows
+
+
+def _stream_sweep(scenarios, streams_list, *, rounds, inner,
+                  collect_steps, telemetry_dir=None):
+    """Large-batch collect sweep: the loop (shards=1) path at stream
+    widths S, first scenario only. Each cell runs the full DIALS round
+    loop (ring-buffer collect feeding the fused AIP round) sync and
+    async, plus a dedicated post-compile collect timing that gives the
+    ``env_steps_per_s`` throughput curve the large-batch claim rests on
+    (the in-loop collect span includes dispatch jitter; the dedicated
+    timing is the apples-to-apples cell)."""
+    import jax
+    from benchmarks.run import _setup
+    from repro.core import dials, gs as gs_mod
+    from repro.launch import variants
+    from repro.marl import policy as policy_mod
+
+    scenario = scenarios[0]
+    env_name, side = variants.MARL_SCENARIOS[scenario]
+    env_mod, env_cfg, info, pc, ac, ppo_cfg = _setup(env_name, side)
+    n = info.n_agents
+    key = jax.random.PRNGKey(0)
+    params = jax.vmap(lambda k: policy_mod.policy_init(k, pc))(
+        jax.random.split(key, n))
+    rows = []
+    for streams in streams_list:
+        coll = gs_mod.make_collector(env_mod, env_cfg, pc,
+                                     n_envs=streams, steps=collect_steps)
+        collect_s = _timed(coll, params, key)
+        steady_by_mode, total_by_mode = {}, {}
+        for overlap in (False, True):
+            cell_tel = None
+            if telemetry_dir:
+                cell_tel = os.path.join(
+                    telemetry_dir,
+                    f"{scenario}-streams{streams}-"
+                    f"{'async' if overlap else 'sync'}")
+            cfg = dials.DIALSConfig(
+                outer_rounds=rounds, aip_refresh=inner, collect_envs=4,
+                collect_steps=collect_steps, n_envs=8, rollout_steps=16,
+                eval_episodes=4, telemetry_dir=cell_tel,
+                **variants.dials_variant_for(1, overlap,
+                                             streams=streams))
+            tr = dials.DIALSTrainer(env_mod, env_cfg, pc, ac,
+                                    ppo_cfg, cfg)
+            t0 = time.time()
+            _, hist = tr.run(jax.random.PRNGKey(0))
+            total_by_mode[overlap] = time.time() - t0
+            steady_by_mode[overlap] = (
+                (hist[-1]["wall_s"] - hist[0]["wall_s"]) /
+                (len(hist) - 1)) if len(hist) > 1 \
+                else hist[0]["wall_s"]
+        steady = steady_by_mode[False]
+        inner_steps = cfg.aip_refresh * cfg.n_envs * \
+            cfg.rollout_steps * n
+        rows.append({
+            "label": f"{scenario}-streams{streams}",
+            "scenario": scenario, "n_agents": n, "shards": 1,
+            "processes": 1, "streams": streams, "fused": False,
+            "round_s": steady,
+            "round_s_async": steady_by_mode[True],
+            "overlap_speedup": steady / steady_by_mode[True],
+            "inner_steps_per_s": inner_steps / steady,
+            "inner_steps_per_s_async":
+                inner_steps / steady_by_mode[True],
+            "total_wall_s": total_by_mode[False],
+            "total_wall_s_async": total_by_mode[True],
+            "collect_s": collect_s,
+            "env_steps_per_s": streams * collect_steps / collect_s,
+            "collect_s_sharded_gs": None, "gs_speedup": None,
+        })
     return rows
 
 
@@ -224,6 +302,13 @@ def main() -> None:
                          "line16 defaults are the side-4 16-agent cells "
                          "exercising shards 8/16)")
     ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--streams", default=None,
+                    help="comma-separated collect stream widths S — "
+                         "sweeps the loop-path large-batch collect "
+                         "(ring-buffer datasets, fused AIP round) on "
+                         "the FIRST scenario, one row per S labelled "
+                         "{scenario}-streams{S} with the "
+                         "env_steps_per_s throughput column")
     ap.add_argument("--processes", default="1",
                     help="comma-separated process counts; each P > 1 "
                          "re-launches the sweep as P coordinated "
@@ -289,6 +374,13 @@ def main() -> None:
                                    inner=inner,
                                    collect_steps=collect_steps,
                                    telemetry_dir=args.telemetry_dir))
+                if args.streams:
+                    streams_list = sorted(
+                        {int(s) for s in args.streams.split(",")})
+                    rows.extend(_stream_sweep(
+                        scenarios, streams_list, rounds=rounds,
+                        inner=inner, collect_steps=collect_steps,
+                        telemetry_dir=args.telemetry_dir))
             continue
         if all(s % processes for s in shard_counts):
             print(f"# skip processes={processes}: no shard count "

@@ -42,6 +42,13 @@ Rule catalogue (see README "Static program contracts"):
                       all-gather / collective-permute — never a
                       combining collective; checked on compiled HLO
                       text, where sharding-induced collectives live.
+``RingBufferResident`` the donating ring-buffer collect keeps the wide
+                      dataset device-resident: no host-callback
+                      primitive anywhere in it, and the fresh dataset
+                      has exactly the retired slot's tree structure /
+                      shapes / dtypes, so every slot leaf can alias an
+                      output and nothing round-trips through the host
+                      between collect and training.
 
 Programs carry ``roles`` tags; each rule declares which roles it
 applies to, and :func:`run_rules` does the cross product. Adding a
@@ -64,6 +71,7 @@ __all__ = [
     "Program", "ContractRule", "run_rules", "DEFAULT_RULES",
     "CollectiveFree", "HaloOnly", "NoHostCallback", "DonationUsed",
     "DtypeRoundTrip", "ScalarSyncBudget", "ReshardCollectives",
+    "RingBufferResident",
 ]
 
 TAG = "CONTRACT-VIOLATION"
@@ -372,9 +380,60 @@ class ReshardCollectives(ContractRule):
         return []
 
 
+class RingBufferResident(ContractRule):
+    """The donating ring collect never leaves the device.
+
+    Two claims make the ring a zero-copy path: (a) no host-callback
+    primitive anywhere in the program — a hidden ``pure_callback`` would
+    stage the wide ``(N, S, T, ...)`` dataset through the host exactly
+    where the ring exists to avoid it; and (b) the returned dataset has
+    the retired slot's tree structure, shapes, and dtypes bit-for-bit,
+    which is what lets XLA alias every donated slot buffer into an
+    output (``DonationUsed`` then counts the aliases on the lowered
+    module — the two rules are one contract observed at two layers).
+    A struct mismatch means some leaf is reallocated every round and the
+    steady-state memory claim quietly doubles.
+    """
+    name = "RingBufferResident"
+    roles = ("ring_collect",)
+
+    @staticmethod
+    def _struct(tree):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        return treedef, [(tuple(leaf.shape), str(leaf.dtype))
+                         for leaf in leaves]
+
+    def check(self, program: Program) -> List[Finding]:
+        out: List[Finding] = []
+        if program.jaxpr is not None:
+            out.extend(
+                _site_finding(self.name, program, s,
+                              "host callback inside the ring-buffer "
+                              "collect — the device-resident dataset "
+                              "just round-tripped through the host")
+                for s in walker.sites(program.jaxpr, CALLBACK_PRIMS))
+        if program.fn is None:
+            return out
+        slot_idx = (program.donate_argnums[0]
+                    if program.donate_argnums else 0)
+        slot = program.args[slot_idx]
+        result = jax.eval_shape(program.fn, *program.args)
+        slot_def, slot_leaves = self._struct(slot)
+        res_def, res_leaves = self._struct(result)
+        if slot_def != res_def or slot_leaves != res_leaves:
+            out.append(Finding(
+                tag=TAG, rule=self.name,
+                message=f"{program.name}: collect output structure "
+                        f"{res_leaves} differs from the donated slot "
+                        f"{slot_leaves} — the slot cannot be aliased in "
+                        f"place and the ring reallocates every round"))
+        return out
+
+
 DEFAULT_RULES: Tuple[ContractRule, ...] = (
     CollectiveFree(), HaloOnly(), NoHostCallback(), DonationUsed(),
     DtypeRoundTrip(), ScalarSyncBudget(), ReshardCollectives(),
+    RingBufferResident(),
 )
 
 

@@ -6,7 +6,14 @@ trace fine and fail silently at runtime:
 
 ``prng-reuse``           a PRNG key passed to a second consuming
                          ``jax.random`` call without being re-derived —
-                         correlated randomness across draws.
+                         correlated randomness across draws. The
+                         ``repro.core.env_pool`` key helpers
+                         (``stream_keys`` / ``init_keys`` /
+                         ``step_keys``) register as consumers too: each
+                         derives a whole fold-in chain from its first
+                         argument, so feeding the same key (or stream-
+                         key array) to a second consumer correlates
+                         every stream at once.
 ``prng-discarded-split`` a result of ``jax.random.split`` bound to a
                          name that is never read (underscore-prefixed
                          names opt out — the repo's "deliberately
@@ -64,6 +71,12 @@ CONSUMING = frozenset({
     "multivariate_normal", "ball", "t", "loggamma", "binomial",
 })
 
+# repro.core.env_pool helpers that consume their first key argument the
+# way a jax.random call does: each derives per-stream fold-in chains
+# from it, so passing the same key/stream-key array to a second
+# consumer correlates every stream's draws at once
+POOL_CONSUMING = frozenset({"stream_keys", "init_keys", "step_keys"})
+
 HOST_CLOCKS = frozenset({"time", "perf_counter", "monotonic",
                          "process_time", "perf_counter_ns", "time_ns"})
 
@@ -94,6 +107,18 @@ def _is_jax_random(call: ast.Call) -> Optional[str]:
     if head in ("jax.random", "random", "jrandom", "jr"):
         return fn
     return None
+
+
+def _is_pool_key_helper(call: ast.Call) -> Optional[str]:
+    """The env_pool key-helper name of a call (qualified or bare), or
+    None — these consume their first key argument like jax.random."""
+    if isinstance(call.func, ast.Attribute):
+        name = call.func.attr
+    elif isinstance(call.func, ast.Name):
+        name = call.func.id
+    else:
+        return None
+    return name if name in POOL_CONSUMING else None
 
 
 def _contains_axis_index(node) -> bool:
@@ -167,7 +192,8 @@ class _FunctionLinter:
 
     def call(self, call: ast.Call, state: _KeyState) -> None:
         fn = _is_jax_random(call)
-        if fn is None:
+        pool_fn = None if fn is not None else _is_pool_key_helper(call)
+        if fn is None and pool_fn is None:
             return
         if fn == "fold_in" and len(call.args) >= 2 and \
                 self._is_relative(call.args[1], state):
@@ -175,7 +201,8 @@ class _FunctionLinter:
                              "fold_in keyed on axis_index — fold the "
                              "absolute agent id so per-agent randomness "
                              "is shard-count invariant")
-        if fn in CONSUMING and call.args and \
+        consumes = (fn in CONSUMING) if fn is not None else True
+        if consumes and call.args and \
                 isinstance(call.args[0], ast.Name):
             name = call.args[0].id
             prior = state.consumed.get(name)
@@ -187,7 +214,9 @@ class _FunctionLinter:
                     f"re-deriving (split/fold_in) is required before "
                     f"every consuming call")
             else:
-                state.consumed[name] = (call.lineno, fn)
+                state.consumed[name] = (
+                    call.lineno, fn if fn is not None
+                    else f"(env_pool.{pool_fn})")
 
     # -- statement pass -------------------------------------------------------
     def assign_targets(self, targets, value, state: _KeyState) -> None:

@@ -14,7 +14,10 @@ drivers × every registered scenario**:
   step, GS eval) — no mesh, so no collective rules fire, but callback
   and structural rules run identically (the driver-parity contract);
 * the **kernel dispatch paths** (GRU/GAE ops, oracle and Pallas) as
-  dtype round-trip programs.
+  dtype round-trip programs;
+* the **wide-stream collect path** — the donating ring-slot collect and
+  the fused round re-audited at S=64 streams, where donation aliasing
+  and the sync budget can silently regress as shapes grow.
 
 New traced programs MUST register here (see ROADMAP): either extend
 :func:`scenario_programs` or append a builder via
@@ -33,7 +36,7 @@ from repro.analysis.contracts import Program
 
 __all__ = ["tiny_trainer", "loop_programs", "sharded_programs",
            "kernel_dtype_programs", "recovery_programs",
-           "scenario_programs", "all_programs",
+           "stream_programs", "scenario_programs", "all_programs",
            "register_programs", "DRIVERS"]
 
 DRIVERS = ("loop", "sharded")
@@ -99,16 +102,37 @@ def loop_programs(env: str, *, kind: str = "fnn") -> List[Program]:
     agent_keys = jax.ShapeDtypeStruct((info.n_agents, 2), jnp.uint32)
     gs_eval = functools.partial(trainer.gs_eval,
                                 episodes=cfg.eval_episodes)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    mask = jax.ShapeDtypeStruct((info.n_agents,), jnp.float32)
+    reports = jax.ShapeDtypeStruct((info.n_agents,), jnp.int32)
+    aip_round_args = (aips, data, agent_keys, mask, reports,
+                      scalar, scalar)
+    n_data_leaves = len(jax.tree.leaves(data))
     pre = f"loop/{env}"
     return [
         Program(name=f"{pre}/collect", roles=("collect", "program"),
                 jaxpr=jax.make_jaxpr(trainer.collect)(params, key),
                 fn=trainer.collect, args=(params, key)),
+        # the donating ring-slot variant of the same pool rollout: the
+        # RingBufferResident + DonationUsed pair pins the no-host-round-
+        # trip / no-realloc claim the DeviceRing makes
+        Program(name=f"{pre}/ring_collect",
+                roles=("ring_collect", "donated", "program"),
+                jaxpr=jax.make_jaxpr(trainer.collect_into)(
+                    data, params, key),
+                fn=trainer.collect_into, args=(data, params, key),
+                donate_argnums=(0,),
+                meta={"expect_aliased": n_data_leaves}),
         Program(name=f"{pre}/train_aips", roles=("program",),
                 jaxpr=jax.make_jaxpr(trainer.train_aips)(
                     aips, train_data, agent_keys),
                 fn=trainer.train_aips, args=(aips, train_data,
                                              agent_keys)),
+        # the fused AIP round (holdout split + eval + train + freshness
+        # gate as ONE program over the ring-resident dataset)
+        Program(name=f"{pre}/aip_round", roles=("program",),
+                jaxpr=jax.make_jaxpr(trainer.aip_round)(*aip_round_args),
+                fn=trainer.aip_round, args=aip_round_args),
         Program(name=f"{pre}/ials_train", roles=("program",),
                 jaxpr=jax.make_jaxpr(trainer.ials_train)(state, aips),
                 fn=trainer.ials_train, args=(state, aips)),
@@ -256,6 +280,59 @@ def recovery_programs(env: str = "traffic", *,
 
 
 # ---------------------------------------------------------------------------
+# wide-stream (S-swept) collect path
+# ---------------------------------------------------------------------------
+def stream_programs(env: str = "traffic", *, streams: int = 64,
+                    kind: str = "fnn") -> List[Program]:
+    """The large-batch collect path at a wide stream count S.
+
+    The S knobs (``DIALSConfig.collect_streams``) only change a vmapped
+    batch axis, so the contracts that hold at S=2 must hold at S=64 —
+    but donation aliasing, the ring's struct round-trip, and the fused
+    round's sync budget are exactly the properties that CAN silently
+    regress when a shape grows (XLA drops an alias, a reduction widens
+    an output). This re-audits the loop ring collect and the sharded
+    fused round with the stream axis actually wide."""
+    from repro.core import dials_sharded
+
+    trainer = tiny_trainer(env, kind=kind, collect_streams=streams)
+    info = trainer.info
+    key = _key_aval()
+    params = jax.eval_shape(trainer.ials_init, key)["params"]
+    data = jax.eval_shape(trainer.collect, params, key)
+    pre = f"streams/{env}@S{streams}"
+    programs = [
+        Program(name=f"{pre}/ring_collect",
+                roles=("ring_collect", "donated", "program"),
+                jaxpr=jax.make_jaxpr(trainer.collect_into)(
+                    data, params, key),
+                fn=trainer.collect_into, args=(data, params, key),
+                donate_argnums=(0,),
+                meta={"expect_aliased": len(jax.tree.leaves(data))}),
+    ]
+    runner = dials_sharded.ShardedDIALSRunner(
+        trainer.env_mod, trainer.env_cfg, trainer.policy_cfg,
+        trainer.aip_cfg, trainer.ppo_cfg, trainer.cfg, n_shards=1)
+    carry = runner._abstract_carry()
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    mask = jax.ShapeDtypeStruct((info.n_agents,), jnp.float32)
+    round_jx = runner.round_jaxpr()
+    programs.append(Program(
+        name=f"{pre}/round", roles=("round", "donated"),
+        jaxpr=round_jx, fn=runner.round,
+        args=(carry, key, scalar, mask), donate_argnums=(0,),
+        meta={"expect_aliased": len(jax.tree.leaves(carry))}))
+    train_body, gs_bodies = runner._classify_bodies(round_jx, "round")
+    programs.append(Program(
+        name=f"{pre}/round/train_body", roles=("train_body",),
+        jaxpr=train_body))
+    programs.extend(Program(
+        name=f"{pre}/round/gs_body[{i}]", roles=("gs_body",),
+        jaxpr=body) for i, body in enumerate(gs_bodies))
+    return programs
+
+
+# ---------------------------------------------------------------------------
 # kernel dispatch dtype contracts
 # ---------------------------------------------------------------------------
 def kernel_dtype_programs(dtype=jnp.bfloat16) -> List[Program]:
@@ -308,10 +385,12 @@ def scenario_programs(env: str, drivers: Iterable[str] = DRIVERS,
 def all_programs(scenarios: Optional[Iterable[str]] = None,
                  drivers: Iterable[str] = DRIVERS,
                  *, kernels: bool = True,
-                 recovery: bool = True) -> List[Program]:
+                 recovery: bool = True,
+                 streams: bool = True) -> List[Program]:
     """Every registered program: both drivers × every scenario, the
-    kernel dtype contracts, the post-loss resume-path programs, and
-    anything added via :func:`register_programs`."""
+    kernel dtype contracts, the post-loss resume-path programs, the
+    wide-stream collect re-audit, and anything added via
+    :func:`register_programs`."""
     from repro.envs import registry
 
     if scenarios is None:
@@ -324,6 +403,8 @@ def all_programs(scenarios: Optional[Iterable[str]] = None,
         out.extend(kernel_dtype_programs())
     if recovery and scenarios and "sharded" in drivers:
         out.extend(recovery_programs(scenarios[0]))
+    if streams and scenarios:
+        out.extend(stream_programs(scenarios[0]))
     for builder in _EXTRA_BUILDERS:
         out.extend(builder())
     return out

@@ -87,6 +87,15 @@ class DIALSConfig:
     eval_episodes: int = 8
     n_envs: int = 16
     rollout_steps: int = 16
+    # The large-batch S knobs (repro.core.env_pool): stream counts for
+    # the GS collect pool and the per-agent IALS pool. None defers to
+    # the legacy collect_envs / n_envs values; setting them makes S a
+    # pure width axis — per-stream fold-in keys mean a wider run
+    # contains every narrower run's streams bitwise, and the donated
+    # ring buffers + chunked AIP training keep peak memory ~one dataset
+    # no matter how large S grows.
+    collect_streams: Optional[int] = None
+    ials_streams: Optional[int] = None
     max_aip_staleness: int = 2     # rounds; straggler/async-lag tolerance
     async_collect: bool = False    # overlap round k+1's GS collect with
     #                                round k's inner steps (one-round
@@ -132,11 +141,24 @@ def apply_kernel_mode(policy_cfg, aip_cfg, ppo_cfg, mode: str):
             dispatch.override_mode(ppo_cfg, mode))
 
 
+def collect_stream_count(cfg: DIALSConfig) -> int:
+    """S for the GS collect pool: ``collect_streams``, defaulting to the
+    legacy ``collect_envs``."""
+    return (cfg.collect_streams if cfg.collect_streams is not None
+            else cfg.collect_envs)
+
+
+def ials_stream_count(cfg: DIALSConfig) -> int:
+    """E for each agent's IALS pool: ``ials_streams``, defaulting to the
+    legacy ``n_envs``."""
+    return cfg.ials_streams if cfg.ials_streams is not None else cfg.n_envs
+
+
 def holdout_sequences(cfg: DIALSConfig) -> int:
     """How many collected env streams per agent are held out for the
     held-out CE metric: ``collect_holdout`` clamped so at least one
     sequence always remains for AIP training."""
-    return max(0, min(cfg.collect_holdout, cfg.collect_envs - 1))
+    return max(0, min(cfg.collect_holdout, collect_stream_count(cfg) - 1))
 
 
 class DIALSTrainer:
@@ -158,10 +180,17 @@ class DIALSTrainer:
 
         self.collect = gs_mod.make_collector(
             env_mod, env_cfg, policy_cfg,
-            n_envs=cfg.collect_envs, steps=cfg.collect_steps)
+            n_envs=collect_stream_count(cfg), steps=cfg.collect_steps)
+        # the donating twin + ring: steady-state collects write into the
+        # retired slot's buffers — the wide dataset never reallocates or
+        # visits the host on the loop path
+        self.collect_into = gs_mod.make_collector_into(
+            env_mod, env_cfg, policy_cfg,
+            n_envs=collect_stream_count(cfg), steps=cfg.collect_steps)
+        self._ring = async_mod.DeviceRing(self.collect, self.collect_into)
         self.ials_init, self.ials_train = ials_mod.make_ials_trainer(
             env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg,
-            n_envs=cfg.n_envs, rollout_steps=cfg.rollout_steps)
+            n_envs=ials_stream_count(cfg), rollout_steps=cfg.rollout_steps)
         _, _, self.gs_eval = runner_mod.make_gs_trainer(
             env_mod, env_cfg, policy_cfg, ppo_cfg,
             runner_mod.RunConfig(n_envs=cfg.n_envs,
@@ -170,11 +199,44 @@ class DIALSTrainer:
             lambda p, d, k: influence.train_aip(p, d, k, aip_cfg)))
         self.eval_aips = jax.jit(jax.vmap(
             lambda p, d: influence.eval_ce(p, d, aip_cfg)))
+        self.aip_round = self._make_aip_round()
         self.manager = (CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
                         if cfg.ckpt_dir else None)
         self._sharded = None       # lazily-built ShardedDIALSRunner
         self._dist_manager = None  # lazily-built DistributedCheckpointManager
         self._resume_extra = {}    # checkpoint extra of the restored step
+
+    # -- the fused AIP round -------------------------------------------------
+    def _make_aip_round(self):
+        """Holdout split + held-out CE + vmapped AIP training + the
+        bounded-staleness gate as ONE jitted program — the loop-path
+        mirror of the sharded runner's shard body. Fusing it matters at
+        large S: ``split_dataset``'s train/eval slices become in-program
+        views of the ring slot instead of materialized device copies,
+        and ``train_aip``'s minibatching / ``eval_ce``'s ``eval_chunk``
+        already bound the per-step working set, so peak memory stays
+        ~one dataset regardless of the stream count."""
+        cfg, aip_cfg = self.cfg, self.aip_cfg
+        n_eval = self.n_eval_seqs
+        train_aips = jax.vmap(
+            lambda p, d, k: influence.train_aip(p, d, k, aip_cfg))
+        eval_aips = jax.vmap(lambda p, d: influence.eval_ce(p, d, aip_cfg))
+
+        def aip_round(aips, data, aip_keys, fresh_mask, reports, rnd,
+                      data_round):
+            train_data, eval_data = gs_mod.split_dataset(data, n_eval)
+            ce_before = eval_aips(aips, eval_data)
+            forced = jnp.zeros_like(fresh_mask)
+            if not cfg.untrained:
+                new_aips, _ = train_aips(aips, train_data, aip_keys)
+                eff, reports, forced = fault.freshness_gate(
+                    fresh_mask, reports, data_round, rnd,
+                    cfg.max_aip_staleness)
+                aips = fault.masked_tree_update(aips, new_aips, eff)
+            ce_after = eval_aips(aips, eval_data)
+            return aips, reports, ce_before, ce_after, forced
+
+        return jax.jit(aip_round)
 
     # -- state --------------------------------------------------------------
     def init(self, key):
@@ -297,14 +359,17 @@ class DIALSTrainer:
         return self._dist_manager
 
     def _make_collector_executor(self, telemetry=obs.DISABLED):
-        """Loop-path executor: a host worker thread driving the same
-        jitted collector (safe here — this path never donates buffers).
-        Placement is deliberately left untouched: committing the dataset
-        to a spare device would drag every downstream jit (AIP train,
-        inner steps) into recompiles and cross-device transfers. The
-        sharded driver is the one that collects on a spare device — it
-        re-places the dataset onto the mesh explicitly."""
-        return async_mod.AsyncCollector(self.collect, mode="thread",
+        """Loop-path executor: a host worker thread driving the ring's
+        collect — every dataset still lands in a donated device slot
+        (the ring's obtain-before-submit ordering makes the worker-thread
+        calls safe: obtain() harvests the in-flight future before any
+        force-sync submits another). Placement is deliberately left
+        untouched: committing the dataset to a spare device would drag
+        every downstream jit (AIP train, inner steps) into recompiles
+        and cross-device transfers. The sharded driver is the one that
+        collects on a spare device — it re-places the dataset onto the
+        mesh explicitly."""
+        return async_mod.AsyncCollector(self._ring.collect, mode="thread",
                                         telemetry=telemetry)
 
     # -- Algorithm 1 --------------------------------------------------------
@@ -409,33 +474,24 @@ class DIALSTrainer:
                                 rnd)
                         data, data_round = tagged.data, tagged.round
                     else:
-                        data = self.collect(state["ials"]["params"], kc)
+                        data = self._ring.collect(state["ials"]["params"],
+                                                  kc)
                         data_round, forced_sync = rnd, False
                     sp.fence(data)
-                train_data, eval_data = gs_mod.split_dataset(
-                    data, self.n_eval_seqs)
 
-                # (2) parallel AIP training (skipped for untrained-DIALS)
+                # (2) fused AIP round: holdout split + held-out CE + AIP
+                # training + bounded-staleness gate, one jitted program
+                # reading the ring slot in place (training is skipped for
+                # untrained-DIALS — a static branch of the program)
                 with tel.span("aip_train") as sp:
-                    ce_before = self.eval_aips(state["aips"], eval_data)
-                    stale_forced = 0
-                    if not cfg.untrained:
-                        new_aips, _ = self.train_aips(
-                            state["aips"], train_data,
-                            jax.random.split(kt, n))
-                        if straggler_mask is not None:
-                            mask = jnp.asarray(straggler_mask(rnd),
-                                               jnp.float32)
-                            eff, reports, forced = fault.freshness_gate(
-                                mask, reports, data_round, rnd,
-                                cfg.max_aip_staleness)
-                            new_aips = fault.masked_tree_update(
-                                state["aips"], new_aips, eff)
-                            stale_forced = int(forced.sum())
-                        else:
-                            reports = jnp.full_like(reports, data_round)
-                        state["aips"] = new_aips
-                    ce_after = self.eval_aips(state["aips"], eval_data)
+                    mask = (jnp.asarray(straggler_mask(rnd), jnp.float32)
+                            if straggler_mask is not None
+                            else jnp.ones((n,), jnp.float32))
+                    (state["aips"], reports, ce_before, ce_after,
+                     forced) = self.aip_round(
+                        state["aips"], data, jax.random.split(kt, n),
+                        mask, reports, rnd, data_round)
+                    stale_forced = int(forced.sum())
                     sp.fence((ce_before, ce_after))
 
                 # (3) F inner IALS+PPO steps, AIPs frozen
@@ -452,6 +508,13 @@ class DIALSTrainer:
                         episodes=cfg.eval_episodes))
                 phases = tel.phase_seconds()
                 stats = obs_metrics.staleness_stats(reports, rnd)
+                # collect throughput (sync path only — the async span
+                # measures obtain wait, not simulator time)
+                collect_span = phases.get("collect")
+                env_steps = collect_stream_count(cfg) * cfg.collect_steps
+                env_rate = (env_steps / collect_span
+                            if collector is None and collect_span
+                            else None)
                 rec = obs_metrics.round_record(
                     round=rnd,
                     gs_return=ret,
@@ -469,7 +532,8 @@ class DIALSTrainer:
                     reassigned=0,
                     dead_hosts=[],
                     kernels=kernels,
-                    collect_s=phases.get("collect"),
+                    collect_s=collect_span,
+                    env_steps_per_s=env_rate,
                     aip_s=phases.get("aip_train"),
                     inner_s=phases.get("inner_steps"),
                     eval_s=phases.get("gs_eval"),
@@ -669,6 +733,7 @@ class DIALSTrainer:
                     dead_hosts=list(dead_hosts),
                     kernels=kernels,
                     collect_s=collect_s,
+                    env_steps_per_s=None,
                     aip_s=None, inner_s=None, eval_s=None,
                     mirror_s=mirror_s,
                     round_s=time.perf_counter() - t_round,

@@ -97,23 +97,27 @@ class ShardedDIALSRunner:
             # region-decomposed GS on the mesh: block-local dynamics +
             # halo exchange; dataset lands agent-sharded, no re-placement
             self.collect = gs_sharded.make_sharded_collector(
-                env_mod, env_cfg, policy_cfg, n_envs=cfg.collect_envs,
+                env_mod, env_cfg, policy_cfg,
+                n_envs=dials_mod.collect_stream_count(cfg),
                 steps=cfg.collect_steps, mesh=self.mesh)
             self.gs_eval = gs_sharded.make_sharded_evaluator(
                 env_mod, env_cfg, policy_cfg, mesh=self.mesh)
         else:
             self.collect = gs_mod.make_collector(
                 env_mod, env_cfg, policy_cfg,
-                n_envs=cfg.collect_envs, steps=cfg.collect_steps)
+                n_envs=dials_mod.collect_stream_count(cfg),
+                steps=cfg.collect_steps)
             _, _, self.gs_eval = runner_mod.make_gs_trainer(
                 env_mod, env_cfg, policy_cfg, ppo_cfg,
                 runner_mod.RunConfig(n_envs=cfg.n_envs,
                                      rollout_steps=cfg.rollout_steps))
         self.ials_init = ials_mod.make_ials_init(
-            env_mod, env_cfg, policy_cfg, aip_cfg, n_envs=cfg.n_envs)
+            env_mod, env_cfg, policy_cfg, aip_cfg,
+            n_envs=dials_mod.ials_stream_count(cfg))
         self._agent_train = ials_mod.make_agent_trainer(
             env_mod, env_cfg, policy_cfg, aip_cfg, ppo_cfg,
-            n_envs=cfg.n_envs, rollout_steps=cfg.rollout_steps)
+            n_envs=dials_mod.ials_stream_count(cfg),
+            rollout_steps=cfg.rollout_steps)
         self._shard_body = self._make_shard_body()
         self._train_fn = self._make_train()
         self._round_fn = self._make_round()

@@ -1,0 +1,143 @@
+"""Batched env pools — S independent simulator streams as ONE wide program.
+
+"Large Batch Simulation for Deep RL" gets its 10-100x simulator
+throughput by batching many independent rollouts into one vectorized
+program; this module is that layer for the GS and the LS. A *pool* is S
+env streams advanced by a single ``vmap``'d step with in-program
+auto-reset, so the stream count S is a pure width knob: growing it makes
+the device matmuls wider without adding dispatches, host syncs, or
+python-loop iterations.
+
+Per-stream PRNG discipline (the load-bearing invariant)
+-------------------------------------------------------
+Every stream draws from its OWN key chain, derived by folding the
+**absolute stream index** into the pool key (:func:`stream_keys`) — the
+same discipline PR 2 established for agents in ``repro.core.ials``:
+
+* ``base_s   = fold_in(key, s)``            (stream s's chain root)
+* ``init_s   = fold_in(base_s, 0)``         (:func:`init_keys`)
+* ``step_s,t = split(fold_in(base_s, t+1), n)``  (:func:`step_keys`)
+
+Stream s's entire draw sequence depends only on ``(key, s, t)`` — never
+on how many streams share the batch or how long the rollout is. Growing
+S therefore preserves the prefix streams **bitwise** (property-tested:
+S=8 equals the first 8 streams of S=1024), which is what makes S an
+honest scaling axis: a wide population run contains every narrower run
+exactly. It also means per-stream draws (action sampling, env
+transitions, resets) vectorize as a ``vmap`` over stream keys instead of
+one joint draw whose bits depend on the batch shape.
+
+Auto-reset is in-program: a stream whose episode ends is re-initialized
+from its reset key *inside* the step (done flags broadcast by RANK, so
+the same logic covers scalar, vector, and grid-shaped leaves), and the
+policy-side per-stream state (RNN hidden, previous action) is zeroed
+through the same mask. No host involvement at episode boundaries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# per-stream key derivation
+# ---------------------------------------------------------------------------
+def stream_keys(key, n_streams: int):
+    """(S, 2) per-stream base keys: ``fold_in(key, s)`` with the ABSOLUTE
+    stream index s. Prefix-invariant in S by construction:
+    ``stream_keys(k, 8) == stream_keys(k, 1024)[:8]`` bitwise."""
+    return jax.vmap(lambda s: jax.random.fold_in(key, s))(
+        jnp.arange(n_streams))
+
+
+def init_keys(skeys):
+    """(S, 2) stream-init keys: step 0 of each stream's chain."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, 0))(skeys)
+
+
+def step_keys(skeys, t, n: int):
+    """``n`` per-stream key bundles for step ``t``: leaves (S, 2), stacked
+    to (n, S, 2) so call sites unpack ``k_a, k_b, ... = step_keys(...)``.
+    ``t`` may be a traced scan counter; the chain position is ``t + 1``
+    (0 is the init draw), independent of the rollout length."""
+    ks = jax.vmap(lambda k: jax.random.split(jax.random.fold_in(k, t + 1), n))(
+        skeys)
+    return jnp.moveaxis(ks, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# auto-reset selectors
+# ---------------------------------------------------------------------------
+def reset_where(done, fresh, current):
+    """Tree-select ``fresh`` over ``current`` on done streams, with the
+    (S,) done flag broadcast by RANK — the same reset works for leaves
+    shaped (S,), (S, N), (S, N, O), or grid-shaped env state."""
+    def sel(f, c):
+        mask = done.reshape(done.shape + (1,) * (c.ndim - done.ndim))
+        return jnp.where(mask, f, c)
+    return jax.tree.map(sel, fresh, current)
+
+
+def zero_on_done(done, tree):
+    """Zero the policy-side per-stream state (RNN hidden, previous
+    action) of finished streams: ``reset_where`` against zeros."""
+    return reset_where(done, jax.tree.map(jnp.zeros_like, tree), tree)
+
+
+# ---------------------------------------------------------------------------
+# the pools
+# ---------------------------------------------------------------------------
+class GSPool:
+    """S global-simulator streams as one vmapped program.
+
+    ``init`` consumes per-stream base keys; ``step_reset`` advances every
+    stream one step with per-stream env keys and re-initializes finished
+    streams in-program (auto-reset). All methods are traced — the pool is
+    pure plumbing around the env module, not a stateful object.
+    """
+
+    def __init__(self, env_mod, env_cfg, n_streams: int):
+        self.env_cfg, self.n_streams = env_cfg, n_streams
+        self.v_init = jax.vmap(lambda k: env_mod.gs_init(k, env_cfg))
+        self.v_step = jax.vmap(
+            lambda s, a, k: env_mod.gs_step(s, a, k, env_cfg))
+        self.v_obs = jax.vmap(lambda s: env_mod.gs_obs(s, env_cfg))
+
+    def init(self, skeys):
+        """Fresh env states from the streams' init keys (chain step 0)."""
+        return self.v_init(init_keys(skeys))
+
+    def step_reset(self, env, action, k_env, k_reset):
+        """One step + auto-reset. Returns (env', obs', rew, u, done) where
+        ``done`` (S,) flags the streams that ended (and were reset)."""
+        env2, obs2, rew, u, done = self.v_step(env, action, k_env)
+        fresh = self.v_init(k_reset)
+        env3 = reset_where(done, fresh, env2)
+        obs3 = reset_where(done, self.v_obs(env3), obs2)
+        return env3, obs3, rew, u, done
+
+
+class LSPool:
+    """E local-simulator streams of ONE agent as one vmapped program —
+    the IALS rollout's pool. Influence sources ``u`` arrive from the
+    caller (sampled from the agent's AIP), everything else mirrors
+    :class:`GSPool`."""
+
+    def __init__(self, env_mod, env_cfg, n_streams: int):
+        self.env_cfg, self.n_streams = env_cfg, n_streams
+        self.v_init = jax.vmap(lambda k: env_mod.ls_init(k, env_cfg))
+        self.v_step = jax.vmap(
+            lambda l, a, u, k: env_mod.ls_step(l, a, u, k, env_cfg))
+        self.v_obs = jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg))
+
+    def init(self, skeys):
+        return self.v_init(init_keys(skeys))
+
+    def step_reset(self, locals_, action, u, k_env, k_reset):
+        """One influence-augmented step + auto-reset. Returns
+        (locals', obs', rew, done)."""
+        locals2, obs2, rew, done = self.v_step(locals_, action, u, k_env)
+        fresh = self.v_init(k_reset)
+        locals3 = reset_where(done, fresh, locals2)
+        obs3 = reset_where(done, self.v_obs(locals3), obs2)
+        return locals3, obs3, rew, done

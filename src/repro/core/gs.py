@@ -1,9 +1,27 @@
 """Algorithm 2 — collect per-agent influence datasets from the GS.
 
-Rolls the global simulator under the current joint policy and records, for
-every agent i and step t, the ALSH feature (local obs x_i^t ++ one-hot of
-a_i^{t-1}) and the realized influence sources u_i^t. One jitted scan; the
-output is already shaped (N, S, T, ...) for the vmapped AIP trainer.
+Rolls S independent global-simulator streams under the current joint
+policy (one wide pool program — ``repro.core.env_pool``) and records,
+for every agent i, stream s, and step t, the ALSH feature (local obs
+x_i^t ++ one-hot of a_i^{t-1}) and the realized influence sources u_i^t.
+One jitted scan; the output is already shaped (N, S, T, ...) for the
+vmapped AIP trainer.
+
+Two properties make S a real scaling axis here:
+
+* **per-stream keys** — every stream's randomness folds in its absolute
+  stream index (``env_pool.stream_keys``), so growing S preserves the
+  prefix streams bitwise; the joint-action draw is a per-stream
+  categorical (a ``vmap`` over stream keys), not one batch-shaped draw;
+* **fused transpose** — the (N, S, T, ...) output buffers ride the scan
+  carry and each step writes its (S, N, ...) record into the t-th time
+  slice in place (``dynamic_update_index_in_dim`` on a scan carry is an
+  in-place update under XLA). There is no post-scan ``moveaxis`` copy,
+  so peak collect memory is one dataset, not two — the difference
+  between S=512 fitting or not. :func:`make_collector_into` exposes the
+  same program with the output buffers as a DONATED argument, which is
+  what ``repro.distributed.async_collect.DeviceRing`` feeds with retired
+  ring slots so steady-state collect allocates nothing at all.
 
 This is the replicated implementation; its region-decomposed twin
 (``repro.core.gs_sharded.make_sharded_collector``) runs the same
@@ -15,6 +33,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import env_pool
 from repro.marl import policy as policy_mod
 
 
@@ -26,7 +45,10 @@ def split_dataset(data, n_eval: int):
 
     ``n_eval <= 0`` returns the full dataset for both views (legacy
     train-set CE — the only option when only one sequence was collected).
-    Static slicing: safe inside jit/shard_map, no collectives.
+    Static slicing: safe inside jit/shard_map, no collectives — and when
+    it runs inside a consumer program (the fused AIP round, the shard
+    body) the slices are fused views of the ring buffer, never
+    materialized host-side copies.
     """
     if n_eval <= 0:
         return data, data
@@ -40,62 +62,86 @@ def split_dataset(data, n_eval: int):
     return train, held
 
 
-def make_collector(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
-                   *, n_envs: int, steps: int):
+def _make_collect_impl(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                       *, n_envs: int, steps: int):
+    """The shared collect program: ``impl(bufs, params, key) -> bufs'``
+    where ``bufs`` seeds the (N, S, T, ...) output buffers carried
+    through the scan. Every cell is overwritten, so the result is
+    independent of the seed values — the plain collector seeds zeros,
+    the ring path donates a retired slot."""
     info = env_cfg.info()
     n_agents = info.n_agents
-
-    v_gs_init = jax.vmap(lambda k: env_mod.gs_init(k, env_cfg))
-    v_gs_step = jax.vmap(lambda s, a, k: env_mod.gs_step(s, a, k, env_cfg))
-    v_gs_obs = jax.vmap(lambda s: env_mod.gs_obs(s, env_cfg))
+    pool = env_pool.GSPool(env_mod, env_cfg, n_envs)
     apply_agents = jax.vmap(
         lambda p, o, h: policy_mod.policy_apply(p, o, h, policy_cfg),
         in_axes=(0, 1, 1), out_axes=(1, 1, 1))
+    # per-stream joint-action draw: stream s samples all N agents from
+    # its OWN step key, so the sampled bits depend on (key, s, t), never
+    # on the batch width S
+    sample_streams = jax.vmap(policy_mod.sample_action)
 
-    def collect(policy_params, key):
-        """Returns dataset dict with leaves (N, n_envs, steps, ...):
-        feats, u, resets."""
-        ke, kr = jax.random.split(key)
-        env = v_gs_init(jax.random.split(ke, n_envs))
-        obs = v_gs_obs(env)
+    def collect_impl(bufs, policy_params, key):
+        skeys = env_pool.stream_keys(key, n_envs)
+        env = pool.init(skeys)
+        obs = pool.v_obs(env)
         h = policy_mod.initial_hidden(policy_cfg, n_envs, n_agents)
         prev_a = jnp.zeros((n_envs, n_agents), jnp.int32)
         prev_done = jnp.ones((n_envs,), bool)     # episode starts fresh
 
-        def step(carry, k):
-            env, obs, h, prev_a, prev_done = carry
-            k_act, k_env, k_reset = jax.random.split(k, 3)
+        def step(carry, t):
+            env, obs, h, prev_a, prev_done, bufs = carry
+            k_act, k_env, k_reset = env_pool.step_keys(skeys, t, 3)
             feat = jnp.concatenate(
                 [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
             logits, _, h2 = apply_agents(policy_params, obs, h)
-            action, _ = policy_mod.sample_action(k_act, logits)
-            env2, obs2, _rew, u, done = v_gs_step(
-                env, action, jax.random.split(k_env, n_envs))
-            fresh = v_gs_init(jax.random.split(k_reset, n_envs))
-            # broadcast the per-env done flag by RANK, not by a
-            # hard-coded [:, None, None]: obs/hidden leaves are (E, N, O)
-            # here, but the same reset logic must hold for envs whose
-            # per-agent obs is not a flat vector.
-            sel = lambda f, c: jnp.where(
-                done.reshape((-1,) + (1,) * (c.ndim - 1)), f, c)
-            env3 = jax.tree.map(sel, fresh, env2)
-            obs3 = sel(v_gs_obs(env3), obs2)
-            h3 = sel(jnp.zeros_like(h2), h2)
-            prev3 = sel(jnp.zeros_like(action), action)
+            action, _ = sample_streams(k_act, logits)
+            env3, obs3, _rew, u, done = pool.step_reset(
+                env, action, k_env, k_reset)
+            h3, prev3 = env_pool.zero_on_done(done, (h2, action))
             # reset flag marks "new episode starts HERE" (before this feat)
             rec = {"feats": feat, "u": u,
                    "resets": jnp.broadcast_to(prev_done[:, None],
                                               (n_envs, n_agents))
                    .astype(jnp.float32)}
-            return (env3, obs3, h3, prev3, done), rec
+            # fused transpose: (S, N, ...) -> (N, S, ...) written into
+            # the t-th time slice of the carried (N, S, T, ...) buffers
+            def write(buf, x):
+                return jax.lax.dynamic_update_index_in_dim(
+                    buf, jnp.moveaxis(x, 0, 1), t, axis=2)
+            bufs = {k: write(bufs[k], rec[k]) for k in bufs}
+            return (env3, obs3, h3, prev3, done, bufs), None
 
-        _, recs = jax.lax.scan(step, (env, obs, h, prev_a, prev_done),
-                               jax.random.split(kr, steps))
-        # (T, E, N, ...) -> (N, E, T, ...)
-        def rearrange(x):
-            return jnp.moveaxis(x, (0, 1, 2), (2, 1, 0))
-        return {"feats": rearrange(recs["feats"]),
-                "u": rearrange(recs["u"]),
-                "resets": rearrange(recs["resets"])}
+        carry = (env, obs, h, prev_a, prev_done, bufs)
+        carry, _ = jax.lax.scan(step, carry, jnp.arange(steps))
+        return carry[-1]
 
-    return jax.jit(collect)
+    def zero_bufs():
+        return {"feats": jnp.zeros((n_agents, n_envs, steps, info.alsh_dim),
+                                   jnp.float32),
+                "u": jnp.zeros((n_agents, n_envs, steps, info.n_influence),
+                               jnp.float32),
+                "resets": jnp.zeros((n_agents, n_envs, steps), jnp.float32)}
+
+    return collect_impl, zero_bufs
+
+
+def make_collector(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
+                   *, n_envs: int, steps: int):
+    """``collect(policy_params, key) -> dataset`` with leaves
+    (N, n_envs, steps, ...): feats, u, resets."""
+    impl, zero_bufs = _make_collect_impl(
+        env_mod, env_cfg, policy_cfg, n_envs=n_envs, steps=steps)
+    return jax.jit(lambda params, key: impl(zero_bufs(), params, key))
+
+
+def make_collector_into(env_mod, env_cfg,
+                        policy_cfg: policy_mod.PolicyConfig,
+                        *, n_envs: int, steps: int):
+    """``collect_into(bufs, policy_params, key) -> dataset`` — the same
+    program with the output buffers passed in and DONATED: XLA writes
+    the fresh dataset into the caller's buffers (the ring's retired
+    slot), so a steady-state collect performs zero dataset allocation
+    and the wide (N, S, T, ...) arrays never leave the device."""
+    impl, _ = _make_collect_impl(
+        env_mod, env_cfg, policy_cfg, n_envs=n_envs, steps=steps)
+    return jax.jit(impl, donate_argnums=0)

@@ -206,69 +206,80 @@ def make_sharded_collector(env_mod, env_cfg,
     """``shard_map``'d twin of :func:`repro.core.gs.make_collector`:
     ``collect(policy_params (N, ...) agent-sharded, key) -> dataset``
     with leaves (N, n_envs, steps, ...) already agent-sharded on the
-    mesh. Key plumbing mirrors the replicated collector exactly, so the
-    emitted dataset is the replicated one (bitwise, given bitwise policy
-    forwards)."""
+    mesh. Key plumbing mirrors the replicated collector exactly — the
+    same per-stream fold-in chains (``env_pool.stream_keys``), evaluated
+    replicated on every block — so the emitted dataset is the replicated
+    one (bitwise, given bitwise policy forwards), S-prefix invariance
+    included."""
+    from repro.core import env_pool
     (info, n_blocks, bsz, e_block_step, init_block_locals, b_ls_obs,
      apply_agents) = _block_plumbing(env_mod, env_cfg, policy_cfg, mesh)
     n_agents = info.n_agents
     v_gs_exo = jax.vmap(lambda k: env_mod.gs_exo(k, env_cfg))
 
-    def categorical_block(key, logits, blk):
-        """The replicated collector draws one categorical over the full
-        (E, N, A) logits; argmax over A is elementwise in (env, agent),
-        so evaluating the same draw on a zero-padded view and reading
-        off this block's columns reproduces the sampled actions bitwise
-        (garbage columns produce garbage actions that nobody reads)."""
-        full = jnp.zeros((n_envs, n_agents) + logits.shape[2:],
-                         logits.dtype)
-        full = jax.lax.dynamic_update_slice_in_dim(
-            full, logits, blk * bsz, axis=1)
-        return jax.lax.dynamic_slice_in_dim(
-            jax.random.categorical(key, full), blk * bsz, bsz, axis=1)
+    def categorical_block(keys, logits, blk):
+        """The replicated collector draws one categorical PER STREAM over
+        that stream's full (N, A) logits; the gumbel bits depend only on
+        the stream key and the (row, column) position, so evaluating the
+        same per-stream draw on a zero-padded full-agent view and
+        reading off this block's rows reproduces the sampled actions
+        bitwise (garbage rows produce garbage actions that nobody
+        reads)."""
+        def one(key, lg):                                 # lg (B, A)
+            full = jnp.zeros((n_agents,) + lg.shape[1:], lg.dtype)
+            full = jax.lax.dynamic_update_slice_in_dim(
+                full, lg, blk * bsz, axis=0)
+            return jax.lax.dynamic_slice_in_dim(
+                jax.random.categorical(key, full), blk * bsz, bsz, axis=0)
+        return jax.vmap(one)(keys, logits)
 
     def body(params, key):
         blk = jax.lax.axis_index(runtime_lib.SHARD_AXIS)
-        ke, kr = jax.random.split(key)
-        loc, t = init_block_locals(jax.random.split(ke, n_envs), blk)
+        skeys = env_pool.stream_keys(key, n_envs)
+        loc, t = init_block_locals(env_pool.init_keys(skeys), blk)
         obs = b_ls_obs(loc)                                   # (E, B, O)
         h = policy_mod.initial_hidden(policy_cfg, n_envs, bsz)
         prev_a = jnp.zeros((n_envs, bsz), jnp.int32)
         prev_done = jnp.ones((n_envs,), bool)
+        bufs = {"feats": jnp.zeros((bsz, n_envs, steps, info.alsh_dim),
+                                   jnp.float32),
+                "u": jnp.zeros((bsz, n_envs, steps, info.n_influence),
+                               jnp.float32),
+                "resets": jnp.zeros((bsz, n_envs, steps), jnp.float32)}
 
-        def step(carry, k):
-            loc, t, obs, h, prev_a, prev_done = carry
-            k_act, k_env, k_reset = jax.random.split(k, 3)
+        def step(carry, ti):
+            loc, t, obs, h, prev_a, prev_done, bufs = carry
+            k_act, k_env, k_reset = env_pool.step_keys(skeys, ti, 3)
             feat = jnp.concatenate(
                 [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
             logits, _, h2 = apply_agents(params, obs, h)
             action = categorical_block(k_act, logits, blk)
-            exo = v_gs_exo(jax.random.split(k_env, n_envs))
+            exo = v_gs_exo(k_env)
             loc2, obs2, _rew, u, done, t2 = e_block_step(
                 loc, t, action, exo)
-            fresh_loc, fresh_t = init_block_locals(
-                jax.random.split(k_reset, n_envs), blk)
-            sel = lambda f, c: jnp.where(
-                done.reshape((-1,) + (1,) * (c.ndim - 1)), f, c)
-            loc3 = jax.tree.map(sel, fresh_loc, loc2)
+            fresh_loc, fresh_t = init_block_locals(k_reset, blk)
+            loc3 = env_pool.reset_where(done, fresh_loc, loc2)
             t3 = jnp.where(done, fresh_t, t2)
-            obs3 = sel(b_ls_obs(loc3), obs2)
-            h3 = sel(jnp.zeros_like(h2), h2)
-            prev3 = jnp.where(done[:, None], jnp.zeros_like(action),
-                              action)
+            obs3 = env_pool.reset_where(done, b_ls_obs(loc3), obs2)
+            h3, prev3 = env_pool.zero_on_done(done, (h2, action))
             rec = {"feats": feat, "u": u,
                    "resets": jnp.broadcast_to(
                        prev_done[:, None], (n_envs, bsz))
                    .astype(jnp.float32)}
-            return (loc3, t3, obs3, h3, prev3, done), rec
+            # fused transpose, as in the replicated collector: the
+            # (B, E, T, ...) buffers ride the scan carry and each step's
+            # (E, B, ...) record lands in its time slice in place
+            def write(buf, x):
+                return jax.lax.dynamic_update_index_in_dim(
+                    buf, jnp.moveaxis(x, 0, 1), ti, axis=2)
+            bufs = {kk: write(bufs[kk], rec[kk]) for kk in bufs}
+            return (loc3, t3, obs3, h3, prev3, done, bufs), None
 
-        _, recs = jax.lax.scan(
-            step, (loc, t, obs, h, prev_a, prev_done),
-            jax.random.split(kr, steps))
-        # (T, E, B, ...) -> (B, E, T, ...); with out_specs sharding the
-        # leading axis this IS the (N, E, T, ...) dataset layout.
-        return jax.tree.map(
-            lambda x: jnp.moveaxis(x, (0, 1, 2), (2, 1, 0)), recs)
+        carry = (loc, t, obs, h, prev_a, prev_done, bufs)
+        carry, _ = jax.lax.scan(step, carry, jnp.arange(steps))
+        # with out_specs sharding the leading axis the carried (B, E, T,
+        # ...) buffers ARE the (N, E, T, ...) dataset layout.
+        return carry[-1]
 
     from jax.sharding import PartitionSpec as P
     sharded = P(runtime_lib.SHARD_AXIS)

@@ -22,6 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import env_pool
 from repro.core import influence
 from repro.marl import gae as gae_mod
 from repro.marl import policy as policy_mod
@@ -43,40 +44,36 @@ def make_agent_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
     """
     info = env_cfg.info()
 
-    # local sims batched over E envs of one agent
-    e_ls_init = jax.vmap(lambda k: env_mod.ls_init(k, env_cfg))
-    e_ls_step = jax.vmap(
-        lambda l, a, u, k: env_mod.ls_step(l, a, u, k, env_cfg))
-    e_ls_obs = jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg))
+    # local sims batched over E streams of one agent (auto-reset pool)
+    pool = env_pool.LSPool(env_mod, env_cfg, n_envs)
+    # per-stream draws: stream e samples its action and its influence
+    # sources from its OWN step keys, so the bits depend on (key, e, t),
+    # never on how many streams share the batch (S-prefix invariance)
+    sample_act_streams = jax.vmap(policy_mod.sample_action)
+    sample_u_streams = jax.vmap(influence.sample_sources)
 
-    def _rollout(astate, aip_params, k_iter):
-        def step(carry, key):
+    def _rollout(astate, aip_params, k_roll):
+        skeys = env_pool.stream_keys(k_roll, n_envs)
+
+        def step(carry, t):
             locals_, obs, h, aip_h, prev_a, prev_done = carry   # (E, ...)
-            k_act, k_u, k_env, k_reset = jax.random.split(key, 4)
+            k_act, k_u, k_env, k_reset = env_pool.step_keys(skeys, t, 4)
 
             # AIP consumes (x_t, a_{t-1}) and proposes u_t  (Alg. 3 line 8)
             feat = jnp.concatenate(
                 [obs, jax.nn.one_hot(prev_a, info.n_actions)], axis=-1)
             u_logits, aip_h2 = influence.aip_apply(
                 aip_params, feat, aip_h, aip_cfg)
-            u = influence.sample_sources(k_u, u_logits)         # (E, M)
+            u = sample_u_streams(k_u, u_logits)                 # (E, M)
 
             logits, value, h2 = policy_mod.policy_apply(
                 astate["params"], obs, h, policy_cfg)
-            action, logp = policy_mod.sample_action(k_act, logits)
+            action, logp = sample_act_streams(k_act, logits)
 
-            locals2, obs2, rew, done = e_ls_step(
-                locals_, action, u, jax.random.split(k_env, n_envs))
-
-            fresh = e_ls_init(jax.random.split(k_reset, n_envs))
-            sel = lambda f, c: jnp.where(
-                done.reshape(done.shape + (1,) * (c.ndim - 1)), f, c)
-            locals3 = jax.tree.map(sel, fresh, locals2)
-            obs3 = jnp.where(done[:, None], e_ls_obs(locals3), obs2)
-            h3 = jnp.where(done[:, None], jnp.zeros_like(h2), h2)
-            aip_h3 = jnp.where(done[:, None], jnp.zeros_like(aip_h2),
-                               aip_h2)
-            prev3 = jnp.where(done, jnp.zeros_like(action), action)
+            locals3, obs3, rew, done = pool.step_reset(
+                locals_, action, u, k_env, k_reset)
+            h3, aip_h3, prev3 = env_pool.zero_on_done(
+                done, (h2, aip_h2, action))
 
             tr = {"obs": obs, "action": action, "logp": logp, "value": value,
                   "reward": rew, "done": done, "h_pre": h,
@@ -87,14 +84,18 @@ def make_agent_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
                   astate["aip_h"], astate["prev_a"],
                   jnp.zeros((n_envs,), bool))
         carry, traj = jax.lax.scan(
-            step, carry0, jax.random.split(k_iter, rollout_steps))
+            step, carry0, jnp.arange(rollout_steps))
         return carry, traj                     # traj leaves (T, E, ...)
 
     def agent_train(astate, aip_params):
         """Rollout on the IALS + one PPO update. ``aip_params`` — this
         agent's predictor, frozen here (Alg. 1 line 9)."""
         k_iter = jax.random.fold_in(astate["key"], astate["iter"])
-        carry, traj = _rollout(astate, aip_params, k_iter)
+        # separate roots for the rollout's stream chains and the PPO
+        # minibatch shuffle — fold_in(k_iter, e) is the STREAM-e root,
+        # so the PPO key must not be a small fold-in of k_iter itself
+        k_roll, k_ppo = jax.random.split(k_iter)
+        carry, traj = _rollout(astate, aip_params, k_roll)
         locals_, obs, h, aip_h, prev_a, _ = carry
 
         _, last_value, _ = policy_mod.policy_apply(
@@ -117,7 +118,7 @@ def make_agent_trainer(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
         }
         new_params, new_opt, metrics = ppo_mod.ppo_update(
             astate["params"], astate["opt"], batch,
-            jax.random.fold_in(k_iter, 1), policy_cfg, ppo_cfg)
+            k_ppo, policy_cfg, ppo_cfg)
         new_astate = {**astate, "params": new_params, "opt": new_opt,
                       "locals": locals_, "obs": obs, "h": h, "aip_h": aip_h,
                       "prev_a": prev_a, "iter": astate["iter"] + 1}
@@ -132,16 +133,19 @@ def make_ials_init(env_mod, env_cfg, policy_cfg: policy_mod.PolicyConfig,
     whole state shards over the agent axis with one PartitionSpec."""
     info = env_cfg.info()
     n_agents = info.n_agents
-    e_ls_init = jax.vmap(lambda k: env_mod.ls_init(k, env_cfg))
+    pool = env_pool.LSPool(env_mod, env_cfg, n_envs)
 
     def init_fn(key):
         kp, ke, kr = jax.random.split(key, 3)
         params = jax.vmap(lambda k: policy_mod.policy_init(k, policy_cfg))(
             jax.random.split(kp, n_agents))
         opt = jax.vmap(adamw.init)(params)
-        locals_ = jax.vmap(e_ls_init)(
-            jax.random.split(ke, n_agents * n_envs).reshape(
-                n_agents, n_envs, 2))
+        # per-(agent, stream) init chains fold in the ABSOLUTE agent id
+        # then the ABSOLUTE stream id: growing E (or slicing the agent
+        # axis onto shards) preserves every existing local sim bitwise
+        locals_ = jax.vmap(
+            lambda ka: pool.init(env_pool.stream_keys(ka, n_envs)))(
+            env_pool.stream_keys(ke, n_agents))
         v_ls_obs = jax.vmap(jax.vmap(lambda l: env_mod.ls_obs(l, env_cfg)))
         # per-agent keys fold in the ABSOLUTE agent id: the draw stream of
         # agent i is identical no matter how the agent axis is sliced.

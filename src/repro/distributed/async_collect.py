@@ -45,6 +45,15 @@ driver paths:
 
 Per-agent staleness (stragglers inside one dataset) is the trainers'
 job, via :func:`repro.distributed.fault.freshness_gate`.
+
+:class:`DeviceRing` is the memory half of the pipeline: the loop
+driver's datasets live in a ring of device-resident slots whose buffers
+are DONATED back to the next collect once retired, so at large stream
+counts S the wide dataset neither round-trips through the host nor
+reallocates each round. (The sharded sync path needs no ring — its
+round is one fused program and the dataset never materializes outside
+it; the sharded async path double-buffers on the spare device/mesh,
+already device-resident.)
 """
 from __future__ import annotations
 
@@ -80,6 +89,74 @@ class _Ready:
 
     def result(self):
         return self._value
+
+
+class DeviceRing:
+    """Device-resident ring of dataset slots: wide ``(N, S, T, ...)``
+    datasets feed training without ever round-tripping through the host,
+    and — past the first fill — without allocating at all.
+
+    ``collect()`` rotates through K slots, every call running the
+    DONATING collect variant (``gs.make_collector_into``): the first
+    fill of a slot donates freshly allocated zero buffers, every later
+    call donates the retired slot's, so XLA writes the fresh dataset
+    straight into them. The collect overwrites every buffer cell, so
+    the result is bitwise independent of the donated seed — and because
+    first fills and steady state share ONE jitted program, nothing
+    recompiles mid-run (the plain ``collect_fn`` is used only for its
+    output structure, via ``eval_shape``). At large S this halves
+    steady-state collect memory (no second dataset materializes) and
+    removes the allocate/free churn from the hot loop; consumers (the
+    fused AIP round, ``gs.split_dataset`` holdout slices) read the slot
+    arrays in place.
+
+    Safety contract, enforced by the callers' schedule rather than
+    locks: a returned dataset stays valid for ``slots - 1`` subsequent
+    ``collect()`` calls, after which its buffers are donated to the new
+    collect. The loop driver consumes round r's dataset before round
+    r+1 ends, and ``AsyncCollector``'s obtain-before-submit protocol
+    totally orders every ``collect()`` call across the driver and worker
+    threads (harvest blocks on the in-flight future before any
+    force-sync), so the default two slots cover both the serial and the
+    overlapped schedule.
+    """
+
+    def __init__(self, collect_fn, collect_into_fn, *, slots: int = 2):
+        if slots < 2:
+            raise ValueError("DeviceRing needs >= 2 slots (consuming + "
+                             "in flight)")
+        self._collect = collect_fn
+        self._into = collect_into_fn
+        self._slots = [None] * slots
+        self._next = 0
+        self._struct = None           # slot avals, from collect_fn
+
+    @property
+    def n_slots(self) -> int:
+        return len(self._slots)
+
+    def _fresh_slot(self, params, key):
+        import jax.numpy as jnp
+        if self._struct is None:
+            self._struct = jax.eval_shape(self._collect, params, key)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self._struct)
+
+    def collect(self, params, key):
+        """A fresh dataset, written into the retired slot's donated
+        buffers (first fill of a slot donates zeros instead — same
+        program, so nothing recompiles mid-run). Drop-in for the plain
+        ``collect_fn(params, key)``."""
+        i = self._next
+        slot = self._slots[i]
+        if slot is None:
+            slot = self._fresh_slot(params, key)
+        else:
+            self._slots[i] = None     # the donated python arrays are dead
+        out = self._into(slot, params, key)
+        self._slots[i] = out
+        self._next = (i + 1) % len(self._slots)
+        return out
 
 
 class AsyncCollector:

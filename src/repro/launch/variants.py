@@ -212,10 +212,11 @@ def launch_group(argv, *, processes, local_devices=None, env=None,
     return procs
 
 
-def dials_variant_for(shards, async_collect=False, sharded_gs="auto"):
+def dials_variant_for(shards, async_collect=False, sharded_gs="auto",
+                      streams=None):
     """§DIALS runtime knobs: ``DIALSConfig`` overrides — the resolver
     behind every ``--shards N`` / ``--async-collect`` / ``--sharded-gs``
-    CLI flag (benchmarks/run.py, benchmarks/scaling.py,
+    / ``--streams S`` CLI flag (benchmarks/run.py, benchmarks/scaling.py,
     examples/traffic_gs_vs_dials.py). ``shards``: ``None`` = auto path
     selection (sharded iff >1 device visible), ``1`` = force the unfused
     python-loop path (F+3 host syncs per round), ``N`` = force an
@@ -223,9 +224,14 @@ def dials_variant_for(shards, async_collect=False, sharded_gs="auto"):
     GS collect with round k's inner steps (one-round dataset lag,
     bounded by ``max_aip_staleness``). ``sharded_gs`` selects the
     region-decomposed GS collect/eval (repro.core.gs_sharded):
-    auto = whenever the env's partition supports the mesh, on/off force."""
-    return {"shards": shards, "async_collect": async_collect,
-            "sharded_gs": sharded_gs}
+    auto = whenever the env's partition supports the mesh, on/off force.
+    ``streams``: large-batch collect width S — overrides
+    ``DIALSConfig.collect_streams`` (None keeps ``collect_envs``)."""
+    out = {"shards": shards, "async_collect": async_collect,
+           "sharded_gs": sharded_gs}
+    if streams is not None:
+        out["collect_streams"] = int(streams)
+    return out
 
 
 VARIANTS = {

@@ -47,6 +47,12 @@ field                   type     nullable  meaning
                                            span; sharded async: obtain wait;
                                            null when fused into the round
                                            program)
+``env_steps_per_s``     float    yes       GS env-steps simulated per second,
+                                           ``S * collect_steps / collect_s``
+                                           (loop sync path only — null when
+                                           the collect is async-overlapped or
+                                           fused, where the span is not a
+                                           throughput)
 ``aip_s``               float    yes       AIP-refresh seconds (loop path only)
 ``inner_s``             float    yes       F inner IALS+PPO steps seconds
                                            (loop path only)
@@ -95,6 +101,7 @@ ROUND_FIELDS: Tuple[Tuple[str, type, bool], ...] = (
     ("dead_hosts", list, False),
     ("kernels", str, False),
     ("collect_s", float, True),
+    ("env_steps_per_s", float, True),
     ("aip_s", float, True),
     ("inner_s", float, True),
     ("eval_s", float, True),
@@ -223,6 +230,7 @@ SCALING_ROW_SCHEMA = {
         "n_agents": (int, True, False),
         "shards": (int, True, False),
         "processes": (int, True, False),
+        "streams": (int, True, False),
         "fused": (bool, True, False),
         "round_s": (_NUM, True, False),
         "round_s_async": (_NUM, True, False),
@@ -232,6 +240,7 @@ SCALING_ROW_SCHEMA = {
         "total_wall_s": (_NUM, True, False),
         "total_wall_s_async": (_NUM, True, False),
         "collect_s": (_NUM, True, False),
+        "env_steps_per_s": (_NUM, True, False),
         # null where the env topology cannot tile the shard count
         "collect_s_sharded_gs": (_NUM, True, True),
         "gs_speedup": (_NUM, True, True),

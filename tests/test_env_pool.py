@@ -1,0 +1,203 @@
+"""Batched env-pool properties: per-stream key discipline, S-prefix
+invariance, in-program auto-reset, and the device-resident ring.
+
+These pin the invariants the large-batch collect path advertises:
+
+* growing the stream count S preserves the prefix streams BITWISE
+  (stream s's randomness folds in its absolute index, so it depends on
+  (key, s, t) — never on the batch width),
+* auto-reset happens in-program for every registered env at any width
+  (episode-boundary flags, policy-state zeroing, done broadcast by
+  rank),
+* the donating ring buffer is a bitwise drop-in for the plain collector
+  while actually reusing (donating) retired slot buffers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import env_pool, gs as gs_mod, ials as ials_mod, influence
+from repro.distributed import async_collect as async_mod
+from repro.envs import registry
+from repro.marl import policy as policy_mod
+
+
+def _tiny_policy(info, kind="fnn"):
+    return policy_mod.PolicyConfig(obs_dim=info.obs_dim,
+                                   n_actions=info.n_actions, kind=kind,
+                                   hidden=(8,), gru_hidden=8)
+
+
+def _params(pc, n_agents, seed=0):
+    return jax.vmap(lambda k: policy_mod.policy_init(k, pc))(
+        jax.random.split(jax.random.PRNGKey(seed), n_agents))
+
+
+def _collect(env_name, n_envs, steps, *, horizon=8, seed=0):
+    env_mod, env_cfg = registry.make(env_name, horizon=horizon)
+    info = env_cfg.info()
+    pc = _tiny_policy(info)
+    coll = gs_mod.make_collector(env_mod, env_cfg, pc,
+                                 n_envs=n_envs, steps=steps)
+    return coll(_params(pc, info.n_agents, seed),
+                jax.random.PRNGKey(7)), info
+
+
+# ---------------------------------------------------------------------------
+# per-stream key derivation
+# ---------------------------------------------------------------------------
+def test_stream_keys_prefix_invariant():
+    """fold_in by ABSOLUTE stream id: the S=8 chain roots are bitwise
+    the first 8 of the S=1024 roots, and so are the derived init/step
+    keys — the property that makes S an honest width knob."""
+    key = jax.random.PRNGKey(3)
+    small = env_pool.stream_keys(key, 8)
+    large = env_pool.stream_keys(key, 1024)
+    np.testing.assert_array_equal(np.asarray(small),
+                                  np.asarray(large[:8]))
+    np.testing.assert_array_equal(
+        np.asarray(env_pool.init_keys(small)),
+        np.asarray(env_pool.init_keys(large))[:8])
+    for t in (0, 5):
+        ks = env_pool.step_keys(small, t, 3)
+        kl = env_pool.step_keys(large, t, 3)
+        assert ks.shape == (3, 8, 2)
+        np.testing.assert_array_equal(np.asarray(ks),
+                                      np.asarray(kl)[:, :8])
+
+
+def test_step_keys_distinct_across_t_and_purpose():
+    skeys = env_pool.stream_keys(jax.random.PRNGKey(0), 4)
+    k0 = np.asarray(env_pool.step_keys(skeys, 0, 3))
+    k1 = np.asarray(env_pool.step_keys(skeys, 1, 3))
+    flat = np.concatenate([k0.reshape(-1, 2), k1.reshape(-1, 2)])
+    assert len({tuple(r) for r in flat}) == len(flat)   # all distinct
+    # init keys (chain position 0) never collide with step keys (t+1)
+    init = np.asarray(env_pool.init_keys(skeys)).reshape(-1, 2)
+    assert not ({tuple(r) for r in init} & {tuple(r) for r in flat})
+
+
+# ---------------------------------------------------------------------------
+# S-prefix invariance of whole rollouts
+# ---------------------------------------------------------------------------
+def test_collector_stream_prefix_bitwise():
+    """The S=8 GS dataset is bitwise the first 8 streams of the S=1024
+    dataset: a wide population run CONTAINS every narrower run."""
+    small, _ = _collect("traffic", 8, 4)
+    large, _ = _collect("traffic", 1024, 4)
+    for k in small:
+        np.testing.assert_array_equal(
+            np.asarray(small[k]), np.asarray(large[k][:, :8]),
+            err_msg=f"stream prefix diverged in {k!r}")
+
+
+def test_ials_init_stream_prefix_bitwise():
+    """Per-(agent, stream) fold-in chains: growing E preserves every
+    existing local sim bitwise (and so does slicing the agent axis)."""
+    env_mod, env_cfg = registry.make("traffic", horizon=8)
+    info = env_cfg.info()
+    pc = _tiny_policy(info)
+    ac = influence.AIPConfig(in_dim=info.alsh_dim,
+                             n_sources=info.n_influence, kind="fnn",
+                             hidden=(8,), epochs=1, batch=8)
+    key = jax.random.PRNGKey(11)
+    init4 = ials_mod.make_ials_init(env_mod, env_cfg, pc, ac, n_envs=4)
+    init16 = ials_mod.make_ials_init(env_mod, env_cfg, pc, ac, n_envs=16)
+    s4, s16 = init4(key), init16(key)
+    for leaf4, leaf16 in zip(jax.tree.leaves(s4["locals"]),
+                             jax.tree.leaves(s16["locals"])):
+        np.testing.assert_array_equal(np.asarray(leaf4),
+                                      np.asarray(leaf16)[:, :4])
+
+
+# ---------------------------------------------------------------------------
+# auto-reset properties (every registered env × stream widths)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("env_name", registry.names())
+@pytest.mark.parametrize("n_envs", [1, 8, 256])
+def test_auto_reset_properties(env_name, n_envs):
+    """Episode boundaries are in-program and correctly recorded at any
+    width: resets flag step 0 and every post-``horizon`` boundary, the
+    flag is agent-invariant, and the ALSH feature's previous-action
+    one-hot is zeroed exactly where an episode starts."""
+    horizon, steps = 4, 10
+    data, info = _collect(env_name, n_envs, steps, horizon=horizon)
+    resets = np.asarray(data["resets"])           # (N, S, T)
+    assert resets.shape == (info.n_agents, n_envs, steps)
+    # a collect starts a fresh episode in every stream
+    np.testing.assert_array_equal(resets[:, :, 0], 1.0)
+    # the done flag is per-stream: broadcast identically to every agent
+    np.testing.assert_array_equal(
+        resets, np.broadcast_to(resets[:1], resets.shape))
+    # with steps > horizon at least one in-program reset must fire
+    assert resets[:, :, 1:].sum() > 0, "no auto-reset ever fired"
+    # fixed-horizon envs reset on the horizon grid
+    expect = np.zeros(steps)
+    expect[::horizon] = 1.0
+    np.testing.assert_array_equal(
+        resets[0, 0], expect,
+        err_msg="resets off the horizon grid for a fixed-horizon env")
+    # where an episode starts, prev_a was zeroed: the one-hot tail of
+    # the ALSH feature is exactly one_hot(0)
+    feats = np.asarray(data["feats"])             # (N, S, T, alsh)
+    tail = feats[..., info.alsh_dim - info.n_actions:]
+    onehot0 = np.zeros(info.n_actions)
+    onehot0[0] = 1.0
+    at_reset = tail[resets == 1.0]
+    np.testing.assert_array_equal(
+        at_reset, np.broadcast_to(onehot0, at_reset.shape))
+
+
+def test_reset_where_broadcasts_by_rank():
+    done = jnp.asarray([True, False, True])
+    fresh = {"a": jnp.ones((3,)), "b": jnp.ones((3, 2)),
+             "c": jnp.ones((3, 2, 2))}
+    cur = jax.tree.map(lambda x: x * 0.0, fresh)
+    out = env_pool.reset_where(done, fresh, cur)
+    for leaf in jax.tree.leaves(out):
+        arr = np.asarray(leaf)
+        assert (arr[0] == 1.0).all() and (arr[2] == 1.0).all()
+        assert (arr[1] == 0.0).all()
+    zeroed = env_pool.zero_on_done(done, fresh)
+    for leaf in jax.tree.leaves(zeroed):
+        arr = np.asarray(leaf)
+        assert (arr[0] == 0.0).all() and (arr[1] == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# the device-resident ring
+# ---------------------------------------------------------------------------
+def test_device_ring_bitwise_equals_plain_and_donates():
+    """ring.collect is a drop-in for the plain collector: bitwise-equal
+    datasets every round — and past the ring depth, retired slot
+    buffers are actually DONATED (the old dataset's arrays die), which
+    is the no-reallocation claim made observable."""
+    env_mod, env_cfg = registry.make("traffic", horizon=8)
+    info = env_cfg.info()
+    pc = _tiny_policy(info)
+    params = _params(pc, info.n_agents)
+    coll = gs_mod.make_collector(env_mod, env_cfg, pc, n_envs=4, steps=6)
+    into = gs_mod.make_collector_into(env_mod, env_cfg, pc,
+                                      n_envs=4, steps=6)
+    ring = async_mod.DeviceRing(coll, into)
+    keys = [jax.random.PRNGKey(i) for i in range(4)]
+    outs = []
+    for k in keys:
+        out = ring.collect(params, k)
+        plain = coll(params, k)
+        for name in plain:
+            np.testing.assert_array_equal(np.asarray(out[name]),
+                                          np.asarray(plain[name]),
+                                          err_msg=f"{name!r} diverged")
+        outs.append(out)
+    # slots=2: by collect #3 the round-1 dataset's buffers were donated
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(outs[0]))
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(outs[1]))
+    assert not any(leaf.is_deleted() for leaf in jax.tree.leaves(outs[3]))
+
+
+def test_device_ring_rejects_single_slot():
+    with pytest.raises(ValueError):
+        async_mod.DeviceRing(lambda p, k: None, lambda b, p, k: None,
+                             slots=1)

@@ -98,8 +98,9 @@ def _full_record(**over):
                 forced_sync=True, stale_forced=0, staleness_min=0,
                 staleness_mean=0.0, staleness_max=0, n_shards=1,
                 reassigned=0, dead_hosts=[], kernels="policy=oracle",
-                collect_s=0.1, aip_s=None, inner_s=None, eval_s=None,
-                mirror_s=None, round_s=0.5, wall_s=0.5)
+                collect_s=0.1, env_steps_per_s=None, aip_s=None,
+                inner_s=None, eval_s=None, mirror_s=None, round_s=0.5,
+                wall_s=0.5)
     base.update(over)
     return base
 
@@ -169,12 +170,12 @@ def test_kernel_summary_resolves_dispatch():
 
 def test_validate_bench_row_scaling_and_kernels():
     row = {"label": "t-s2", "scenario": "t", "n_agents": 4, "shards": 2,
-           "processes": 1, "fused": True, "round_s": 1.0,
+           "processes": 1, "streams": 4, "fused": True, "round_s": 1.0,
            "round_s_async": 0.8, "overlap_speedup": 1.25,
            "inner_steps_per_s": 100.0, "inner_steps_per_s_async": 125.0,
            "total_wall_s": 5.0, "total_wall_s_async": 4.0,
-           "collect_s": 0.2, "collect_s_sharded_gs": None,
-           "gs_speedup": None}
+           "collect_s": 0.2, "env_steps_per_s": 640.0,
+           "collect_s_sharded_gs": None, "gs_speedup": None}
     assert metrics.validate_bench_row(row, metrics.SCALING_ROW_SCHEMA) == []
     bad = {**row, "shards": "2", "mystery": 1, "round_s": None}
     probs = "\n".join(metrics.validate_bench_row(

@@ -68,16 +68,16 @@ def round_table(events: List[Dict]) -> str:
     if not per_round:
         return "(no round events)"
     cols = ("round", "gs_return", "aip_ce_after", "staleness_max",
-            "n_shards", "collect_s", "aip_s", "inner_s", "eval_s",
-            "mirror_s", "round_s")
-    lines = [" ".join(c.rjust(13 if c == "aip_ce_after" else 9)
-                      for c in cols)]
+            "n_shards", "collect_s", "env_steps_per_s", "aip_s",
+            "inner_s", "eval_s", "mirror_s", "round_s")
+    widths = {"aip_ce_after": 13, "env_steps_per_s": 15}
+    lines = [" ".join(c.rjust(widths.get(c, 9)) for c in cols)]
     for rnd in sorted(per_round):
         e = per_round[rnd]
         cells = []
         for c in cols:
             v = e.get(c)
-            cells.append(_fmt(v, 13 if c == "aip_ce_after" else 9))
+            cells.append(_fmt(v, widths.get(c, 9)))
         lines.append(" ".join(cells))
     return "\n".join(lines)
 
